@@ -1,0 +1,93 @@
+"""LM-substrate micro-benchmarks (CPU, smoke configs): wall-time per train
+step and per decode token for each architecture family, plus kernel
+(interpret) vs pure-jnp oracle parity timings. These complement the
+dry-run roofline (which covers the full-size configs)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import decode_step, init_decode_state, init_params, prefill, train_loss
+
+Row = tuple[str, float, str]
+
+
+def _batch(cfg, b=2, s=64):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "audio_stub":
+        batch["enc_embeds"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jnp.zeros((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                    # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def arch_step_times() -> list[Row]:
+    rows: list[Row] = []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_smoke_config(arch)
+        params = init_params(cfg, jax.random.key(0))
+        batch = _batch(cfg)
+        loss_grad = jax.jit(jax.value_and_grad(lambda p: train_loss(cfg, p, batch)))
+        t_train = _time(lambda: loss_grad(params))
+        state = init_decode_state(cfg, 2, 96)
+        _, state = jax.jit(lambda p, st: prefill(cfg, p, st, batch))(params, state)
+        dec = jax.jit(lambda p, st, t, pos: decode_step(cfg, p, st, t, pos))
+        t_dec = _time(lambda: dec(params, state, batch["tokens"][:, :1], jnp.int32(64)))
+        rows.append((f"lm.train_step_us.{arch}", t_train * 1e6, "smoke cfg, b2 s64"))
+        rows.append((f"lm.decode_token_us.{arch}", t_dec * 1e6, "smoke cfg"))
+    return rows
+
+
+def kernel_parity() -> list[Row]:
+    """Interpret-mode kernels vs jnp oracle outputs (max |err|)."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    err = float(jnp.abs(
+        ops.attention(q, k, v, force="kernel", block_q=128, block_k=128)
+        - ref.attention_ref(q, k, v)).max())
+    rows.append(("kernel.flash_attention.maxerr", err, "interpret vs oracle"))
+    x = jnp.asarray(rng.normal(size=(2, 64, 256)), jnp.float32)
+    g1 = jnp.asarray(rng.normal(size=(2, 64, 256)), jnp.float32)
+    g2 = jnp.asarray(rng.normal(size=(2, 64, 256)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    yk, _ = ops.rglru(x, g1, g2, a, force="kernel")
+    yr, _ = ref.rglru_ref(x, g1, g2, a)
+    rows.append(("kernel.rglru.maxerr", float(jnp.abs(yk - yr).max()), ""))
+    r = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    yk2, _ = ops.rwkv6(r, kk, vv, w, u, force="kernel")
+    yr2, _ = ref.rwkv6_ref(r, kk, vv, w, u)
+    rows.append(("kernel.rwkv6.maxerr", float(jnp.abs(yk2 - yr2).max()), ""))
+    bins = jnp.asarray(rng.integers(0, 32, (512, 8)), jnp.int32)
+    gr = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    hs = jnp.ones((512,), jnp.float32)
+    node = jnp.asarray(rng.integers(0, 8, (512,)), jnp.int32)
+    hk = ops.histogram(bins, gr, hs, node, n_nodes=8, n_bins=32, force="kernel")
+    hr = ref.histogram_ref(bins, gr, hs, node, 8, 32)
+    rows.append(("kernel.histogram.maxerr", float(jnp.abs(hk - hr).max()), ""))
+    return rows

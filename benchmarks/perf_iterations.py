@@ -1,0 +1,158 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → measure.
+
+Each ITERATION is a config/sharding override applied to one of the three
+selected cells; the dry-run re-lowers and the three roofline terms are
+compared against the previous best. Results land in experiments/perf/ and
+the narrative log goes into EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell arctic_train
+
+Iterations are cumulative within a cell (each builds on the accepted
+changes before it), matching the methodology in the assignment.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+# (name, hypothesis, overrides) — overrides compose left-to-right
+CELLS = {
+    # most collective-bound cell (scan-mode preview: collective > memory)
+    "arctic_train": {
+        "arch": "arctic_480b", "shape": "train_4k",
+        "iters": [
+            ("it1_attn_bf16",
+             "bf16 QK/PV operands halve attention read traffic; memory term "
+             "down, collective unchanged",
+             {"extra_cfg": {"attn_matmul": "input"}}),
+            ("it2_cap1.0",
+             "capacity_factor 1.25→1.0 cuts expert dispatch/combine tensor "
+             "sizes 20%: all-to-all + expert-FFN bytes down proportionally",
+             {"extra_cfg": {"attn_matmul": "input", "capacity_factor": 1.0}}),
+            ("it3_no_zero1",
+             "ZeRO-1 opt-state sharding forces per-step reduce-scatter+"
+             "all-gather of f32 grads/params; with Adafactor state already "
+             "tiny, unsharding it trades negligible memory for a large "
+             "collective-term cut",
+             {"zero1": False,
+              "extra_cfg": {"attn_matmul": "input", "capacity_factor": 1.0}}),
+            ("it4_remat_dots",
+             "full remat recomputes every matmul in bwd (~33% extra FLOPs); "
+             "saving dot outputs cuts the compute term, memory_stats shows "
+             "whether the activation residency still fits 16 GiB",
+             {"zero1": False,
+              "extra_cfg": {"attn_matmul": "input", "capacity_factor": 1.0,
+                            "remat": "dots"}}),
+        ],
+    },
+    # worst useful-fraction cell (decode: memory-bound KV sweep)
+    "qwen2_decode": {
+        "arch": "qwen2_1_5b", "shape": "decode_32k",
+        "iters": [
+            ("it1_attn_bf16",
+             "decode reads the whole KV cache per token; bf16 attention "
+             "operands halve that traffic",
+             {"extra_cfg": {"attn_matmul": "input"}}),
+            ("it2_headshard_kv",
+             "kv=2 heads < tp=16 forced sequence-sharded KV; explicit "
+             "head-sharding wastes 14/16 chips — verify seq-shard (baseline) "
+             "beats head-shard, i.e. the flash-decoding layout is right",
+             {"seq_shard_kv": False, "extra_cfg": {"attn_matmul": "input"}}),
+            ("it3_f32_cache",
+             "counter-test: f32 KV cache doubles bytes — confirms the "
+             "memory term tracks cache dtype (sensitivity check)",
+             {"cache_dtype": "float32", "extra_cfg": {"attn_matmul": "input"}}),
+        ],
+    },
+    # representative training cell (big dense; the LM-search task unit)
+    "gemma3_train": {
+        "arch": "gemma3_12b", "shape": "train_4k",
+        "iters": [
+            ("it1_attn_bf16",
+             "5/6 of layers are local-window attention; bf16 operands cut "
+             "the blocked-attention traffic nearly 2x on those layers",
+             {"extra_cfg": {"attn_matmul": "input"}}),
+            ("it2_remat_dots",
+             "compute term carries ~2x fwd from full remat; dots policy "
+             "trades VMEM residency for ~25% compute-term cut",
+             {"extra_cfg": {"attn_matmul": "input", "remat": "dots"}}),
+            ("it3_loss_chunk_2048",
+             "larger CE chunks amortise the hidden-state re-read per chunk "
+             "(fewer w re-reads of the 262k-vocab unembed): memory term down",
+             {"extra_cfg": {"attn_matmul": "input", "remat": "dots",
+                            "loss_chunk": 2048}}),
+        ],
+    },
+}
+
+
+def run(cell_key: str, out_dir: str = "experiments/perf",
+        final_unrolled: bool = True) -> None:
+    """Iterate in SCAN form (10-20s compiles — the fast inner loop; deltas
+    are valid because every change applies uniformly per layer), then
+    re-lower the accepted config UNROLLED for the exact final number."""
+    spec = CELLS[cell_key]
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs(out_dir, exist_ok=True)
+    rep, _ = run_cell(spec["arch"], spec["shape"], mesh=mesh, scan=True,
+                      verbose=False)
+    prev = rep.to_dict()
+    with open(os.path.join(out_dir, f"{cell_key}__baseline_scan.json"), "w") as f:
+        json.dump(prev, f, indent=1)
+    print("baseline(scan):", rep.summary())
+
+    log, best_overrides = [], {}
+    for name, hypothesis, overrides in spec["iters"]:
+        rep, secs = run_cell(spec["arch"], spec["shape"], mesh=mesh, scan=True,
+                             verbose=False, overrides=dict(overrides))
+        d = rep.to_dict()
+        delta = {
+            t: (d[t] - prev[t]) / prev[t] if prev[t] else 0.0
+            for t in ("compute_s", "memory_s", "collective_s")
+        }
+        dom = prev["dominant"] + "_s"
+        verdict = "CONFIRMED" if d[dom] < prev[dom] * 0.999 else "REFUTED"
+        entry = {
+            "iteration": name, "hypothesis": hypothesis,
+            "before": {t: prev[t] for t in ("compute_s", "memory_s", "collective_s")},
+            "after": {t: d[t] for t in ("compute_s", "memory_s", "collective_s")},
+            "delta_pct": {t: f"{delta[t]*100:+.1f}%" for t in delta},
+            "dominant_before": prev["dominant"], "dominant_after": d["dominant"],
+            "verdict": verdict, "compile_seconds": secs,
+            "useful_fraction": d["useful_fraction"],
+        }
+        log.append(entry)
+        print(f"[{name}] {verdict}  " + "  ".join(
+            f"{t.split('_')[0]}={delta[t]*100:+.1f}%" for t in delta))
+        if d[dom] <= prev[dom]:            # accept improvements on dominant
+            prev = d
+            best_overrides = dict(overrides)
+
+    if final_unrolled and best_overrides:
+        rep, secs = run_cell(spec["arch"], spec["shape"], mesh=mesh, scan=False,
+                             verbose=False, overrides=dict(best_overrides))
+        log.append({"iteration": "final_unrolled_validation",
+                    "overrides": {k: str(v) for k, v in best_overrides.items()},
+                    "after": rep.to_dict(), "compile_seconds": secs})
+        print("final(unrolled):", rep.summary())
+    with open(os.path.join(out_dir, f"{cell_key}__log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--cell", required=True, choices=list(CELLS) + ["all"])
+    args = p.parse_args()
+    cells = list(CELLS) if args.cell == "all" else [args.cell]
+    for c in cells:
+        print(f"=== {c} ===")
+        run(c)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

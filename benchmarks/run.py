@@ -1,0 +1,59 @@
+"""Benchmark harness: one function per paper table/figure + LM substrate.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig7] [--out FILE]
+
+Prints ``name,value,derived`` CSV rows; exits non-zero if any benchmark
+raises. Figures map to the paper as documented in paper_figs.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import lm_bench, paper_figs
+
+BENCHES = {
+    "fig3": paper_figs.fig3_profiling_ratio,
+    "fig4": paper_figs.fig4_loc,
+    "fig5": paper_figs.fig5_scheduling,
+    "fig6": paper_figs.fig6_frameworks,
+    "fig7": paper_figs.fig7_auc_parity,
+    "lm_steps": lm_bench.arch_step_times,
+    "kernels": lm_bench.kernel_parity,
+}
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None, help="comma-separated bench names")
+    p.add_argument("--out", default=None, help="also write CSV to this path")
+    args = p.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    lines = ["name,value,derived"]
+    failed = []
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            rows = BENCHES[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            continue
+        for row_name, value, derived in rows:
+            line = f'{row_name},{value:.6g},"{derived}"'
+            print(line, flush=True)
+            lines.append(line)
+        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Assigned architecture configs (public-literature specs) + shape cells.
+
+``get_config(arch_id)`` returns the FULL ArchConfig exactly as assigned;
+``get_smoke_config(arch_id)`` returns a reduced same-family config for CPU
+smoke tests. ``SHAPES`` defines the four input-shape cells; ``live_cells()``
+enumerates the 34 (arch × shape) combinations that run (see DESIGN.md §4
+for the long_500k skip rationale per arch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "qwen2_1_5b",
+    "gemma3_12b",
+    "tinyllama_1_1b",
+    "gemma_2b",
+    "rwkv6_7b",
+    "whisper_medium",
+    "recurrentgemma_9b",
+    "qwen3_moe_235b",
+    "arctic_480b",
+    "internvl2_1b",
+)
+
+# canonical external ids (dashes) → module names
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "qwen2-1.5b": "qwen2_1_5b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "arctic-480b": "arctic_480b",
+    "internvl2-1b": "internvl2_1b",
+    "gemma3-12b": "gemma3_12b",
+    "gemma-2b": "gemma_2b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-medium": "whisper_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# Archs whose attention is fully quadratic-global skip long_500k (DESIGN §4).
+LONG_CONTEXT_ARCHS = {"gemma3_12b", "rwkv6_7b", "recurrentgemma_9b"}
+
+
+def resolve(arch_id: str) -> str:
+    return _ALIASES.get(arch_id, arch_id)
+
+
+def get_config(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{resolve(arch_id)}")
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{resolve(arch_id)}")
+    return mod.smoke_config()
+
+
+def live_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue
+            cells.append((arch, shape))
+    return cells

@@ -1,0 +1,40 @@
+"""The paper's contribution: model search across multiple ML implementations.
+
+Public API re-exports; see DESIGN.md §1 for the paper mapping.
+"""
+from repro.core.data_format import DenseMatrix, available_formats, convert
+from repro.core.grid import GridBuilder, SearchSpace, enumerate_tasks
+from repro.core.interface import (
+    Estimator,
+    TaskResult,
+    TrainTask,
+    TrainedModel,
+    estimator_names,
+    get_estimator,
+    register_estimator,
+)
+from repro.core.profiler import AnalyticProfiler, ProfileReport, SamplingProfiler, attach_costs
+from repro.core.results import METRICS, ModelScore, MultiModel, accuracy, auc, logloss
+from repro.core.scheduler import (
+    Assignment,
+    lpt_lower_bound,
+    rebalance,
+    schedule,
+    schedule_lpt,
+    schedule_random,
+    schedule_round_robin,
+    simulate_dynamic,
+    simulate_makespan,
+)
+from repro.core.searcher import ModelSearcher, SearchStats
+from repro.core.tuner import (
+    GridSearchTuner,
+    RandomSearchTuner,
+    SuccessiveHalvingTuner,
+    SurrogateTuner,
+    Tuner,
+    make_tuner,
+)
+from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,179 @@
+"""Unified data format (paper §III-B).
+
+The paper's common interface takes data in ONE uniform format — a row-oriented
+dense matrix — and each ML implementation converts it into its own preferred
+layout *on the executor, immediately prior to training*. This module implements
+that format plus the per-backend converters.
+
+Converters registered here are looked up by name from ``Estimator.data_format``
+so that adding a new implementation (paper Fig.4's 55-144 LOC claim) never
+touches the Driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DenseMatrix",
+    "register_converter",
+    "convert",
+    "available_formats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseMatrix:
+    """Row-oriented dense matrix with labels — the paper's uniform format.
+
+    ``x``: (rows, features) float32, C-contiguous (row-major).
+    ``y``: (rows,) float32 labels (binary {0,1} for classification) or targets.
+    """
+
+    x: np.ndarray
+    y: np.ndarray
+    feature_names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        x = np.ascontiguousarray(np.asarray(self.x, dtype=np.float32))
+        y = np.asarray(self.y, dtype=np.float32).reshape(-1)
+        if x.ndim != 2:
+            raise ValueError(f"DenseMatrix.x must be 2-D, got shape {x.shape}")
+        if x.shape[0] != y.shape[0]:
+            raise ValueError(
+                f"rows mismatch: x has {x.shape[0]}, y has {y.shape[0]}"
+            )
+        object.__setattr__(self, "x", x)
+        object.__setattr__(self, "y", y)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.x.shape[1])
+
+    def sample(self, rate: float, seed: int = 0) -> "DenseMatrix":
+        """Uniform row subsample — used by the profile-based scheduler (§III-C)."""
+        if not 0.0 < rate <= 1.0:
+            raise ValueError(f"sample rate must be in (0, 1], got {rate}")
+        n = max(1, int(round(self.n_rows * rate)))
+        idx = np.random.default_rng(seed).choice(self.n_rows, size=n, replace=False)
+        return DenseMatrix(self.x[idx], self.y[idx], self.feature_names)
+
+    def split(self, fractions: tuple[float, ...], seed: int = 0):
+        """Split into len(fractions) DenseMatrix parts (e.g. 6:2:2)."""
+        total = sum(fractions)
+        idx = np.random.default_rng(seed).permutation(self.n_rows)
+        out, start = [], 0
+        for i, f in enumerate(fractions):
+            stop = self.n_rows if i == len(fractions) - 1 else start + int(
+                self.n_rows * f / total
+            )
+            part = idx[start:stop]
+            out.append(DenseMatrix(self.x[part], self.y[part], self.feature_names))
+            start = stop
+        return tuple(out)
+
+    def standardize(self, mean=None, std=None):
+        """Standardize features; returns (standardized, mean, std)."""
+        if mean is None:
+            mean = self.x.mean(axis=0)
+        if std is None:
+            std = self.x.std(axis=0)
+        std = np.where(std < 1e-12, 1.0, std)
+        return DenseMatrix((self.x - mean) / std, self.y, self.feature_names), mean, std
+
+
+# --------------------------------------------------------------------------
+# Per-implementation converters (executed executor-side, post scheduling).
+# --------------------------------------------------------------------------
+
+_CONVERTERS: dict[str, Callable[[DenseMatrix], object]] = {}
+
+
+def register_converter(name: str):
+    def deco(fn):
+        if name in _CONVERTERS:
+            raise ValueError(f"converter {name!r} already registered")
+        _CONVERTERS[name] = fn
+        return fn
+
+    return deco
+
+
+def convert(data: DenseMatrix, fmt: str):
+    try:
+        fn = _CONVERTERS[fmt]
+    except KeyError:
+        raise KeyError(
+            f"unknown data format {fmt!r}; known: {sorted(_CONVERTERS)}"
+        ) from None
+    return fn(data)
+
+
+def available_formats() -> tuple[str, ...]:
+    return tuple(sorted(_CONVERTERS))
+
+
+@register_converter("dense_rows")
+def _dense_rows(data: DenseMatrix):
+    """Row batches on device — MLP / LogReg style."""
+    return {"x": jnp.asarray(data.x), "y": jnp.asarray(data.y)}
+
+
+@register_converter("dense_cols")
+def _dense_cols(data: DenseMatrix):
+    """Column-oriented (features-major) — linear-scan style implementations."""
+    return {"xt": jnp.asarray(np.ascontiguousarray(data.x.T)), "y": jnp.asarray(data.y)}
+
+
+@register_converter("quantized_bins")
+def _quantized_bins(data: DenseMatrix, max_bins: int = 256):
+    """Histogram-quantized column bins — GBDT (XGBoost hist / LightGBM) style.
+
+    Per feature: quantile-based bin edges, values mapped to uint8 bin ids.
+    This is the format conversion the paper describes happening just before
+    training on the executor.
+    """
+    x = data.x
+    n_rows, n_feat = x.shape
+    n_bins = min(max_bins, max(2, n_rows))
+    qs = np.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    edges = np.quantile(x, qs, axis=0)  # (n_bins-1, n_feat)
+    binned = np.empty((n_rows, n_feat), dtype=np.int32)
+    for f in range(n_feat):
+        binned[:, f] = np.searchsorted(edges[:, f], x[:, f], side="left")
+    return {
+        "bins": jnp.asarray(binned),
+        "edges": jnp.asarray(edges.T),  # (n_feat, n_bins-1)
+        "y": jnp.asarray(data.y),
+        "n_bins": n_bins,
+    }
+
+
+@register_converter("sparse_csr")
+def _sparse_csr(data: DenseMatrix):
+    """CSR-ish triplet format for sparse-leaning implementations.
+
+    The paper notes the common format *should* adapt to data sparsity but its
+    framework ships dense-only; we provide the converter the paper lists as
+    future work to demonstrate the interface supports it.
+    """
+    x = data.x
+    rows, cols = np.nonzero(x)
+    values = x[rows, cols]
+    indptr = np.zeros(x.shape[0] + 1, dtype=np.int32)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr, dtype=np.int32)
+    return {
+        "values": jnp.asarray(values),
+        "col_idx": jnp.asarray(cols.astype(np.int32)),
+        "indptr": jnp.asarray(indptr),
+        "shape": x.shape,
+        "y": jnp.asarray(data.y),
+    }

@@ -1,0 +1,268 @@
+"""Executors: where training tasks actually run (paper §III-A).
+
+Two pools share one interface:
+
+* :class:`LocalExecutorPool` — N worker threads, each the analogue of one
+  Spark executor in the paper. Supports static plans (LPT/random/round-robin)
+  and dynamic pull-queues, executor-failure recovery, and straggler
+  speculation. This is what the CPU-scale benchmarks run on.
+
+* :class:`MeshSliceExecutorPool` — the TPU-native adaptation: the device mesh
+  is partitioned into submesh slices and each slice is one executor; tasks are
+  compiled train-step callables placed onto their slice. On this CPU container
+  slices are degenerate (1 device) but the partitioning/placement logic is the
+  same code that runs on a pod.
+
+The uniform→native data-format conversion happens HERE (executor-side), via
+``Estimator.run`` — never in the Driver (paper §III-B).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core.data_format import DenseMatrix
+from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
+from repro.core.interface import TaskResult, TrainTask, get_estimator
+from repro.core.scheduler import Assignment
+
+__all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
+
+
+class LocalExecutorPool:
+    """Thread-per-executor pool with fault recovery + straggler speculation."""
+
+    def __init__(
+        self,
+        n_executors: int,
+        wal: SearchWAL | None = None,
+        failure_hook: Callable[[int, TrainTask], None] | None = None,
+        speculation_factor: float | None = None,
+    ):
+        self.n_executors = n_executors
+        self.wal = wal or SearchWAL(None)
+        self.failure_hook = failure_hook  # tests inject ExecutorFailure here
+        self.speculation_factor = speculation_factor
+        self._dead: set[int] = set()
+
+    # ------------------------------------------------------------------
+    def run(self, assignment: Assignment, data: DenseMatrix) -> list[TaskResult]:
+        """Execute a static or dynamic plan; returns one result per task."""
+        shared: _queue.Queue[TrainTask] = _queue.Queue()
+        dynamic = assignment.policy in ("dynamic", "lpt_dynamic")
+        if dynamic:
+            for t in assignment.all_tasks():
+                if not self.wal.is_done(t.task_id):
+                    shared.put(t)
+        results: dict[int, TaskResult] = {}
+        results_lock = threading.Lock()
+        requeue: _queue.Queue[TrainTask] = _queue.Queue()
+        in_flight: dict[int, tuple[int, float]] = {}  # task_id -> (executor, t0)
+        speculated: set[int] = set()
+
+        def execute(eid: int, task: TrainTask) -> None:
+            if self.wal.is_done(task.task_id):
+                return
+            with results_lock:
+                if task.task_id in results:
+                    return
+                in_flight[task.task_id] = (eid, time.perf_counter())
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(eid, task)  # may raise ExecutorFailure
+                est = get_estimator(task.estimator)
+                model, secs = est.run(data, task.params)
+                res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
+            except ExecutorFailure:
+                raise
+            except Exception as e:  # task-level failure: record, don't kill pool
+                res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
+            with results_lock:
+                in_flight.pop(task.task_id, None)
+                if task.task_id not in results:  # first completion wins
+                    results[task.task_id] = res
+                    self.wal.record(
+                        WALRecord(
+                            task_id=task.task_id,
+                            key=task.key(),
+                            seconds=res.train_seconds,
+                            executor_id=eid,
+                        )
+                    )
+
+        def maybe_speculate(eid: int) -> TrainTask | None:
+            """Idle executor: duplicate the longest-overdue in-flight task."""
+            if self.speculation_factor is None:
+                return None
+            now = time.perf_counter()
+            with results_lock:
+                best, overdue = None, 0.0
+                for tid, (owner, t0) in in_flight.items():
+                    if owner == eid or tid in speculated:
+                        continue
+                    task = task_by_id.get(tid)
+                    est_cost = task.cost if task and task.cost else None
+                    if est_cost is None:
+                        continue
+                    over = (now - t0) / est_cost
+                    if over > self.speculation_factor and over > overdue:
+                        best, overdue = task, over
+                if best is not None:
+                    speculated.add(best.task_id)
+                return best
+
+        task_by_id = {t.task_id: t for t in assignment.all_tasks()}
+
+        def worker(eid: int, static_queue: list[TrainTask]) -> None:
+            try:
+                if dynamic:
+                    while True:
+                        try:
+                            task = requeue.get_nowait()
+                        except _queue.Empty:
+                            try:
+                                task = shared.get_nowait()
+                            except _queue.Empty:
+                                task = maybe_speculate(eid)
+                                if task is None:
+                                    return
+                        execute(eid, task)
+                else:
+                    for i, task in enumerate(static_queue):
+                        try:
+                            execute(eid, task)
+                        except ExecutorFailure:
+                            # push the rest of my queue to survivors, then die
+                            for rest in static_queue[i:]:
+                                if not self.wal.is_done(rest.task_id):
+                                    requeue.put(rest)
+                            raise
+                    # static plan finished: drain any re-queued work from dead peers
+                    while True:
+                        try:
+                            task = requeue.get_nowait()
+                        except _queue.Empty:
+                            return
+                        try:
+                            execute(eid, task)
+                        except ExecutorFailure:
+                            requeue.put(task)
+                            raise
+            except ExecutorFailure:
+                self._dead.add(eid)
+
+        threads = []
+        for eid in range(self.n_executors):
+            q = assignment.plan[eid] if eid < len(assignment.plan) and not dynamic else []
+            th = threading.Thread(target=worker, args=(eid, q), daemon=True)
+            threads.append(th)
+            th.start()
+        for th in threads:
+            th.join()
+
+        # If every executor died mid-plan, some tasks may remain: run them
+        # inline (the "driver as executor of last resort" recovery path).
+        leftovers = []
+        while True:
+            try:
+                leftovers.append(requeue.get_nowait())
+            except _queue.Empty:
+                break
+        if dynamic:
+            while True:
+                try:
+                    leftovers.append(shared.get_nowait())
+                except _queue.Empty:
+                    break
+        for task in leftovers:
+            if not self.wal.is_done(task.task_id) and task.task_id not in results:
+                est = get_estimator(task.estimator)
+                try:
+                    model, secs = est.run(data, task.params)
+                    results[task.task_id] = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
+                    self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
+                except Exception as e:
+                    results[task.task_id] = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
+        return list(results.values())
+
+    @property
+    def dead_executors(self) -> set[int]:
+        return set(self._dead)
+
+
+# --------------------------------------------------------------------------
+# Mesh-slice executors (TPU-native adaptation).
+# --------------------------------------------------------------------------
+
+def make_slices(mesh: jax.sharding.Mesh, n_slices: int, axis: str = "data"):
+    """Partition ``mesh`` into ``n_slices`` submeshes along ``axis``.
+
+    Each slice keeps every other axis intact, so a task placed on a slice can
+    still use tensor/expert parallelism internally. Returns a list of Mesh.
+    """
+    axis_idx = mesh.axis_names.index(axis)
+    size = mesh.devices.shape[axis_idx]
+    if size % n_slices != 0:
+        raise ValueError(f"axis {axis!r} of size {size} not divisible into {n_slices} slices")
+    per = size // n_slices
+    slices = []
+    for s in range(n_slices):
+        sl = [slice(None)] * mesh.devices.ndim
+        sl[axis_idx] = slice(s * per, (s + 1) * per)
+        devs = mesh.devices[tuple(sl)]
+        slices.append(jax.sharding.Mesh(devs, mesh.axis_names))
+    return slices
+
+
+class MeshSliceExecutorPool:
+    """Executors = submesh slices of one device mesh.
+
+    ``task_runner(task, slice_mesh, data) -> TaskResult-payload`` is supplied
+    by the LM substrate (launch/search.py); this pool owns only placement,
+    ordering, failure re-queue and WAL bookkeeping — the same scheduling
+    semantics as LocalExecutorPool, with slices instead of threads.
+    """
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        n_slices: int,
+        task_runner: Callable[[TrainTask, jax.sharding.Mesh, object], tuple[object, float]],
+        wal: SearchWAL | None = None,
+        slice_axis: str = "data",
+    ):
+        self.slices = make_slices(mesh, n_slices, axis=slice_axis)
+        self.task_runner = task_runner
+        self.wal = wal or SearchWAL(None)
+
+    def run(self, assignment: Assignment, data) -> list[TaskResult]:
+        results: list[TaskResult] = []
+        dynamic = assignment.policy in ("dynamic", "lpt_dynamic")
+        queues: list[list[TrainTask]]
+        if dynamic:
+            # single-host simulation: serialize longest-first over slices
+            all_tasks = [t for t in assignment.all_tasks() if not self.wal.is_done(t.task_id)]
+            queues = [[] for _ in self.slices]
+            loads = [0.0] * len(self.slices)
+            for t in all_tasks:
+                i = loads.index(min(loads))
+                queues[i].append(t)
+                loads[i] += t.cost or 1.0
+        else:
+            queues = [list(q) for q in assignment.plan]
+        for eid, (q, sl) in enumerate(zip(queues, self.slices)):
+            for task in q:
+                if self.wal.is_done(task.task_id):
+                    continue
+                try:
+                    model, secs = self.task_runner(task, sl, data)
+                    res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
+                    self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=eid))
+                except Exception as e:
+                    res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
+                results.append(res)
+        return results

@@ -1,0 +1,79 @@
+"""Fault tolerance for model search: WAL checkpoint/restart, failure handling.
+
+Large-scale runs (1000+ nodes) lose executors; a multi-hour search must not
+restart from scratch. Mechanisms:
+
+* :class:`SearchWAL` — append-only JSONL write-ahead log of task completions
+  (task_id, score, seconds). On restart, completed work is skipped and only
+  remaining tasks are re-scheduled (scheduler.rebalance).
+* :class:`ExecutorFailure` — raised by an executor; the pool catches it, marks
+  the executor dead, and re-queues its unfinished tasks on the survivors.
+* Straggler speculation — in dynamic mode, when an executor has been running a
+  task for > ``speculation_factor`` × its estimated cost and another executor
+  is idle, a duplicate copy is launched; first completion wins (the paper's
+  §III-C tail-task concern, mechanised).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Iterable
+
+from repro.core.interface import TrainTask
+
+__all__ = ["SearchWAL", "ExecutorFailure", "WALRecord"]
+
+
+class ExecutorFailure(RuntimeError):
+    """An executor died (injected in tests; surfaced by runtime errors)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WALRecord:
+    task_id: int
+    key: str
+    seconds: float
+    executor_id: int
+    score: float | None = None
+
+
+class SearchWAL:
+    """Append-only completion log; safe under concurrent executor threads."""
+
+    def __init__(self, path: str | None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._done: dict[int, WALRecord] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    rec = WALRecord(**json.loads(line))
+                    self._done[rec.task_id] = rec
+
+    # -- write side -------------------------------------------------------
+    def record(self, rec: WALRecord) -> None:
+        with self._lock:
+            self._done[rec.task_id] = rec
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(dataclasses.asdict(rec)) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+
+    # -- read side ----------------------------------------------------------
+    def is_done(self, task_id: int) -> bool:
+        with self._lock:
+            return task_id in self._done
+
+    def completed(self) -> dict[int, WALRecord]:
+        with self._lock:
+            return dict(self._done)
+
+    def remaining(self, tasks: Iterable[TrainTask]) -> list[TrainTask]:
+        with self._lock:
+            return [t for t in tasks if t.task_id not in self._done]

@@ -1,0 +1,141 @@
+"""Common interfaces that hide ML-implementation differences (paper §III-B).
+
+The Driver only ever talks to ``Estimator`` — implementers plug a new ML
+implementation in by subclassing it (or calling :func:`register_estimator` on a
+factory) and declaring which uniform-format conversion it wants. The Driver is
+never modified (the paper's key extensibility claim).
+
+``Estimator.train`` receives data ALREADY converted to the implementation's
+declared ``data_format`` — conversion runs executor-side (see executor.py),
+matching the paper's design where the format gap is resolved on the Executors.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.core.data_format import DenseMatrix, convert
+
+__all__ = [
+    "Estimator",
+    "TrainedModel",
+    "TrainTask",
+    "TaskResult",
+    "register_estimator",
+    "get_estimator",
+    "estimator_names",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainTask:
+    """One unit of schedulable work: (implementation, hyperparameters).
+
+    ``cost`` is filled in by the profiler (seconds, estimated); ``task_id`` is
+    stable across restarts so the fault-tolerance WAL can identify work.
+    """
+
+    task_id: int
+    estimator: str
+    params: Mapping[str, Any]
+    cost: float | None = None
+
+    def with_cost(self, cost: float) -> "TrainTask":
+        return dataclasses.replace(self, cost=float(cost))
+
+    def key(self) -> str:
+        items = ",".join(f"{k}={self.params[k]!r}" for k in sorted(self.params))
+        return f"{self.estimator}({items})"
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task: TrainTask
+    model: "TrainedModel | None"
+    train_seconds: float
+    executor_id: int
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class TrainedModel(abc.ABC):
+    """Prediction side of the common interface."""
+
+    @abc.abstractmethod
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        """Return P(y=1) scores, shape (rows,)."""
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.float32)
+
+
+class Estimator(abc.ABC):
+    """Training side of the common interface.
+
+    Subclasses declare:
+      * ``name`` — registry key, referenced from search spaces,
+      * ``data_format`` — which uniform-format converter to apply executor-side,
+      * ``train(converted_data, params)`` — returns a TrainedModel.
+    """
+
+    #: registry key
+    name: str = ""
+    #: converter name from repro.core.data_format
+    data_format: str = "dense_rows"
+
+    @abc.abstractmethod
+    def train(self, data: Any, params: Mapping[str, Any]) -> TrainedModel:
+        ...
+
+    def default_params(self) -> dict[str, Any]:
+        return {}
+
+    # ---- executor-side entry point -------------------------------------
+    def run(self, raw: DenseMatrix, params: Mapping[str, Any]) -> tuple[TrainedModel, float]:
+        """Convert (uniform → native) then train; returns (model, seconds).
+
+        This is the paper's executor pipeline: the format gap is resolved here,
+        immediately prior to training, never in the Driver.
+        """
+        converted = convert(raw, self.data_format)
+        t0 = time.perf_counter()
+        model = self.train(converted, dict(params))
+        return model, time.perf_counter() - t0
+
+
+_REGISTRY: dict[str, Callable[[], Estimator]] = {}
+
+
+def register_estimator(factory: Callable[[], Estimator] | type[Estimator]):
+    """Register an Estimator class/factory under its ``name``.
+
+    Usable as a decorator; this plus the subclass body is the entire "glue
+    code" needed to add a new ML implementation (paper Fig.4).
+    """
+    probe = factory() if isinstance(factory, type) else factory()
+    if not probe.name:
+        raise ValueError(f"{factory} must set a non-empty .name")
+    if probe.name in _REGISTRY:
+        raise ValueError(f"estimator {probe.name!r} already registered")
+    _REGISTRY[probe.name] = factory if not isinstance(factory, type) else factory
+    return factory
+
+
+def get_estimator(name: str) -> Estimator:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown estimator {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def estimator_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,123 @@
+"""Task-cost profiling (paper §III-C).
+
+Two profilers share one output contract (``dict[task_id, seconds]``):
+
+* :class:`SamplingProfiler` — the paper's method, verbatim: train every task on
+  a small uniform sample (1–3 % of rows) and estimate full-data cost as
+  ``measured_seconds / sampling_rate`` (training time assumed ∝ data size).
+
+* :class:`AnalyticProfiler` — the TPU-native extension: cost each task from a
+  closed-form FLOPs/bytes model (or, for LM tasks, from a compiled dry-run's
+  ``cost_analysis``) evaluated against the roofline machine model. Profiling a
+  task costs microseconds instead of a sampled training run, so the paper's
+  "profiling must stay ≪ total runtime" constraint (their Fig. 3: < 8 %)
+  becomes negligible by construction.
+
+Both attach costs via ``TrainTask.with_cost`` so the scheduler is agnostic to
+where estimates came from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+from repro.core.data_format import DenseMatrix
+from repro.core.interface import TrainTask, get_estimator
+
+__all__ = [
+    "ProfileReport",
+    "SamplingProfiler",
+    "AnalyticProfiler",
+    "attach_costs",
+]
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    costs: dict[int, float]          # task_id -> estimated seconds (full data)
+    profiling_seconds: float         # wall time spent profiling
+    sampling_rate: float | None      # None for analytic profiling
+
+    def ratio_of(self, total_seconds: float) -> float:
+        """Profiling overhead as a fraction of a given total (paper Fig. 3)."""
+        denom = total_seconds + self.profiling_seconds
+        return self.profiling_seconds / denom if denom > 0 else 0.0
+
+
+class SamplingProfiler:
+    """Paper §III-C: run each task on a row-sample, divide by the rate."""
+
+    def __init__(self, sampling_rate: float, seed: int = 0, min_rows: int = 16):
+        if not 0.0 < sampling_rate <= 1.0:
+            raise ValueError(f"sampling_rate must be in (0,1], got {sampling_rate}")
+        self.sampling_rate = sampling_rate
+        self.seed = seed
+        self.min_rows = min_rows
+
+    def profile(self, tasks: Sequence[TrainTask], data: DenseMatrix) -> ProfileReport:
+        t0 = time.perf_counter()
+        rate = max(self.sampling_rate, self.min_rows / max(1, data.n_rows))
+        rate = min(rate, 1.0)
+        sample = data.sample(rate, seed=self.seed)
+        costs: dict[int, float] = {}
+        # Group by estimator so the uniform->native conversion is paid once
+        # per implementation, mirroring executor-side conversion.
+        by_est: dict[str, list[TrainTask]] = {}
+        for t in tasks:
+            by_est.setdefault(t.estimator, []).append(t)
+        for est_name, group in by_est.items():
+            est = get_estimator(est_name)
+            from repro.core.data_format import convert
+
+            converted = convert(sample, est.data_format)
+            for t in group:
+                s0 = time.perf_counter()
+                est.train(converted, dict(t.params))
+                costs[t.task_id] = (time.perf_counter() - s0) / rate
+        return ProfileReport(
+            costs=costs,
+            profiling_seconds=time.perf_counter() - t0,
+            sampling_rate=rate,
+        )
+
+
+class AnalyticProfiler:
+    """Roofline cost model profiler (beyond-paper, TPU-native).
+
+    ``cost_fn(task, n_rows, n_features) -> seconds`` defaults to the
+    per-estimator ``estimate_cost`` classmethod if present; LM estimators
+    instead derive seconds from dry-run cost_analysis via roofline terms
+    (see repro.roofline.analysis.step_time_model).
+    """
+
+    def __init__(self, cost_fn: Callable[[TrainTask, int, int], float] | None = None):
+        self._cost_fn = cost_fn
+
+    def profile(self, tasks: Sequence[TrainTask], data: DenseMatrix) -> ProfileReport:
+        t0 = time.perf_counter()
+        costs: dict[int, float] = {}
+        for t in tasks:
+            if self._cost_fn is not None:
+                costs[t.task_id] = float(self._cost_fn(t, data.n_rows, data.n_features))
+            else:
+                est = get_estimator(t.estimator)
+                fn = getattr(est, "estimate_cost", None)
+                if fn is None:
+                    raise ValueError(
+                        f"estimator {t.estimator!r} exposes no estimate_cost and "
+                        "no cost_fn was given"
+                    )
+                costs[t.task_id] = float(fn(dict(t.params), data.n_rows, data.n_features))
+        return ProfileReport(
+            costs=costs,
+            profiling_seconds=time.perf_counter() - t0,
+            sampling_rate=None,
+        )
+
+
+def attach_costs(tasks: Sequence[TrainTask], report: ProfileReport) -> list[TrainTask]:
+    return [
+        t.with_cost(report.costs[t.task_id]) if t.task_id in report.costs else t
+        for t in tasks
+    ]

@@ -1,0 +1,101 @@
+"""Model-search results: the paper's ``MultiModel`` + ``validateAll``.
+
+Holds every trained model keyed by task, evaluates them all under a chosen
+metric on validation data, and selects the best — the final stage of the
+paper's Fig. 1 example (``multiModel.validateAll(validateDF, ...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.data_format import DenseMatrix
+from repro.core.interface import TaskResult, TrainTask
+
+__all__ = ["MultiModel", "ModelScore", "auc", "accuracy", "logloss", "METRICS"]
+
+
+def auc(y_true: np.ndarray, scores: np.ndarray) -> float:
+    """Area under the ROC curve via the Mann-Whitney rank statistic."""
+    y = np.asarray(y_true).astype(bool)
+    s = np.asarray(scores, dtype=np.float64)
+    n_pos = int(y.sum())
+    n_neg = y.size - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    order = np.argsort(s, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, y.size + 1)
+    # average ranks for ties
+    sorted_s = s[order]
+    i = 0
+    while i < y.size:
+        j = i
+        while j + 1 < y.size and sorted_s[j + 1] == sorted_s[i]:
+            j += 1
+        if j > i:
+            ranks[order[i : j + 1]] = 0.5 * (i + 1 + j + 1)
+        i = j + 1
+    r_pos = ranks[y].sum()
+    return float((r_pos - n_pos * (n_pos + 1) / 2.0) / (n_pos * n_neg))
+
+
+def accuracy(y_true: np.ndarray, scores: np.ndarray) -> float:
+    return float(((scores >= 0.5) == (np.asarray(y_true) >= 0.5)).mean())
+
+
+def logloss(y_true: np.ndarray, scores: np.ndarray) -> float:
+    p = np.clip(np.asarray(scores, dtype=np.float64), 1e-7, 1 - 1e-7)
+    y = np.asarray(y_true, dtype=np.float64)
+    return float(-(y * np.log(p) + (1 - y) * np.log(1 - p)).mean())
+
+
+METRICS: dict[str, Callable[[np.ndarray, np.ndarray], float]] = {
+    "auc": auc,
+    "accuracy": accuracy,
+    "neg_logloss": lambda y, s: -logloss(y, s),
+}
+
+
+@dataclasses.dataclass
+class ModelScore:
+    task: TrainTask
+    score: float
+    train_seconds: float
+    executor_id: int
+
+
+class MultiModel:
+    """All models produced by one search, with validation utilities."""
+
+    def __init__(self, results: list[TaskResult]):
+        self.results = [r for r in results if r.ok]
+        self.failures = [r for r in results if not r.ok]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def validate_all(self, data: DenseMatrix, metric: str = "auc") -> list[ModelScore]:
+        fn = METRICS[metric]
+        scores = []
+        for r in self.results:
+            s = fn(data.y, r.model.predict_proba(data.x))
+            scores.append(
+                ModelScore(task=r.task, score=s, train_seconds=r.train_seconds, executor_id=r.executor_id)
+            )
+        scores.sort(key=lambda m: -m.score)
+        return scores
+
+    def best(self, data: DenseMatrix, metric: str = "auc") -> ModelScore:
+        ranked = self.validate_all(data, metric)
+        if not ranked:
+            raise RuntimeError("no successfully trained models to select from")
+        return ranked[0]
+
+    def model_for(self, task_id: int):
+        for r in self.results:
+            if r.task.task_id == task_id:
+                return r.model
+        raise KeyError(task_id)

@@ -1,0 +1,184 @@
+"""Profile-based scheduling (paper §III-C).
+
+Allocating heterogeneous training tasks to executors to minimise makespan is
+an instance of job-shop scheduling (identical-machines ``P||Cmax``), NP-hard;
+the paper solves it with a greedy approximation. We implement:
+
+  * ``lpt``          — the paper's method: Longest-Processing-Time-first greedy
+                        onto the least-loaded executor (4/3 − 1/(3m) approx).
+  * ``random``       — the paper's baseline: random assignment of equal COUNTS.
+  * ``round_robin``  — spark-sklearn's strategy: static contiguous groups.
+  * ``dynamic``      — work-queue / work-stealing (the paper's §III-C dynamic
+                        discussion): executors pull the next task when idle.
+                        We schedule longest-first pulls, which bounds the tail.
+  * ``lpt_dynamic``  — LPT static plan + dynamic re-balancing (beyond-paper):
+                        steal the largest queued task from the most-loaded
+                        executor when idle. Used by the elastic/fault paths.
+
+All methods return a :class:`Assignment`; ``simulate_makespan`` evaluates a
+plan under true (possibly different from estimated) durations, which is how
+the benchmarks reproduce the paper's Fig. 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random as _random
+from typing import Sequence
+
+from repro.core.interface import TrainTask
+
+__all__ = [
+    "Assignment",
+    "schedule",
+    "schedule_lpt",
+    "schedule_random",
+    "schedule_round_robin",
+    "simulate_makespan",
+    "simulate_dynamic",
+    "lpt_lower_bound",
+    "rebalance",
+]
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Per-executor ordered task lists plus the scheduler's own cost estimate."""
+
+    plan: list[list[TrainTask]]
+    estimated_loads: list[float]
+    policy: str
+
+    @property
+    def n_executors(self) -> int:
+        return len(self.plan)
+
+    @property
+    def estimated_makespan(self) -> float:
+        return max(self.estimated_loads) if self.estimated_loads else 0.0
+
+    def all_tasks(self) -> list[TrainTask]:
+        return [t for q in self.plan for t in q]
+
+
+def _costs(tasks: Sequence[TrainTask]) -> list[float]:
+    # Tasks without a profile estimate get the mean of the known ones (or 1.0)
+    # — keeps LPT well-defined when profiling is partial.
+    known = [t.cost for t in tasks if t.cost is not None]
+    default = (sum(known) / len(known)) if known else 1.0
+    return [t.cost if t.cost is not None else default for t in tasks]
+
+
+def schedule_lpt(tasks: Sequence[TrainTask], n_executors: int) -> Assignment:
+    """The paper's greedy: sort by estimated time desc, place on min-load node."""
+    if n_executors <= 0:
+        raise ValueError("n_executors must be positive")
+    costs = _costs(tasks)
+    order = sorted(range(len(tasks)), key=lambda i: -costs[i])
+    plan: list[list[TrainTask]] = [[] for _ in range(n_executors)]
+    heap = [(0.0, e) for e in range(n_executors)]  # (load, executor)
+    heapq.heapify(heap)
+    for i in order:
+        load, e = heapq.heappop(heap)
+        plan[e].append(tasks[i])
+        heapq.heappush(heap, (load + costs[i], e))
+    loads = [sum(_costs(q)) if q else 0.0 for q in plan]
+    return Assignment(plan=plan, estimated_loads=loads, policy="lpt")
+
+
+def schedule_random(tasks: Sequence[TrainTask], n_executors: int, seed: int = 0) -> Assignment:
+    """Paper baseline: equal task COUNTS, random membership (cost-blind)."""
+    if n_executors <= 0:
+        raise ValueError("n_executors must be positive")
+    rng = _random.Random(seed)
+    idx = list(range(len(tasks)))
+    rng.shuffle(idx)
+    plan: list[list[TrainTask]] = [[] for _ in range(n_executors)]
+    for j, i in enumerate(idx):
+        plan[j % n_executors].append(tasks[i])
+    loads = [sum(_costs(q)) if q else 0.0 for q in plan]
+    return Assignment(plan=plan, estimated_loads=loads, policy="random")
+
+
+def schedule_round_robin(tasks: Sequence[TrainTask], n_executors: int) -> Assignment:
+    """spark-sklearn style: contiguous equal-size groups in grid order."""
+    if n_executors <= 0:
+        raise ValueError("n_executors must be positive")
+    plan: list[list[TrainTask]] = [[] for _ in range(n_executors)]
+    per = -(-len(tasks) // n_executors) if tasks else 0  # ceil
+    for j, t in enumerate(tasks):
+        plan[min(j // per, n_executors - 1) if per else 0].append(t)
+    loads = [sum(_costs(q)) if q else 0.0 for q in plan]
+    return Assignment(plan=plan, estimated_loads=loads, policy="round_robin")
+
+
+def schedule(tasks: Sequence[TrainTask], n_executors: int, policy: str = "lpt", seed: int = 0) -> Assignment:
+    if policy == "lpt":
+        return schedule_lpt(tasks, n_executors)
+    if policy == "random":
+        return schedule_random(tasks, n_executors, seed=seed)
+    if policy == "round_robin":
+        return schedule_round_robin(tasks, n_executors)
+    if policy in ("dynamic", "lpt_dynamic"):
+        # Dynamic policies have no static plan; executors pull from a shared
+        # queue ordered longest-first. Represent as a single shared queue.
+        costs = _costs(tasks)
+        order = sorted(range(len(tasks)), key=lambda i: -costs[i])
+        queue = [tasks[i] for i in order]
+        plan = [queue] + [[] for _ in range(n_executors - 1)]
+        return Assignment(plan=plan, estimated_loads=[sum(costs)] + [0.0] * (n_executors - 1), policy=policy)
+    raise ValueError(f"unknown scheduling policy {policy!r}")
+
+
+# --------------------------------------------------------------------------
+# Evaluation helpers (used by tests + the Fig.5 benchmark).
+# --------------------------------------------------------------------------
+
+def lpt_lower_bound(true_costs: Sequence[float], n_executors: int) -> float:
+    """Trivial lower bound on OPT makespan: max(mean load, longest task)."""
+    if not true_costs:
+        return 0.0
+    return max(sum(true_costs) / n_executors, max(true_costs))
+
+
+def simulate_makespan(assignment: Assignment, true_cost: dict[int, float]) -> float:
+    """Makespan of a STATIC plan under true per-task durations."""
+    return max(
+        (sum(true_cost[t.task_id] for t in q) for q in assignment.plan),
+        default=0.0,
+    )
+
+
+def simulate_dynamic(
+    tasks: Sequence[TrainTask],
+    n_executors: int,
+    true_cost: dict[int, float],
+    longest_first: bool = True,
+) -> float:
+    """Makespan of the dynamic (pull-queue) policy under true durations.
+
+    Longest-first pulls implement the classical LPT list-scheduling bound; the
+    paper notes even dynamic scheduling suffers when the LAST pulled task is
+    long, which longest-first ordering provably mitigates.
+    """
+    order = sorted(tasks, key=lambda t: -(true_cost[t.task_id])) if longest_first else list(tasks)
+    heap = [(0.0, e) for e in range(n_executors)]
+    heapq.heapify(heap)
+    for t in order:
+        load, e = heapq.heappop(heap)
+        heapq.heappush(heap, (load + true_cost[t.task_id], e))
+    return max(load for load, _ in heap)
+
+
+def rebalance(
+    remaining: Sequence[TrainTask],
+    n_executors: int,
+    policy: str = "lpt",
+) -> Assignment:
+    """Re-plan after executor loss/gain (elastic scaling / fault recovery).
+
+    The WAL (fault.py) supplies ``remaining``; this is just a re-run of the
+    greedy on the surviving pool — the paper's scheduler is stateless, which
+    is exactly what makes elastic re-planning cheap.
+    """
+    return schedule(remaining, n_executors, policy=policy)

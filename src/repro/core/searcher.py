@@ -1,0 +1,151 @@
+"""The Driver (paper §III-A): ties tuner → profiler → scheduler → executors.
+
+Mirrors the paper's user-facing flow (Fig. 1):
+
+    searcher = (ModelSearcher(n_executors=8)
+                .add_space(gbdt_grid)
+                .add_space(mlp_grid)
+                .set_scheduler("lpt")
+                .set_profiler(SamplingProfiler(0.01)))
+    multi_model = searcher.model_search(train)
+    scores = multi_model.validate_all(validate, metric="auc")
+
+Dynamic tuners run the propose→profile→schedule→execute→observe loop until
+the tuner stops proposing. A WAL path makes the whole search restartable.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+from repro.core.data_format import DenseMatrix
+from repro.core.fault import SearchWAL
+from repro.core.grid import SearchSpace
+from repro.core.executor import LocalExecutorPool
+from repro.core.interface import TaskResult, TrainTask
+from repro.core.profiler import AnalyticProfiler, SamplingProfiler, attach_costs
+from repro.core.results import METRICS, MultiModel
+from repro.core.scheduler import schedule
+from repro.core.tuner import GridSearchTuner, Tuner
+
+__all__ = ["ModelSearcher", "SearchStats"]
+
+
+class SearchStats:
+    """Bookkeeping the benchmarks read (profiling ratio, makespan, etc.)."""
+
+    def __init__(self):
+        self.profiling_seconds = 0.0
+        self.execution_seconds = 0.0
+        self.total_seconds = 0.0
+        self.n_tasks = 0
+        self.n_failures = 0
+        self.policy = ""
+
+    @property
+    def profiling_ratio(self) -> float:  # paper Fig. 3
+        return self.profiling_seconds / self.total_seconds if self.total_seconds else 0.0
+
+
+class ModelSearcher:
+    def __init__(self, n_executors: int = 1, seed: int = 0):
+        self._spaces: list[SearchSpace] = []
+        self._n_executors = n_executors
+        self._policy = "lpt"
+        self._profiler = None  # default chosen in model_search
+        self._tuner: Tuner | None = None
+        self._wal_path: str | None = None
+        self._metric = "auc"
+        self._seed = seed
+        self._pool_kwargs: dict = {}
+        self.stats = SearchStats()
+
+    # -- builder API (paper Fig. 1) --------------------------------------
+    def add_space(self, space: SearchSpace) -> "ModelSearcher":
+        self._spaces.append(space)
+        return self
+
+    def set_scheduler(self, policy: str) -> "ModelSearcher":
+        self._policy = policy
+        return self
+
+    def set_profiler(self, profiler) -> "ModelSearcher":
+        self._profiler = profiler
+        return self
+
+    def set_tuner(self, tuner: Tuner) -> "ModelSearcher":
+        self._tuner = tuner
+        return self
+
+    def set_metric(self, metric: str) -> "ModelSearcher":
+        if metric not in METRICS:
+            raise ValueError(f"unknown metric {metric!r}; known: {sorted(METRICS)}")
+        self._metric = metric
+        return self
+
+    def set_wal(self, path: str | None) -> "ModelSearcher":
+        self._wal_path = path
+        return self
+
+    def set_pool_options(self, **kw) -> "ModelSearcher":
+        """Fault-injection / speculation knobs forwarded to the executor pool."""
+        self._pool_kwargs.update(kw)
+        return self
+
+    # -- the search -------------------------------------------------------
+    def model_search(
+        self,
+        train: DenseMatrix,
+        validate: DenseMatrix | None = None,
+    ) -> MultiModel:
+        """Run the full search; ``validate`` is required for dynamic tuners."""
+        t_start = time.perf_counter()
+        tuner = self._tuner or GridSearchTuner(self._spaces)
+        profiler = self._profiler
+        if profiler is None:
+            profiler = SamplingProfiler(sampling_rate=0.03, seed=self._seed)
+        wal = SearchWAL(self._wal_path)
+        pool = LocalExecutorPool(self._n_executors, wal=wal, **self._pool_kwargs)
+        all_results: list[TaskResult] = []
+
+        while True:
+            batch = tuner.propose()
+            if not batch:
+                break
+            batch = wal.remaining(batch)
+            if not batch:
+                if not tuner.is_dynamic:
+                    break
+                continue
+            # 1. profile (paper §III-C) — skipped for cost-blind policies,
+            #    matching the paper's random-scheduling baseline which pays
+            #    no profiling overhead.
+            if self._policy in ("random", "round_robin"):
+                costed = list(batch)
+            else:
+                report = profiler.profile(batch, train)
+                self.stats.profiling_seconds += report.profiling_seconds
+                costed = attach_costs(batch, report)
+            # 2. schedule (greedy job-shop / baselines)
+            assignment = schedule(costed, self._n_executors, policy=self._policy, seed=self._seed)
+            # 3. execute on the pool (format conversion happens executor-side)
+            t0 = time.perf_counter()
+            results = pool.run(assignment, train)
+            self.stats.execution_seconds += time.perf_counter() - t0
+            all_results.extend(results)
+            # 4. feed scores back to dynamic tuners
+            if tuner.is_dynamic:
+                if validate is None:
+                    raise ValueError("dynamic tuners need validation data")
+                fn = METRICS[self._metric]
+                feedback = []
+                for r in results:
+                    if r.ok:
+                        feedback.append((r.task, fn(validate.y, r.model.predict_proba(validate.x))))
+                tuner.observe(feedback)
+
+        self.stats.total_seconds = time.perf_counter() - t_start
+        self.stats.n_tasks = len(all_results)
+        self.stats.n_failures = sum(1 for r in all_results if not r.ok)
+        self.stats.policy = self._policy
+        return MultiModel(all_results)

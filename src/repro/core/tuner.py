@@ -1,0 +1,201 @@
+"""Hyperparameter Tuner module (paper §III-A, §IV-B).
+
+Static tuners (grid, random) generate the full set of model configurations up
+front — the mode the paper evaluates. Dynamic tuners (the paper's §IV-B
+extension point: Bayesian optimization et al.) iteratively receive evaluation
+results and propose new configurations; we ship ASHA successive halving and a
+lightweight surrogate-based proposer as the pluggable examples.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+import random as _random
+from typing import Any, Mapping, Sequence
+
+from repro.core.grid import SearchSpace, enumerate_tasks
+from repro.core.interface import TrainTask
+
+__all__ = [
+    "Tuner",
+    "GridSearchTuner",
+    "RandomSearchTuner",
+    "SuccessiveHalvingTuner",
+    "SurrogateTuner",
+    "make_tuner",
+]
+
+
+class Tuner(abc.ABC):
+    """Produces batches of TrainTasks; may consume results between batches."""
+
+    @abc.abstractmethod
+    def propose(self) -> list[TrainTask]:
+        """Next batch of configurations to evaluate ([] = done)."""
+
+    def observe(self, results: Sequence[tuple[TrainTask, float]]) -> None:
+        """Feed back (task, validation score) pairs. Static tuners ignore this."""
+
+    @property
+    def is_dynamic(self) -> bool:
+        return False
+
+
+class GridSearchTuner(Tuner):
+    """The paper's default: every grid point, one shot."""
+
+    def __init__(self, spaces: Sequence[SearchSpace]):
+        self._tasks = enumerate_tasks(spaces)
+        self._done = False
+
+    def propose(self) -> list[TrainTask]:
+        if self._done:
+            return []
+        self._done = True
+        return list(self._tasks)
+
+
+class RandomSearchTuner(Tuner):
+    """Bergstra & Bengio random search over the union of the grids."""
+
+    def __init__(self, spaces: Sequence[SearchSpace], n_samples: int, seed: int = 0):
+        all_tasks = enumerate_tasks(spaces)
+        rng = _random.Random(seed)
+        n = min(n_samples, len(all_tasks))
+        self._tasks = rng.sample(all_tasks, n)
+        self._done = False
+
+    def propose(self) -> list[TrainTask]:
+        if self._done:
+            return []
+        self._done = True
+        return list(self._tasks)
+
+
+class SuccessiveHalvingTuner(Tuner):
+    """ASHA-style successive halving (dynamic tuner example).
+
+    Rung 0 evaluates every config with ``base_budget`` (injected as the
+    ``budget_param``); each subsequent rung keeps the top 1/eta fraction and
+    multiplies the budget by eta. This exercises the paper's dynamic-tuner
+    plug-point: propose → observe → propose.
+    """
+
+    def __init__(
+        self,
+        spaces: Sequence[SearchSpace],
+        budget_param: str,
+        base_budget: int,
+        max_budget: int,
+        eta: int = 3,
+    ):
+        self._all = enumerate_tasks(spaces)
+        self._budget_param = budget_param
+        self._eta = eta
+        self._budgets: list[int] = []
+        b = base_budget
+        while b < max_budget:
+            self._budgets.append(b)
+            b *= eta
+        self._budgets.append(max_budget)
+        self._rung = 0
+        self._survivors = list(self._all)
+        self._pending: dict[int, TrainTask] = {}
+        self._scores: dict[int, float] = {}
+        self._next_id = len(self._all)
+
+    @property
+    def is_dynamic(self) -> bool:
+        return True
+
+    def propose(self) -> list[TrainTask]:
+        if self._rung >= len(self._budgets) or not self._survivors:
+            return []
+        budget = self._budgets[self._rung]
+        batch = []
+        for t in self._survivors:
+            params = dict(t.params)
+            params[self._budget_param] = budget
+            nt = TrainTask(task_id=self._next_id, estimator=t.estimator, params=params)
+            self._next_id += 1
+            self._pending[nt.task_id] = t  # map back to the underlying config
+            batch.append(nt)
+        return batch
+
+    def observe(self, results: Sequence[tuple[TrainTask, float]]) -> None:
+        scored: list[tuple[float, TrainTask]] = []
+        for task, score in results:
+            base = self._pending.pop(task.task_id, None)
+            if base is not None:
+                scored.append((score, base))
+        scored.sort(key=lambda s: -s[0])
+        keep = max(1, math.ceil(len(scored) / self._eta))
+        self._survivors = [t for _, t in scored[:keep]]
+        self._rung += 1
+        if self._rung >= len(self._budgets):
+            self._survivors = []
+
+
+class SurrogateTuner(Tuner):
+    """Cheap Bayesian-flavoured proposer (dynamic tuner example #2).
+
+    Maintains per-(estimator, param, value) mean scores and proposes the
+    unevaluated grid points with the highest optimistic estimate
+    (mean + exploration bonus) — a discrete UCB over the grid. Stands in for
+    the paper's "Bayesian optimization" plug-in without an external GP dep.
+    """
+
+    def __init__(self, spaces: Sequence[SearchSpace], batch_size: int = 16, rounds: int = 8, c: float = 0.3, seed: int = 0):
+        self._all = enumerate_tasks(spaces)
+        self._remaining = {t.task_id: t for t in self._all}
+        self._batch = batch_size
+        self._rounds = rounds
+        self._c = c
+        self._rng = _random.Random(seed)
+        self._stats: dict[tuple[str, str, Any], list[float]] = {}
+        self._round = 0
+
+    @property
+    def is_dynamic(self) -> bool:
+        return True
+
+    def _score(self, task: TrainTask) -> float:
+        vals, n = 0.0, 0
+        for k, v in task.params.items():
+            s = self._stats.get((task.estimator, k, v))
+            if s:
+                vals += sum(s) / len(s)
+                n += 1
+        if n == 0:
+            return float("inf")  # unexplored region → explore first
+        return vals / n + self._c / math.sqrt(n)
+
+    def propose(self) -> list[TrainTask]:
+        if self._round >= self._rounds or not self._remaining:
+            return []
+        self._round += 1
+        cands = list(self._remaining.values())
+        self._rng.shuffle(cands)  # tie-break randomly
+        cands.sort(key=self._score, reverse=True)
+        batch = cands[: self._batch]
+        for t in batch:
+            del self._remaining[t.task_id]
+        return batch
+
+    def observe(self, results: Sequence[tuple[TrainTask, float]]) -> None:
+        for task, score in results:
+            for k, v in task.params.items():
+                self._stats.setdefault((task.estimator, k, v), []).append(score)
+
+
+def make_tuner(kind: str, spaces: Sequence[SearchSpace], **kw) -> Tuner:
+    if kind == "grid":
+        return GridSearchTuner(spaces)
+    if kind == "random":
+        return RandomSearchTuner(spaces, **kw)
+    if kind == "asha":
+        return SuccessiveHalvingTuner(spaces, **kw)
+    if kind == "surrogate":
+        return SurrogateTuner(spaces, **kw)
+    raise ValueError(f"unknown tuner kind {kind!r}")

@@ -1,0 +1,94 @@
+"""Sharded, restartable data pipeline for LM training.
+
+``ShardedStream`` wraps a deterministic step-indexed source (TokenStream —
+batch(step) is a pure function of (seed, step), the restart contract) and
+places each batch on the mesh with the dp-sharded layout. A one-deep
+prefetch thread overlaps host batch synthesis with the device step.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import TokenStream
+from repro.distributed import sharding as shd
+
+__all__ = ["ShardedStream", "place_batch", "make_lm_stream"]
+
+
+def place_batch(mesh: Mesh, batch: dict[str, np.ndarray]) -> dict[str, jax.Array]:
+    """Device-put a host batch with leading-dim dp sharding."""
+    axis_map = shd.infer_axis_map(mesh)
+    dp = axis_map["dp"]
+    out = {}
+    for k, v in batch.items():
+        spec = P(*((dp,) + (None,) * (v.ndim - 1)))
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+class ShardedStream:
+    """Prefetching wrapper: get(step) returns the mesh-placed batch."""
+
+    def __init__(self, source: Callable[[int], dict[str, np.ndarray]], mesh: Mesh,
+                 prefetch: int = 1):
+        self.source = source
+        self.mesh = mesh
+        self._q: queue.Queue[tuple[int, Any]] = queue.Queue(maxsize=max(1, prefetch))
+        self._next_step: int | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    def _worker(self, start: int, q: queue.Queue, stop: threading.Event) -> None:
+        # q/stop are bound per-worker so a superseded worker can never feed
+        # the replacement's queue
+        step = start
+        while not stop.is_set():
+            batch = place_batch(self.mesh, self.source(step))
+            q.put((step, batch))
+            step += 1
+
+    def get(self, step: int) -> dict[str, jax.Array]:
+        # sequential access hits the prefetch queue; random access restarts it
+        if self._thread is None or self._next_step != step:
+            self.close()
+            self._stop = threading.Event()
+            self._q = queue.Queue(maxsize=1)
+            self._thread = threading.Thread(
+                target=self._worker, args=(step, self._q, self._stop), daemon=True
+            )
+            self._thread.start()
+        got_step, batch = self._q.get()
+        assert got_step == step
+        self._next_step = step + 1
+        return batch
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            try:
+                self._q.get_nowait()     # unblock a worker stuck on put()
+            except queue.Empty:
+                pass
+            self._thread = None
+
+
+def make_lm_stream(mesh: Mesh, batch: int, seq_len: int, vocab: int,
+                   seed: int = 0, extras: dict[str, tuple] | None = None) -> ShardedStream:
+    """Token stream + optional stub-frontend tensors (shape, dtype) extras."""
+    ts = TokenStream(batch, seq_len, vocab, seed=seed)
+
+    def source(step: int) -> dict[str, np.ndarray]:
+        b = ts.batch_at(step)
+        if extras:
+            rng = np.random.default_rng(hash(("extras", seed, step)) % (2**31))
+            for name, (shape, dtype) in extras.items():
+                b[name] = rng.normal(size=shape).astype(dtype)
+        return b
+
+    return ShardedStream(source, mesh)

@@ -1,0 +1,72 @@
+"""Explicit collectives: int8-compressed gradient all-reduce + error feedback.
+
+GSPMD inserts gradient all-reduces automatically; to COMPRESS them the
+reduction must be explicit, so the compressed-DP train step (train_step.py,
+``dp_mode="shard_map_int8"``) computes per-shard gradients under shard_map
+and reduces here:
+
+    q = round(g / scale) ∈ int8,  scale = max|g| / 127   (per-leaf)
+    Σ_dp q  via psum on int32 (no overflow until 2^23 shards)
+    g̃ = scale_psum-weighted dequantisation; residual (g − dequant(q)) is
+    carried in optimizer state and added to the NEXT step's gradient
+    (error feedback — keeps convergence unbiased in expectation).
+
+Wire cost: 1 byte/elem + one f32 scale per leaf vs 4 bytes/elem — the
+collective roofline term drops ~4× for DP-dominated steps (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "psum_tree"]
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads: Any, axis_name: str, residuals: Any | None = None):
+    """int8 all-reduce with error feedback. Returns (mean_grads, new_residuals).
+
+    Must run inside shard_map/pmap with ``axis_name`` bound. ``residuals``
+    holds each leaf's previous quantisation error (same shapes as grads).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + (0.0 if r is None else r)
+        q, scale = quantize_int8(gf)
+        # all shards must agree on a scale → use the max scale across shards
+        gscale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(gf / gscale), -127, 127).astype(jnp.int8)
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = summed.astype(jnp.float32) * gscale / n
+        new_r = gf - dequantize_int8(q, gscale)
+        return mean.astype(g.dtype), new_r
+
+    if residuals is None:
+        residuals = jax.tree.map(lambda _: None, grads,
+                                 is_leaf=lambda x: x is None)
+    out = jax.tree.map(leaf, grads, residuals,
+                       is_leaf=lambda x: x is None)
+    is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
+        jax.tree.map(lambda o: o[1], out, is_leaf=is_pair),
+    )
+
+
+def psum_tree(grads: Any, axis_name: str) -> Any:
+    """Uncompressed mean-reduce (the baseline the compressed path replaces)."""
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)

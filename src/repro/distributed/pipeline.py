@@ -1,0 +1,112 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Optional policy (the default production layout is DP×TP(+EP); see DESIGN.md
+§5 — at 256 chips the roofline favours it). Provided, tested, and wired as
+``--pp`` in the launcher for cross-pod scaling studies:
+
+  * layer stacks are split into S contiguous STAGES; stage s's params live
+    on mesh slice s of the "stage" axis;
+  * a batch is split into M microbatches; microbatch m enters stage 0,
+    activations hop stage→stage via ``ppermute`` (ICI-neighbour traffic
+    only — no all-to-all);
+  * the classic GPipe schedule runs S + M − 1 ticks; bubble fraction
+    (S−1)/(S+M−1) — reported by ``bubble_fraction``.
+
+Implementation detail: under shard_map each device holds ONE stage's params
+(leading stage axis sharded); every device runs the same tick loop on its
+resident microbatch and swaps activations with its neighbour each tick.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["pipeline_apply", "bubble_fraction", "stage_params_sharding"]
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)
+
+
+def stage_params_sharding(mesh: Mesh, params_tree: Any, stage_axis: str = "stage") -> Any:
+    """Stage-stacked params (leading dim = n_stages) sharded one-per-stage."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(stage_axis, *([None] * (l.ndim - 1)))),
+        params_tree,
+    )
+
+
+def pipeline_apply(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,
+    x: jax.Array,
+    mesh: Mesh,
+    n_microbatches: int,
+    stage_axis: str = "stage",
+) -> jax.Array:
+    """Run ``stage_fn`` S times over x through the pipeline.
+
+    stage_params: pytree with leading stage dim (= mesh axis size).
+    x: (batch, ...) global batch; batch % n_microbatches == 0.
+    Returns stage_{S-1}(…stage_0(x)) with GPipe scheduling.
+    """
+    n_stages = mesh.shape[stage_axis]
+    b = x.shape[0]
+    if b % n_microbatches:
+        raise ValueError(f"batch {b} not divisible into {n_microbatches} microbatches")
+    mb = b // n_microbatches
+    x_mb = x.reshape((n_microbatches, mb) + x.shape[1:])
+
+    def per_device(params, xs):
+        # params: this stage's params (leading stage dim stripped to size 1)
+        params = jax.tree.map(lambda l: l[0], params)
+        xs = xs[0]                                   # (M, mb, ...) replicated in
+        sid = jax.lax.axis_index(stage_axis)
+        n_ticks = n_stages + n_microbatches - 1
+        buf = jnp.zeros_like(xs[0])                  # resident activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any remain)
+            feed = xs[jnp.minimum(t, n_microbatches - 1)]
+            buf = jnp.where((sid == 0) & (t < n_microbatches), feed, buf)
+            # every stage processes its resident microbatch when active:
+            # stage s is active for microbatch (t − s) ∈ [0, M)
+            active = (t >= sid) & (t - sid < n_microbatches)
+            processed = stage_fn(params, buf)
+            buf = jnp.where(active, processed, buf)
+            # last stage emits its finished microbatch
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
+            emit = (sid == n_stages - 1) & (t >= n_stages - 1)
+            outs = jax.lax.cond(
+                emit, lambda o: o.at[out_idx].set(buf), lambda o: o, outs
+            )
+            # rotate activations forward one stage (ring permute)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(buf, stage_axis, perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # only the LAST stage's outs are real; broadcast via masked all-reduce
+        outs = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)), stage_axis
+        )
+        return outs[None]
+
+    shmap = jax.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P(stage_axis)),
+        out_specs=P(stage_axis),
+        check_vma=False,
+    )
+    # replicate microbatches to every stage (simple GPipe; activations only
+    # materialise per-stage inside); reshape back to (B, ...)
+    xs_rep = jnp.broadcast_to(x_mb[None], (n_stages,) + x_mb.shape)
+    outs = shmap(stage_params, xs_rep)
+    return outs[0].reshape((b,) + x.shape[1:])

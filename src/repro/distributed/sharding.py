@@ -1,0 +1,273 @@
+"""Sharding rules: logical axes → PartitionSpecs for params, states, batches.
+
+Logical axes:
+  * ``dp``  — data parallel (batch); maps to ("pod", "data") on multi-pod.
+  * ``tp``  — tensor/expert parallel; maps to "model".
+  * FSDP    — when enabled, the non-tp dim of large params is sharded over
+              "data" (ZeRO-3-style parameter sharding; params are gathered
+              by GSPMD at use). Always on for the MoE giants.
+
+Rules are matched on the param path (dict keys) — the same naming the model
+init uses — so a new layer type only needs a rule entry here, never a model
+change.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_pspecs", "batch_pspecs", "state_pspecs", "zero1_pspecs",
+    "logical_to_mesh", "named_shardings", "AxisMap", "DEFAULT_AXIS_MAP",
+]
+
+# logical name → mesh axis (or tuple of axes)
+AxisMap = dict[str, Any]
+DEFAULT_AXIS_MAP: AxisMap = {"dp": "data", "tp": "model"}
+
+
+def _rule(path: str, shape: tuple[int, ...], fsdp: bool) -> P:
+    """Logical PartitionSpec for one param leaf (leading stack dim excluded)."""
+    nd = len(shape)
+    f = "dp" if fsdp else None
+    name = path.split("/")[-1]
+
+    # --- RWKV channel-mix first (its wk/wv/wr collide with attention names) ---
+    if "cmix/" in path:
+        if name == "wk":                         # (d, f_ff) up-projection
+            return P(f, "tp")
+        if name == "wv":                         # (f_ff, d) down-projection
+            return P("tp", f)
+        if name == "wr":
+            return P(f, "tp")
+    # --- embeddings / heads ---
+    if name == "embed":
+        return P("tp", f)                       # vocab over tp
+    if name == "lm_head":
+        return P(f, "tp")
+    if name == "pos_embed":
+        return P(None, None)
+    # --- MoE ---
+    if name == "router":
+        return P(f, "tp")
+    if name in ("w_gate", "w_up") and nd == 3:   # (E, d, f_ff)
+        return P("tp", f, None)
+    if name == "w_down" and nd == 3:             # (E, f_ff, d)
+        return P("tp", f, None)
+    # --- dense FFN ---
+    if name in ("w_gate", "w_up"):               # (d, f_ff)
+        return P(f, "tp")
+    if name == "w_down":                         # (f_ff, d)
+        return P("tp", f)
+    # --- attention ---
+    if name in ("wq", "wk", "wv"):
+        return P(f, "tp")
+    if name == "wo":
+        return P("tp", f)
+    if name in ("bq", "bk", "bv"):
+        return P("tp")
+    # --- RG-LRU ---
+    if name in ("w_x", "w_y"):                   # (d, lru)
+        return P(f, "tp")
+    if name == "conv_w":                         # (width, lru)
+        return P(None, "tp")
+    if name in ("ig_w", "rg_w"):                 # (lru, lru)
+        return P(f, "tp")
+    if name == "a_param":
+        return P("tp")
+    if name == "w_out":                          # (lru, d)
+        return P("tp", f)
+    # --- RWKV ---
+    if name in ("wr", "wk", "wg", "wv") and nd == 2:
+        # time-mix in-projections (d, d) / cmix (d, f_ff)-shaped handled above
+        return P(f, "tp")
+    if name == "w_lora_a":
+        return P(f, None)
+    if name == "w_lora_b":
+        return P(None, "tp")
+    if name == "u":
+        return P("tp", None)
+    # --- everything else (norms, mu_*, w0, scalars) replicated ---
+    return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+    )
+
+
+def _is_stacked(path_str: str) -> bool:
+    return "blocks/" in path_str or path_str.startswith("encoder")
+
+
+def param_pspecs(params_shapes: Any, fsdp: bool = False) -> Any:
+    """Tree of LOGICAL PartitionSpecs matching a param (shape) tree.
+
+    Stacked leaves (under blocks/ or encoder/) lead with the repeats dim,
+    which is never sharded; the rule applies to the trailing dims.
+    """
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        if _is_stacked(ps):
+            inner = _rule(ps, shape[1:], fsdp)
+            return P(None, *inner)
+        return _rule(ps, shape, fsdp)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shapes)
+
+
+def batch_pspecs(batch_shapes: Any, dp_size: int = 1) -> Any:
+    """Batch arrays: leading dim over dp (when divisible), rest replicated."""
+    def spec(l):
+        lead = "dp" if l.shape and l.shape[0] % max(1, dp_size) == 0 else None
+        return P(*((lead,) + (None,) * (len(l.shape) - 1)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def state_pspecs(state_shapes: Any, seq_shard: bool | str = False,
+                 dp_size: int = 1, tp_size: int = 1) -> Any:
+    """Decode-state tree: KV caches (…, B, Hkv, S, Dh) batch over dp and
+    heads over tp — or, when ``seq_shard`` (flash-decoding for long contexts
+    with few KV heads) or when Hkv doesn't divide tp, the SEQUENCE dim over
+    tp ("full": over dp AND tp, for batch-1 long-context cells). Recurrent
+    states: batch over dp, channels over tp. Every axis assignment is
+    divisibility-checked — explicit jit in_shardings reject padding."""
+
+    def div(n: int, axis_size: int) -> bool:
+        # axis_size ≤ 1 → sharding is a no-op; leave the dim unannotated
+        return axis_size > 1 and n % axis_size == 0 and n >= axis_size
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = _is_stacked(ps)
+        core = shape[1:] if stacked else shape
+        name = ps.split("/")[-1]
+        if name in ("k", "v") and len(core) == 4:          # (B, Hkv, S, Dh)
+            b, hkv, s, _ = core
+            bax = "dp" if div(b, dp_size) else None
+            if seq_shard == "full" and div(s, dp_size * tp_size):
+                inner = P(None, None, ("dp", "tp"), None)
+            elif (seq_shard or not div(hkv, tp_size)) and div(s, tp_size):
+                inner = P(bax, None, "tp", None)
+            elif div(hkv, tp_size):
+                inner = P(bax, "tp", None, None)
+            else:
+                inner = P(bax, None, None, None)
+        elif name == "conv":                               # (B, w−1, lru)
+            inner = P("dp" if div(core[0], dp_size) else None, None,
+                      "tp" if div(core[2], tp_size) else None)
+        elif name == "h":                                  # (B, lru)
+            inner = P("dp" if div(core[0], dp_size) else None,
+                      "tp" if div(core[1], tp_size) else None)
+        elif name == "wkv":                                # (B, H, dk, dv)
+            inner = P("dp" if div(core[0], dp_size) else None,
+                      "tp" if div(core[1], tp_size) else None, None, None)
+        elif name in ("tshift", "cshift"):                 # (B, 1, d)
+            inner = P("dp" if div(core[0], dp_size) else None, None,
+                      "tp" if div(core[2], tp_size) else None)
+        else:
+            inner = P(*([None] * len(core)))
+        return P(None, *inner) if stacked else inner
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state_shapes)
+
+
+def zero1_pspecs(pspecs: Any, shapes: Any, data_size: int) -> Any:
+    """ZeRO-1: shard optimizer-state leaves over "dp" on the largest dim not
+    already sharded (when divisible) — params themselves stay as-is."""
+
+    def shard_more(spec: P, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if len(spec) < len(shape):
+            spec = P(*(tuple(spec) + (None,) * (len(shape) - len(spec))))
+        used = {a for a in spec if a is not None}
+        if "dp" in used or not shape:
+            return spec
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and shape[i] % data_size == 0 and shape[i] >= data_size:
+                parts = list(spec)
+                parts[i] = "dp"
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(shard_more, pspecs, shapes)
+
+
+def logical_to_mesh(pspec_tree: Any, axis_map: AxisMap) -> Any:
+    """Translate logical axis names to mesh axis names (str or tuple).
+
+    A tuple entry like ("dp", "tp") maps each member and flattens, so one
+    tensor dim can span several mesh axes (e.g. KV sequence over data+model).
+    """
+
+    def one(a):
+        mapped = axis_map.get(a, a)
+        return mapped if isinstance(mapped, tuple) else (mapped,)
+
+    def translate(spec: P) -> P:
+        parts = []
+        for a in spec:
+            if a is None:
+                parts.append(None)
+            elif isinstance(a, tuple):
+                flat = sum((one(x) for x in a), ())
+                parts.append(flat)
+            else:
+                mapped = axis_map.get(a, a)
+                parts.append(mapped)
+        return P(*parts)
+
+    return jax.tree.map(
+        translate, pspec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def named_shardings(mesh: Mesh, pspec_tree: Any, axis_map: AxisMap | None = None) -> Any:
+    if axis_map is None:
+        axis_map = infer_axis_map(mesh)
+    mapped = logical_to_mesh(pspec_tree, axis_map)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), mapped, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def infer_axis_map(mesh: Mesh) -> AxisMap:
+    """("data","model") → dp=data; ("pod","data","model") → dp=(pod,data)."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return {"dp": ("pod", "data"), "tp": "model"}
+    return {"dp": "data", "tp": "model"}
+
+
+def bytes_per_device(shapes: Any, pspecs: Any, mesh: Mesh, axis_map: AxisMap | None = None) -> int:
+    """Estimated per-device bytes for a sharded tree (documentation helper)."""
+    if axis_map is None:
+        axis_map = infer_axis_map(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(leaf, spec: P) -> int:
+        total = int(np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        denom = 1
+        for a in spec:
+            if a is None:
+                continue
+            axes = axis_map.get(a, a)
+            axes = (axes,) if isinstance(axes, str) else axes
+            for ax in axes:
+                denom *= sizes.get(ax, 1)
+        return total // max(1, denom)
+
+    mapped = pspecs
+    return sum(
+        leaf_bytes(l, s)
+        for l, s in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            mapped, is_leaf=lambda x: isinstance(x, P)))
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+
+Layout (the ``<name>.py + ops.py + ref.py`` contract):
+  flash_attention.py  tiled online-softmax attention (causal / sliding window / GQA)
+  rglru.py            RG-LRU diagonal recurrence (RecurrentGemma)
+  rwkv6.py            chunked WKV6 data-dependent-decay recurrence (RWKV-6)
+  histogram.py        GBDT split-finding histograms as MXU matmuls
+  ops.py              jit'd dispatch: TPU → kernel, CPU → jnp; tests force either
+  ref.py              pure-jnp semantic oracles for all of the above
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

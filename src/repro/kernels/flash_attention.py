@@ -1,0 +1,172 @@
+"""Flash attention as a Pallas TPU kernel (pl.pallas_call + BlockSpec).
+
+TPU-native design notes (vs. the CUDA flash-attention algorithm):
+  * The grid's minor-most dimension iterates KV blocks SEQUENTIALLY on a TPU
+    core, so the online-softmax running state (m, l, acc) lives in VMEM
+    scratch that persists across grid steps — no atomics, no shared-memory
+    reductions as on GPU.
+  * Block shapes are MXU-aligned: ``block_q``/``block_k`` multiples of 128 on
+    the lane dim (head_dim is the contraction); softmax stats are kept as
+    (block_q, 128) so the VPU operates on full 8x128 vregs.
+  * GQA is handled in the BlockSpec index_map (kv head = q head // n_rep), so
+    K/V blocks are fetched once per kv head, never materialised repeated.
+  * Fully-masked blocks (beyond the causal frontier or the sliding window)
+    are skipped with ``pl.when`` — the TPU analogue of the GPU early-exit.
+
+Oracle: :func:`repro.kernels.ref.attention_ref`. Tests sweep shapes/dtypes in
+interpret mode; ``ops.attention`` dispatches here on TPU backends only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+_STATS_LANES = 128  # keep m/l stats as (bq, 128) vregs
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    logit_softcap: float | None,
+    block_q: int,
+    block_k: int,
+    q_offset: int,
+    n_kblocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level relevance: absolute query positions are offset by
+    # (Tk - Tq) — the chunked-prefill/decode convention of the oracle.
+    q_lo = iq * block_q + q_offset          # first absolute q position
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_lo <= q_hi
+    if window is not None:
+        relevant &= (q_lo - k_hi) < window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (bq, bk)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, 0]                           # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = (corr * l_ref[:, 0] + jnp.sum(p, axis=1))[:, None] * jnp.ones(
+            (1, _STATS_LANES), jnp.float32
+        )
+        m_ref[...] = m_new[:, None] * jnp.ones((1, _STATS_LANES), jnp.float32)
+        acc_ref[...] = corr[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "logit_softcap",
+        "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    logit_softcap: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled online-softmax attention. Shapes as in ``attention_ref``.
+
+    q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D); Tq % block_q == 0 and
+    Tk % block_k == 0 (callers pad; ops.py handles ragged shapes).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"n_heads {hq} not a multiple of n_kv_heads {hkv}")
+    n_rep = hq // hkv
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    if tq % block_q or tk % block_k:
+        raise ValueError(f"seq lens ({tq},{tk}) must divide blocks ({block_q},{block_k})")
+    sc = scale if scale is not None else d ** -0.5
+    grid = (b, hq, tq // block_q, tk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=sc,
+        causal=causal,
+        window=window,
+        logit_softcap=logit_softcap,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=tk - tq,
+        n_kblocks=tk // block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // n_rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // n_rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _STATS_LANES), jnp.float32),
+            pltpu.VMEM((block_q, _STATS_LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

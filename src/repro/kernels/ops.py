@@ -1,0 +1,117 @@
+"""Dispatching wrappers: Pallas kernel on TPU, pure-jnp path elsewhere.
+
+Models and estimators call ``ops.*`` only — never a kernel or ref directly —
+so the same model code runs on this CPU container (XLA path, used by the
+dry-run: Mosaic kernels are TPU-only custom calls) and on a real pod (Pallas
+path). ``force`` overrides dispatch for tests:
+
+    force="kernel"    Pallas in interpret mode (CPU-executable kernel body)
+    force="ref"       pure-jnp oracle
+    force=None        backend-based: TPU → compiled kernel, else jnp
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+__all__ = ["attention", "decode_attention", "rglru", "rwkv6", "histogram"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, scale=None, logit_softcap=None,
+    block_q=256, block_k=256, force=None, matmul_dtype="float32",
+):
+    """Multi-head attention (GQA via head-count ratio). See ``attention_ref``."""
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    tq, tk = q.shape[2], k.shape[2]
+    if use_kernel and tq % min(block_q, tq) == 0 and tk % min(block_k, tk) == 0:
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            logit_softcap=logit_softcap, block_q=block_q, block_k=block_k,
+            interpret=not _on_tpu(),
+        )
+    if force is None and tq > 2048:
+        # XLA path for long sequences: unrolled q-blocks, statically sliced
+        # KV ranges — flash-equivalent memory, exact cost_analysis FLOPs
+        return _ref.attention_xla_blocked(
+            q, k, v, causal=causal, window=window, scale=scale,
+            logit_softcap=logit_softcap, matmul_dtype=matmul_dtype,
+        )
+    return _ref.attention_ref(
+        q, k, v, causal=causal, window=window, scale=scale,
+        logit_softcap=logit_softcap, matmul_dtype=matmul_dtype,
+    )
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None, scale=None,
+                     logit_softcap=None, force=None, matmul_dtype="float32"):
+    """Single-token decode over a KV cache. XLA path on both backends: the
+    decode hot loop is HBM-bandwidth-bound (one pass over the cache) and XLA
+    already emits a single fused pass; a Pallas kernel would add nothing
+    (measured in EXPERIMENTS.md §Perf notes)."""
+    del force
+    return _ref.decode_attention_ref(
+        q, k_cache, v_cache, cache_len, window=window, scale=scale,
+        logit_softcap=logit_softcap, matmul_dtype=matmul_dtype,
+    )
+
+
+def rglru(x, input_gate, rec_gate, a_param, h0=None, *, c=8.0, force=None):
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    t, d = x.shape[1], x.shape[2]
+    if use_kernel and t % 8 == 0 and d % 128 == 0:
+        from repro.kernels.rglru import rglru_tpu
+
+        return rglru_tpu(
+            x, input_gate, rec_gate, a_param, h0,
+            c=c, block_t=min(256, t), block_d=min(256, d),
+            interpret=not _on_tpu(),
+        )
+    return _ref.rglru_ref(x, input_gate, rec_gate, a_param, h0, c=c)
+
+
+def rwkv6(r, k, v, w, u, s0=None, *, chunk=64, force=None):
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    t = r.shape[2]
+    if use_kernel and t % min(chunk, t) == 0:
+        from repro.kernels.rwkv6 import rwkv6_tpu
+
+        return rwkv6_tpu(r, k, v, w, u, s0, chunk=min(chunk, t), interpret=not _on_tpu())
+    return _ref.rwkv6_ref(r, k, v, w, u, s0)
+
+
+def _histogram_scatter(bins, grad, hess, node, n_nodes, n_bins):
+    """XLA path: scatter-add formulation — O(R·F) adds, fast on CPU."""
+    r, f = bins.shape
+    flat = (node[:, None] * f + jnp.arange(f)[None, :]) * n_bins + bins  # (R, F)
+    def acc(vals):
+        return (
+            jnp.zeros((n_nodes * f * n_bins,), jnp.float32)
+            .at[flat]
+            .add(jnp.broadcast_to(vals[:, None].astype(jnp.float32), (r, f)))
+            .reshape(n_nodes, f, n_bins)
+        )
+    return jnp.stack([acc(grad), acc(hess)], axis=-1)
+
+
+def histogram(bins, grad, hess, node, *, n_nodes, n_bins, force=None):
+    """GBDT grad/hess histograms. See ``histogram_ref``."""
+    if force == "ref":
+        return _ref.histogram_ref(bins, grad, hess, node, n_nodes, n_bins)
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        from repro.kernels.histogram import histogram_tpu
+
+        return histogram_tpu(
+            bins, grad, hess, node, n_nodes=n_nodes, n_bins=n_bins,
+            interpret=not _on_tpu(),
+        )
+    return _histogram_scatter(bins, grad, hess, node, n_nodes, n_bins)

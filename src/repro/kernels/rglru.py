@@ -1,0 +1,120 @@
+"""RG-LRU (Griffin / RecurrentGemma) recurrence as a Pallas TPU kernel.
+
+    a_t = exp(-c · softplus(Λ) · σ(r_t));  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (σ(i_t) ⊙ x_t)
+
+A diagonal linear recurrence: no matmul, pure VPU work, but strictly
+sequential in time. TPU adaptation: the grid is ``(batch, channel_blocks,
+time_blocks)`` with time minor-most, so the hidden state is VMEM scratch
+carried across sequential time blocks — the cross-block dependency costs
+nothing, unlike a GPU grid which would need inter-CTA synchronisation.
+Within a block we unroll time in sub-chunks of 8 rows so VPU ops always see
+full (8, 128) vregs instead of single-row vectors.
+
+All gate math (sigmoid/softplus, the √(1−a²) via expm1 in log space) is
+fused in-kernel, so gates never round-trip through HBM — on the pure-JAX
+path those are separate HLO ops with HBM traffic between them.
+
+Oracle: :func:`repro.kernels.ref.rglru_ref`. Dispatch: ``ops.rglru``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_tpu"]
+
+_SUB = 8  # time sub-chunk = sublane count: full (8, 128) vregs
+
+
+def _rglru_kernel(
+    x_ref, ig_ref, rg_ref, a_ref, h0_ref, y_ref, hout_ref, h_scr,
+    *, c: float, block_t: int, n_tblocks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    xf = x_ref[0].astype(jnp.float32)        # (bt, bd)
+    log_a = (
+        -c
+        * jax.nn.softplus(a_ref[0].astype(jnp.float32))
+        * jax.nn.sigmoid(rg_ref[0].astype(jnp.float32))
+    )                                         # (bt, bd), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    u = beta * jax.nn.sigmoid(ig_ref[0].astype(jnp.float32)) * xf
+
+    def sub_step(s, h):
+        # h: (1, bd). Sequential over _SUB rows of this sub-chunk.
+        a_s = jax.lax.dynamic_slice_in_dim(a, s * _SUB, _SUB, 0)
+        u_s = jax.lax.dynamic_slice_in_dim(u, s * _SUB, _SUB, 0)
+        rows = []
+        for i in range(_SUB):
+            h = a_s[i : i + 1] * h + u_s[i : i + 1]
+            rows.append(h)
+        y_ref[0, pl.ds(s * _SUB, _SUB), :] = jnp.concatenate(rows, axis=0).astype(y_ref.dtype)
+        return h
+
+    h_last = jax.lax.fori_loop(0, block_t // _SUB, sub_step, h_scr[...])
+    h_scr[...] = h_last
+
+    @pl.when(ti == n_tblocks - 1)
+    def _flush():
+        hout_ref[...] = h_last.astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "block_t", "block_d", "interpret")
+)
+def rglru_tpu(
+    x: jax.Array,
+    input_gate: jax.Array,
+    rec_gate: jax.Array,
+    a_param: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    c: float = 8.0,
+    block_t: int = 256,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Shapes as in ``rglru_ref``: x/gates (B, T, D), a_param (D,), h0 (B, D)."""
+    b, t, d = x.shape
+    block_t = max(_SUB, min(block_t, t))
+    block_d = min(block_d, d)
+    if t % block_t or d % block_d or block_t % _SUB:
+        raise ValueError(f"(T={t}, D={d}) must divide blocks ({block_t}, {block_d})")
+    if h0 is None:
+        h0 = jnp.zeros((b, d), x.dtype)
+    a_full = jnp.broadcast_to(a_param.astype(jnp.float32)[None, None, :], x.shape)
+    grid = (b, d // block_d, t // block_t)
+    y, h_last = pl.pallas_call(
+        functools.partial(
+            _rglru_kernel, c=c, block_t=block_t, n_tblocks=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, ti: (bi, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, ti: (bi, di)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(x, input_gate, rec_gate, a_full, h0)
+    return y, h_last

@@ -1,0 +1,141 @@
+"""RWKV-6 (Finch) WKV recurrence as a chunked Pallas TPU kernel.
+
+    y_t = r_tᵀ (S_{t-1} + diag(u ⊙ k_t) v_tᵀ);   S_t = diag(d_t) S_{t-1} + k_t v_tᵀ
+
+with data-dependent per-channel decay d_t = exp(-exp(w_t)). The naive form is
+a length-T sequential scan over rank-1 state updates — hostile to the MXU.
+
+TPU adaptation (chunked linear attention): split time into chunks of C
+positions and rewrite, per chunk with entry state S₀ and log-decay cumsum
+L_t = Σ_{u≤t} log d_u:
+
+    y_t   = (r_t ⊙ e^{L_{t-1}})ᵀ S₀  +  Σ_{s<t} ((r_t ⊙ e^{L_{t-1}−L_s})·k_s) v_s
+            + (r_t·(u ⊙ k_t)) v_t
+    S_C   = e^{L_C} ⊙ S₀ + Σ_s (e^{L_C−L_s} ⊙ k_s) v_sᵀ
+
+so one chunk = a (C×C) strict-lower-triangular score matrix against V, a
+(C×Dk)·(Dk×Dv) inter-chunk matmul, and the state update — all f32 in VMEM.
+The intra-chunk scores form the pairwise decay exponent BEFORE exp (valid
+entries are ≤ 0), avoiding the overflow of the naive (r·e^L)(k·e^{−L})
+factorisation for fast-decay channels. The state S (Dk×Dv) is VMEM scratch
+carried across the sequential minor-most chunk dim of the ``(B, H, T/C)``
+grid.
+
+Oracle: :func:`repro.kernels.ref.rwkv6_ref`. Dispatch: ``ops.rwkv6``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_tpu"]
+
+
+def _rwkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref, s_scr,
+    *, chunk: int, n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (C, Dk)
+    k = k_ref[0, 0].astype(jnp.float32)       # (C, Dk)
+    v = v_ref[0, 0].astype(jnp.float32)       # (C, Dv)
+    # log decay ≤ 0; clamp at −50 (e⁻⁵⁰ ≈ 2e-22 is exactly 0 at f32 scale) so
+    # the cumsum stays small enough that f32 DIFFERENCES of it keep full ulp —
+    # unclamped, fast-decay channels push |cumsum| past 1e6 where ulp ≈ 0.1
+    # and exp(Δ) is off by e^±0.1.
+    logd = jnp.maximum(-jnp.exp(w_ref[0, 0].astype(jnp.float32)), -50.0)
+    u = u_ref[...].astype(jnp.float32)        # (1, Dk)
+    s0 = s_scr[...]                           # (Dk, Dv)
+
+    lc = jnp.cumsum(logd, axis=0)             # L_t, inclusive
+    l_prev = lc - logd                        # L_{t-1}
+    r_dec = r * jnp.exp(l_prev)               # r_t ⊙ e^{L_{t-1}} (exponent ≤ 0: safe)
+
+    # Intra-chunk scores. The factored form (r e^{L_{t-1}})·(k e^{-L_s}) is the
+    # classic two-matmul trick but e^{-L_s} OVERFLOWS for fast-decay channels;
+    # instead form the pairwise exponent L_{t-1}−L_s (≤ 0 on the valid strict
+    # lower triangle) BEFORE exp — never overflows, exact w.r.t. the oracle.
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = s_pos < t_pos
+    exponent = l_prev[:, None, :] - lc[None, :, :]           # (C, C, Dk)
+    decay_ts = jnp.exp(jnp.where(tri[:, :, None], exponent, -jnp.inf))
+    scores = jnp.einsum(
+        "td,sd,tsd->ts", r, k, decay_ts, preferred_element_type=jnp.float32
+    )
+    diag = jnp.sum(r * (u * k), axis=1)       # (C,) bonus term
+    scores += jnp.where(s_pos == t_pos, diag[:, None], 0.0)
+
+    dn_rows = (((1,), (0,)), ((), ()))        # (C,C)@(C,Dv) and (C,Dk)@(Dk,Dv)
+    y = jax.lax.dot_general(scores, v, dn_rows, preferred_element_type=jnp.float32)
+    y += jax.lax.dot_general(r_dec, s0, dn_rows, preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    l_total = lc[-1:, :]                      # (1, Dk) = L_C
+    k_carry = k * jnp.exp(l_total - lc)       # e^{L_C − L_s} ⊙ k_s
+    dn_state = (((0,), (0,)), ((), ()))       # (C,Dk)ᵀ(C,Dv) → (Dk,Dv)
+    s_new = jnp.exp(l_total).T * s0 + jax.lax.dot_general(
+        k_carry, v, dn_state, preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_tpu(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    s0: jax.Array | None = None,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Shapes as in ``rwkv6_ref``: r/k/w (B,H,T,Dk), v (B,H,T,Dv), u (H,Dk)."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"T={t} must divide chunk={chunk}")
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    grid = (b, h, t // chunk)
+    bh_spec = lambda bi, hi, ci: (bi, hi, ci, 0)  # noqa: E731
+    state_spec = lambda bi, hi, ci: (bi, hi, 0, 0)  # noqa: E731
+    y, s_last = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, chunk=chunk, n_chunks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dk), bh_spec),
+            pl.BlockSpec((1, 1, chunk, dk), bh_spec),
+            pl.BlockSpec((1, 1, chunk, dv), bh_spec),
+            pl.BlockSpec((1, 1, chunk, dk), bh_spec),
+            pl.BlockSpec((1, dk), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, dk, dv), state_spec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, dv), bh_spec),
+            pl.BlockSpec((1, 1, dk, dv), state_spec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_last

@@ -1,0 +1,128 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and emit memory/cost/roofline artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+        --shape train_4k --multi-pod --out experiments/dryrun
+
+The two lines ABOVE this docstring run before any jax import: jax locks the
+device count at first init, and the dry-run (only) needs 512 host devices.
+Exit code is non-zero if any requested cell fails to compile — sharding
+mismatches, compile-time OOM and unsupported collectives are bugs.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.models import count_params
+from repro.roofline import analyze_compiled
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str | None = None, verbose: bool = True,
+             overrides: dict | None = None, mesh=None, scan: bool = False):
+    """Lower + compile one cell; returns (CellReport, compile_seconds).
+
+    ``scan=False`` (default) unrolls layer/loss loops: scan bodies are
+    counted ONCE by XLA cost analysis, so unrolling is what makes the
+    roofline FLOPs exact. ``scan=True`` keeps the compact scan form — much
+    faster compiles; used for the multi-pod sharding-coherence pass, where
+    only compile success and memory analysis matter.
+    """
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    overrides = dict(overrides or {})
+    extra = {"scan_layers": scan, "unroll_loss": not scan,
+             **overrides.pop("extra_cfg", {})}
+    cell = build_cell(arch, shape_name, mesh, extra_cfg=extra, **overrides)
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        ).lower(*cell.args)
+        compiled = lowered.compile()
+    secs = time.perf_counter() - t0
+    shape = configs.SHAPES[shape_name]
+    report = analyze_compiled(
+        compiled, arch=configs.resolve(arch), shape=shape, mesh_desc=mesh_desc,
+        n_devices=mesh.devices.size, cfg=cell.cfg, n_params=count_params(cell.cfg),
+    )
+    if verbose:
+        print(compiled.memory_analysis())
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, list) else cost
+        print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+        print(report.summary(), f"[compile {secs:.1f}s]")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{configs.resolve(arch)}__{shape_name}__{mesh_desc}.json")
+        with open(path, "w") as f:
+            json.dump({**report.to_dict(), "compile_seconds": secs}, f, indent=1)
+    return report, secs
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true",
+                   help="run each cell on the single-pod AND multi-pod mesh")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--remat", default=None)
+    p.add_argument("--fsdp", default=None, choices=(None, "on", "off"))
+    p.add_argument("--scan", action="store_true",
+                   help="scan-over-layers form (fast compile, inexact FLOPs)")
+    args = p.parse_args()
+
+    archs = list(configs.ARCH_IDS) if args.arch == "all" else [
+        configs.resolve(a) for a in args.arch.split(",")
+    ]
+    cells = []
+    for arch in archs:
+        shapes = (
+            [s for a, s in configs.live_cells() if a == arch]
+            if args.shape == "all" else args.shape.split(",")
+        )
+        cells += [(arch, s) for s in shapes]
+
+    overrides = {}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.fsdp:
+        overrides["fsdp"] = args.fsdp == "on"
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch, shape_name in cells:
+            tag = f"{arch} × {shape_name} × {'2x16x16' if multi_pod else '16x16'}"
+            try:
+                run_cell(arch, shape_name, multi_pod=multi_pod,
+                         out_dir=args.out, overrides=overrides, mesh=mesh,
+                         scan=args.scan)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                traceback.print_exc()
+                print(f"FAILED: {tag}")
+    print(f"\n{len(cells) * len(meshes) - len(failures)}/{len(cells) * len(meshes)} cells compiled")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,175 @@
+"""Model-search launcher — the paper's workload, end to end.
+
+Two workloads:
+
+  * ``--workload tabular`` (the paper's evaluation): grid over the paper's
+    four algorithms (GBDT / MLP / RF / LogReg, all pure-JAX) on a synthetic
+    HIGGS- or SECOM-like dataset, with profile-based (or baseline)
+    scheduling over N thread executors. Prints per-policy makespans and the
+    best model under the chosen metric.
+
+  * ``--workload lm`` (the TPU-native adaptation): the search space is LM
+    architectures × hyperparameters; executors are MESH SLICES — each task
+    trains its config for a few steps on its slice (DP×TP inside the slice).
+    Profiling uses the ANALYTIC roofline profiler (cost ≈ one eval_shape,
+    the paper's sampling profiler made free — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.tabular  # noqa: F401  (registers the four estimators)
+from repro import configs
+from repro.core import (
+    AnalyticProfiler,
+    GridBuilder,
+    ModelSearcher,
+    SamplingProfiler,
+    TrainTask,
+    attach_costs,
+    schedule,
+)
+from repro.core.executor import MeshSliceExecutorPool
+from repro.data.pipeline import make_lm_stream
+from repro.data.synthetic import make_higgs_like, make_secom_like
+from repro.launch.mesh import make_test_mesh
+from repro.models import count_params
+from repro.train import Trainer, make_optimizer
+
+
+def paper_search_space(scale: float = 1.0):
+    """The paper's §V-A grid, structurally faithful (scaled for CPU time)."""
+    r = lambda n: max(1, int(round(n * scale)))  # noqa: E731
+    gbdt = (GridBuilder("gbdt")
+            .add_grid("eta", [0.1, 0.3, 0.9])
+            .add_grid("round", [r(30), r(60), r(90)])
+            .add_grid("max_bin", [32, 64, 128])
+            .add_grid("max_depth", [4, 6])
+            .build())
+    mlp = (GridBuilder("mlp")
+           .add_grid("network", ["128_128", "64_64", "128_64", "64_64_64"])
+           .add_grid("learning_rate", [0.003, 0.03, 0.3])
+           .add_grid("steps", [r(200), r(400)])
+           .build())
+    forest = (GridBuilder("forest")
+              .add_grid("n_estimators", [r(50), r(100)])
+              .add_grid("max_depth", [6, 8, 10])
+              .build())
+    logreg = (GridBuilder("logreg")
+              .add_grid("c", [0.011, 0.033, 0.1, 0.3, 0.9])
+              .build())
+    return [gbdt, mlp, forest, logreg]
+
+
+def run_tabular(args) -> int:
+    data = (make_higgs_like(args.rows, seed=0) if args.dataset == "higgs"
+            else make_secom_like(seed=0))
+    train, valid, test = data.split((0.6, 0.2, 0.2), seed=0)
+    train, mu, sd = train.standardize()
+    valid, _, _ = valid.standardize(mu, sd)
+    test, _, _ = test.standardize(mu, sd)
+
+    spaces = paper_search_space(args.scale)
+    n_tasks = sum(len(s) for s in spaces)
+    print(f"search space: {n_tasks} configurations over "
+          f"{[s.estimator for s in spaces]}")
+    searcher = (ModelSearcher(n_executors=args.executors, seed=0)
+                .set_scheduler(args.policy)
+                .set_metric(args.metric))
+    if args.profiler == "sampling":
+        searcher.set_profiler(SamplingProfiler(args.sample_rate))
+    else:
+        searcher.set_profiler(AnalyticProfiler())
+    if args.wal:
+        searcher.set_wal(args.wal)
+    for s in spaces:
+        searcher.add_space(s)
+    t0 = time.perf_counter()
+    multi = searcher.model_search(train, valid)
+    best = multi.best(valid, metric=args.metric)
+    test_score = None
+    for r in multi.results:
+        if r.task.task_id == best.task.task_id:
+            from repro.core import METRICS
+            test_score = METRICS[args.metric](test.y, r.model.predict_proba(test.x))
+    print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
+          f"profiling_ratio={searcher.stats.profiling_ratio:.1%} "
+          f"failures={searcher.stats.n_failures}")
+    print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
+          f"test {args.metric}={test_score:.4f}")
+    return 0
+
+
+def run_lm(args) -> int:
+    """LM search on mesh-slice executors (smoke scale on CPU)."""
+    mesh = make_test_mesh(data=args.slices, model=args.model_par)
+    spaces = []
+    for arch in (args.archs.split(",") if args.archs else
+                 ["qwen2_1_5b", "tinyllama_1_1b", "gemma_2b"]):
+        spaces.append(
+            GridBuilder(arch).add_grid("lr", [1e-3, 3e-3]).build()
+        )
+    tasks = []
+    tid = 0
+    for s in spaces:
+        for cfg_params in s.configs:
+            tasks.append(TrainTask(task_id=tid, estimator=s.estimator,
+                                   params=dict(cfg_params)))
+            tid += 1
+    # analytic profile: modelled step cost ∝ active params (roofline §2)
+    costs = {}
+    for t in tasks:
+        cfg = configs.get_smoke_config(t.estimator)
+        costs[t.task_id] = count_params(cfg) * args.steps
+    tasks = [t.with_cost(costs[t.task_id]) for t in tasks]
+    assignment = schedule(tasks, args.slices, policy=args.policy)
+    print(f"{len(tasks)} LM tasks over {args.slices} mesh slices "
+          f"(estimated makespan {assignment.estimated_makespan:.2e} units)")
+
+    def task_runner(task: TrainTask, slice_mesh, _data):
+        cfg = configs.get_smoke_config(task.estimator)
+        stream = make_lm_stream(slice_mesh, batch=4, seq_len=32, vocab=cfg.vocab)
+        tr = Trainer(cfg, make_optimizer("adamw", lr=task.params["lr"]),
+                     slice_mesh, stream)
+        t0 = time.perf_counter()
+        m = tr.run(args.steps)
+        stream.close()
+        return m.history[-1]["loss"], time.perf_counter() - t0
+
+    pool = MeshSliceExecutorPool(mesh, args.slices, task_runner)
+    results = pool.run(assignment, None)
+    for r in sorted(results, key=lambda r: r.model if r.ok else np.inf):
+        status = f"loss={r.model:.4f}" if r.ok else f"ERROR {r.error}"
+        print(f"  slice {r.executor_id}: {r.task.key():40s} {status}")
+    return 0
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--workload", default="tabular", choices=("tabular", "lm"))
+    p.add_argument("--dataset", default="higgs", choices=("higgs", "secom"))
+    p.add_argument("--rows", type=int, default=8000)
+    p.add_argument("--executors", type=int, default=4)
+    p.add_argument("--policy", default="lpt",
+                   choices=("lpt", "random", "round_robin", "dynamic", "lpt_dynamic"))
+    p.add_argument("--profiler", default="sampling", choices=("sampling", "analytic"))
+    p.add_argument("--sample-rate", type=float, default=0.03)
+    p.add_argument("--metric", default="auc")
+    p.add_argument("--scale", type=float, default=0.3,
+                   help="search-space budget scale (1.0 = paper-sized)")
+    p.add_argument("--wal", default=None, help="WAL path for restartable search")
+    # lm workload
+    p.add_argument("--slices", type=int, default=2)
+    p.add_argument("--model-par", type=int, default=1)
+    p.add_argument("--archs", default=None)
+    p.add_argument("--steps", type=int, default=5)
+    args = p.parse_args()
+    return run_tabular(args) if args.workload == "tabular" else run_lm(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

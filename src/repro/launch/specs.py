@@ -1,0 +1,149 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs`` returns abstract arrays only — weak-type-correct, shardable,
+zero device allocation — which is what the dry-run lowers against. Also
+builds the per-cell step function (train_step / prefill_step / decode_step)
+plus its in/out sharding trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding as shd
+from repro.models import decode_step, init_decode_state, init_params, prefill, train_loss
+from repro.models.transformer import ArchConfig
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import build_train_step, make_train_state_specs
+
+__all__ = ["cell_config", "input_specs", "build_cell", "Cell", "FSDP_ARCHS", "ADAFACTOR_ARCHS"]
+
+# param/optimizer memory is the binding constraint on these — shard params
+# over data too (ZeRO-3 / FSDP) and use factored optimizer state
+FSDP_ARCHS = {"qwen3_moe_235b", "arctic_480b", "gemma3_12b", "recurrentgemma_9b", "rwkv6_7b"}
+ADAFACTOR_ARCHS = {"qwen3_moe_235b", "arctic_480b"}
+
+
+def cell_config(arch: str, shape_name: str) -> ArchConfig:
+    """Arch config adjusted for the shape (whisper learned-pos table growth)."""
+    arch = configs.resolve(arch)
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    if cfg.learned_pos and cfg.max_position < shape.seq_len:
+        cfg = dataclasses.replace(cfg, max_position=shape.seq_len)
+    return cfg
+
+
+def input_specs(arch: str, shape_name: str) -> dict[str, Any]:
+    """Abstract model inputs for the cell (tokens/labels/stub frontends)."""
+    cfg = cell_config(arch, shape_name)
+    shape = configs.SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against an S-long cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.frontend == "audio_stub" and shape.kind != "decode":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ArchConfig
+    kind: str
+    step_fn: Any                 # callable to jit
+    args: tuple                  # abstract args
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               optimizer: str | None = None, fsdp: bool | None = None,
+               seq_shard_kv: bool | None = None, remat: str | None = None,
+               zero1: bool = True, cache_dtype: str = "bfloat16",
+               extra_cfg: dict | None = None) -> Cell:
+    """Assemble the jittable (step_fn, abstract args, shardings) for a cell."""
+    arch = configs.resolve(arch)
+    cfg = cell_config(arch, shape_name)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if extra_cfg:
+        cfg = dataclasses.replace(cfg, **extra_cfg)
+    shape = configs.SHAPES[shape_name]
+    if fsdp is None:
+        fsdp = arch in FSDP_ARCHS
+    if optimizer is None:
+        optimizer = "adafactor" if arch in ADAFACTOR_ARCHS else "adamw"
+    axis_map = shd.infer_axis_map(mesh)
+    data_size = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    tp_size = mesh.shape["model"]
+    inputs = input_specs(arch, shape_name)
+    b_sh = shd.named_shardings(mesh, shd.batch_pspecs(inputs, data_size), axis_map)
+
+    if shape.kind == "train":
+        opt = make_optimizer(optimizer)
+        state_shapes, state_specs = make_train_state_specs(
+            cfg, opt, fsdp=fsdp, zero1=zero1, data_size=data_size
+        )
+        st_sh = shd.named_shardings(mesh, state_specs, axis_map)
+        step_fn = build_train_step(cfg, opt)
+        return Cell(arch, shape_name, cfg, "train", step_fn,
+                    (state_shapes, inputs), (st_sh, b_sh), (st_sh, None))
+
+    # inference paths need params + decode state shapes
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    p_specs = shd.param_pspecs(param_shapes, fsdp=False)
+    p_sh = shd.named_shardings(mesh, p_specs, axis_map)
+    # sequence-shard the KV cache when kv heads can't fill the tp axis
+    # (flash-decoding); batch-1 long-context also spreads seq over dp
+    if seq_shard_kv is None:
+        if shape.kind == "decode" and shape.global_batch < data_size:
+            seq_shard_kv = "full"
+        elif shape.kind == "decode" and cfg.n_kv_heads < mesh.shape["model"]:
+            seq_shard_kv = True
+        else:
+            seq_shard_kv = False
+    state_shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                  jnp.dtype(cache_dtype))
+    )
+    s_specs = shd.state_pspecs(state_shapes, seq_shard=seq_shard_kv,
+                               dp_size=data_size, tp_size=tp_size)
+    s_sh = shd.named_shardings(mesh, s_specs, axis_map)
+
+    if shape.kind == "prefill":
+        def step_fn(params, state, batch):
+            return prefill(cfg, params, state, batch)
+        return Cell(arch, shape_name, cfg, "prefill", step_fn,
+                    (param_shapes, state_shapes, inputs),
+                    (p_sh, s_sh, b_sh), (None, s_sh))
+
+    def step_fn(params, state, tokens, pos):
+        return decode_step(cfg, params, state, tokens, pos)
+
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(arch, shape_name, cfg, "decode", step_fn,
+                (param_shapes, state_shapes, inputs["tokens"], pos_spec),
+                (p_sh, s_sh, b_sh["tokens"], None), (None, s_sh))

@@ -1,0 +1,24 @@
+"""LM substrate: composable model definitions for the assigned architectures."""
+from repro.models.transformer import (
+    ArchConfig,
+    LayerSpec,
+    count_params,
+    decode_step,
+    forward_hidden,
+    init_decode_state,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "ArchConfig",
+    "LayerSpec",
+    "count_params",
+    "decode_step",
+    "forward_hidden",
+    "init_decode_state",
+    "init_params",
+    "prefill",
+    "train_loss",
+]

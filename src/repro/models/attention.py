@@ -1,0 +1,156 @@
+"""Attention layer (MHA / GQA / MQA) with RoPE, windows, qk-norm, softcap.
+
+Three apply paths share one param dict:
+  * ``attn_train``   — full-sequence (training / prefill without cache)
+  * ``attn_prefill`` — full-sequence AND returns a filled KV cache
+  * ``attn_decode``  — one new token against a KV cache (in-place update)
+
+The inner products go through ``ops.attention`` / ``ops.decode_attention``
+(Pallas flash kernel on TPU, jnp reference on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import Init, dense, rmsnorm, rope
+
+__all__ = ["AttnCfg", "init_attention", "attn_train", "attn_prefill", "attn_decode", "init_kv_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    bias: bool = False
+    qk_norm: bool = False
+    window: int | None = None          # sliding-window size (None = global)
+    rope_theta: float | None = 10000.0  # None = no rotary (whisper: learned abs)
+    logit_softcap: float | None = None
+    scale: float | None = None         # None → head_dim ** −0.5
+    cross: bool = False                # cross-attention (K/V from encoder memory)
+    matmul_dtype: str = "float32"      # "input": bf16 operands, f32 accum
+
+
+def init_attention(init: Init, cfg: AttnCfg) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": init.normal((d, h * dh)),
+        "wk": init.normal((d, hkv * dh)),
+        "wv": init.normal((d, hkv * dh)),
+        "wo": init.normal((h * dh, d)),
+    }
+    if cfg.bias:
+        p["bq"] = init.zeros((h * dh,))
+        p["bk"] = init.zeros((hkv * dh,))
+        p["bv"] = init.zeros((hkv * dh,))
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": init.zeros((dh,))}
+        p["k_norm"] = {"scale": init.zeros((dh,))}
+    return p
+
+
+def _qkv(params: dict, cfg: AttnCfg, x: jax.Array, kv_x: jax.Array, positions):
+    b, t, _ = x.shape
+    tk = kv_x.shape[1]
+    q = dense(params["wq"], x, params.get("bq")).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = dense(params["wk"], kv_x, params.get("bk")).reshape(b, tk, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], kv_x, params.get("bv")).reshape(b, tk, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta is not None and not cfg.cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # (B, H, T, Dh)
+    return (jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))
+
+
+def attn_train(params: dict, cfg: AttnCfg, x: jax.Array, positions: jax.Array,
+               memory: jax.Array | None = None, causal: bool = True) -> jax.Array:
+    """x: (B, T, d). ``memory`` (B, Tm, d) switches to cross-attention."""
+    kv_x = memory if cfg.cross else x
+    q, k, v = _qkv(params, cfg, x, kv_x, positions)
+    o = ops.attention(
+        q, k, v,
+        causal=causal and not cfg.cross,
+        window=cfg.window, scale=cfg.scale, logit_softcap=cfg.logit_softcap,
+        matmul_dtype=cfg.matmul_dtype,
+    )
+    b, h, t, dh = o.shape
+    o = jnp.swapaxes(o, 1, 2).reshape(b, t, h * dh)
+    return dense(params["wo"], o)
+
+
+def init_kv_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_prefill(params: dict, cfg: AttnCfg, x: jax.Array, positions: jax.Array,
+                 cache: dict, memory: jax.Array | None = None):
+    """Full-seq attention that also fills cache[0:T]. Returns (out, cache)."""
+    kv_x = memory if cfg.cross else x
+    q, k, v = _qkv(params, cfg, x, kv_x, positions)
+    t = k.shape[2]
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    o = ops.attention(
+        q, k, v, causal=not cfg.cross,
+        window=cfg.window, scale=cfg.scale, logit_softcap=cfg.logit_softcap,
+        matmul_dtype=cfg.matmul_dtype,
+    )
+    b, h, tq, dh = o.shape
+    o = jnp.swapaxes(o, 1, 2).reshape(b, tq, h * dh)
+    return dense(params["wo"], o), cache
+
+
+def attn_decode(params: dict, cfg: AttnCfg, x: jax.Array, pos: jax.Array, cache: dict):
+    """One-token step. x: (B, 1, d); pos: scalar index of the new token.
+
+    Self-attention: writes the new K/V at ``pos`` then attends over
+    cache[0:pos+1]. Cross-attention: cache holds the (pre-filled, static)
+    encoder K/V; nothing is written.
+    """
+    b = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q = dense(params["wq"], x, params.get("bq")).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+    if cfg.rope_theta is not None and not cfg.cross:
+        q = rope(q, positions, cfg.rope_theta)
+    q = jnp.swapaxes(q, 1, 2)                      # (B, H, 1, Dh)
+    if cfg.cross:
+        cache_len = cache["k"].shape[2]
+    else:
+        k_new = dense(params["wk"], x, params.get("bk")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v_new = dense(params["wv"], x, params.get("bv")).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k_new = rmsnorm(params["k_norm"], k_new)
+        if cfg.rope_theta is not None:
+            k_new = rope(k_new, positions, cfg.rope_theta)
+        k_new = jnp.swapaxes(k_new, 1, 2)
+        v_new = jnp.swapaxes(v_new, 1, 2)
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, 0, pos, 0)
+            ),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, 0, pos, 0)
+            ),
+        }
+        cache_len = pos + 1
+    o = ops.decode_attention(
+        q, cache["k"], cache["v"], cache_len,
+        window=cfg.window, scale=cfg.scale, logit_softcap=cfg.logit_softcap,
+        matmul_dtype=cfg.matmul_dtype,
+    )
+    o = jnp.swapaxes(o, 1, 2).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return dense(params["wo"], o), cache

@@ -1,0 +1,139 @@
+"""Shared neural building blocks for the LM substrate.
+
+Pure functions over explicit param pytrees (no flax dependency): every
+``init_*`` returns a dict of arrays, every ``apply`` is a jnp function.
+Matmuls run in the model's compute dtype (bf16 on TPU); norms, softmax and
+recurrences accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Init",
+    "rmsnorm",
+    "layernorm",
+    "dense",
+    "ffn_apply",
+    "init_ffn",
+    "rope",
+    "causal_conv1d",
+    "init_norm",
+]
+
+
+@dataclasses.dataclass
+class Init:
+    """Seeded initializer factory: hands out split keys deterministically."""
+
+    key: jax.Array
+    dtype: jnp.dtype = jnp.float32
+
+    def next_key(self) -> jax.Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def normal(self, shape, stddev: float | None = None):
+        std = stddev if stddev is not None else shape[0] ** -0.5
+        return (jax.random.normal(self.next_key(), shape, jnp.float32) * std).astype(self.dtype)
+
+    def zeros(self, shape):
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, shape):
+        return jnp.ones(shape, self.dtype)
+
+
+def init_norm(init: Init, d: int, kind: str = "rmsnorm") -> dict:
+    if kind == "rmsnorm":
+        return {"scale": init.zeros((d,))}       # gemma convention: (1 + scale)
+    return {"scale": init.ones((d,)), "bias": init.zeros((d,))}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def dense(w: jax.Array, x: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """x @ w in x's dtype (params cast down), f32 accumulation on the MXU."""
+    y = jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_ffn(init: Init, d: int, d_ff: int, act: str = "swiglu") -> dict:
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": init.normal((d, d_ff)),
+            "w_up": init.normal((d, d_ff)),
+            "w_down": init.normal((d_ff, d)),
+        }
+    return {"w_up": init.normal((d, d_ff)), "w_down": init.normal((d_ff, d))}
+
+
+def ffn_apply(params: dict, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        fn = _ACTS["silu"] if act == "swiglu" else _ACTS["gelu"]
+        h = fn(dense(params["w_gate"], x)) * dense(params["w_up"], x)
+    else:
+        h = _ACTS[act](dense(params["w_up"], x))
+    return dense(params["w_down"], h)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (B, T, H, Dh) with Dh even; positions: (T,) or (B, T)."""
+    dh = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, dh // 2, dtype=jnp.float32) / (dh // 2))
+    if positions.ndim == 1:
+        angles = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+        angles = angles[..., None, :]                       # (1, T, 1, Dh/2)
+    else:
+        angles = positions.astype(jnp.float32)[:, :, None, None] * freqs
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d(w: jax.Array, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. w: (width, D); x: (B, T, D); state: (B, width−1, D).
+
+    Returns (y, new_state). Used by the RecurrentGemma temporal-conv branch.
+    """
+    width = w.shape[0]
+    b, t, d = x.shape
+    if state is None:
+        state = jnp.zeros((b, width - 1, d), x.dtype)
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B, T+w−1, D)
+    y = jnp.zeros((b, t, d), jnp.float32)
+    for i in range(width):
+        y = y + xx[:, i : i + t].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xx[:, -(width - 1) :] if width > 1 else state
+    return y.astype(x.dtype), new_state

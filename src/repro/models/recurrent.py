@@ -1,0 +1,159 @@
+"""Recurrent blocks: Griffin RG-LRU (RecurrentGemma) and RWKV-6 time/channel mix.
+
+Both expose a full-sequence path (training/prefill — kernels via ``ops``)
+and a single-step path (decode — the same ops with T=1 states carried).
+Recurrent state replaces the KV cache: O(1) memory per token, which is why
+these archs run the ``long_500k`` shape that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import Init, causal_conv1d, dense
+
+__all__ = [
+    "init_rglru_block", "rglru_block_apply", "init_rglru_state",
+    "init_rwkv_block", "rwkv_time_mix", "rwkv_channel_mix", "init_rwkv_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RecurrentGemma recurrent block
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(init: Init, d: int, lru_width: int, conv_width: int = 4) -> dict:
+    return {
+        "w_x": init.normal((d, lru_width)),
+        "w_y": init.normal((d, lru_width)),
+        "conv_w": init.normal((conv_width, lru_width), stddev=conv_width**-0.5),
+        "ig_w": init.normal((lru_width, lru_width)),
+        "rg_w": init.normal((lru_width, lru_width)),
+        "a_param": init.ones((lru_width,)) * 0.7,
+        "w_out": init.normal((lru_width, d)),
+    }
+
+
+def init_rglru_state(d_lru: int, batch: int, conv_width: int = 4, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_lru), dtype),
+        "h": jnp.zeros((batch, d_lru), jnp.float32),
+    }
+
+
+def rglru_block_apply(params: dict, x: jax.Array, state: dict | None = None):
+    """x: (B, T, d) (already normed). Returns (out, new_state)."""
+    gate = jax.nn.gelu(dense(params["w_y"], x), approximate=True)
+    u = dense(params["w_x"], x)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = causal_conv1d(params["conv_w"], u, conv_state)
+    ig = dense(params["ig_w"], u)
+    rg = dense(params["rg_w"], u)
+    h0 = None if state is None else state["h"]
+    h, h_last = ops.rglru(u, ig, rg, params["a_param"], h0)
+    out = dense(params["w_out"], h * gate)
+    return out, {"conv": new_conv, "h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_block(init: Init, d: int, d_ff: int, head_size: int = 64,
+                    decay_lora: int = 64) -> dict:
+    n_heads = d // head_size
+    return {
+        "tmix": {
+            "mu_r": init.zeros((d,)), "mu_k": init.zeros((d,)),
+            "mu_v": init.zeros((d,)), "mu_g": init.zeros((d,)),
+            "mu_w": init.zeros((d,)),
+            "w0": init.ones((d,)) * -6.0,
+            "w_lora_a": init.normal((d, decay_lora)),
+            "w_lora_b": init.normal((decay_lora, d), stddev=0.01),
+            "wr": init.normal((d, d)), "wk": init.normal((d, d)),
+            "wv": init.normal((d, d)), "wg": init.normal((d, d)),
+            "wo": init.normal((d, d)),
+            "u": init.zeros((n_heads, head_size)),
+            "ln_x": {"scale": init.ones((d,)), "bias": init.zeros((d,))},
+        },
+        "cmix": {
+            "mu_k": init.zeros((d,)), "mu_r": init.zeros((d,)),
+            "wk": init.normal((d, d_ff)),
+            "wv": init.normal((d_ff, d)),
+            "wr": init.normal((d, d)),
+        },
+    }
+
+
+def init_rwkv_state(d: int, batch: int, head_size: int = 64, dtype=jnp.float32) -> dict:
+    n_heads = d // head_size
+    return {
+        "tshift": jnp.zeros((batch, 1, d), dtype),
+        "cshift": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, n_heads, head_size, head_size), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """x_{t-1} stream: (B,T,d) with prev = last token of the previous chunk."""
+    b, t, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, 1, d), x.dtype)
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1), x[:, -1:]
+
+
+def _time_mix(p: dict, x: jax.Array, shift_prev, wkv_state, head_size: int):
+    b, t, d = x.shape
+    h = d // head_size
+    x_prev, new_shift = _token_shift(x, shift_prev)
+    delta = x_prev - x
+
+    def mixed(name):
+        return x + delta * p[f"mu_{name}"].astype(x.dtype)
+
+    r = dense(p["wr"], mixed("r")).reshape(b, t, h, head_size).swapaxes(1, 2)
+    k = dense(p["wk"], mixed("k")).reshape(b, t, h, head_size).swapaxes(1, 2)
+    v = dense(p["wv"], mixed("v")).reshape(b, t, h, head_size).swapaxes(1, 2)
+    g = jax.nn.silu(dense(p["wg"], mixed("g")))
+    # Finch's hallmark: data-dependent decay via a low-rank adapter
+    xw = mixed("w").astype(jnp.float32)
+    w = p["w0"].astype(jnp.float32) + jnp.tanh(
+        xw @ p["w_lora_a"].astype(jnp.float32)
+    ) @ p["w_lora_b"].astype(jnp.float32)                    # (B,T,d) pre-activation
+    w = w.reshape(b, t, h, head_size).swapaxes(1, 2)
+    y, s_last = ops.rwkv6(r, k, v, w, p["u"], wkv_state)     # (B,H,T,hs)
+    y = y.swapaxes(1, 2).reshape(b, t, d)
+    # per-head group norm (RWKV's ln_x)
+    yf = y.astype(jnp.float32).reshape(b, t, h, head_size)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yf = ((yf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, t, d)
+    y = (yf * p["ln_x"]["scale"] + p["ln_x"]["bias"]).astype(x.dtype)
+    return dense(p["wo"], y * g), new_shift, s_last
+
+
+def _channel_mix(p: dict, x: jax.Array, shift_prev):
+    x_prev, new_shift = _token_shift(x, shift_prev)
+    delta = x_prev - x
+    xk = x + delta * p["mu_k"].astype(x.dtype)
+    xr = x + delta * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk)))
+    return jax.nn.sigmoid(dense(p["wr"], xr)) * dense(p["wv"], k), new_shift
+
+
+def rwkv_time_mix(params: dict, x_normed: jax.Array, state: dict | None,
+                  head_size: int = 64):
+    """Time-mix half. Returns (out, {"tshift", "wkv"} partial state)."""
+    st = state or {}
+    out, new_shift, wkv = _time_mix(
+        params["tmix"], x_normed, st.get("tshift"), st.get("wkv"), head_size
+    )
+    return out, {"tshift": new_shift, "wkv": wkv}
+
+
+def rwkv_channel_mix(params: dict, x_normed: jax.Array, state: dict | None):
+    """Channel-mix half. Returns (out, {"cshift"} partial state)."""
+    st = state or {}
+    out, new_shift = _channel_mix(params["cmix"], x_normed, st.get("cshift"))
+    return out, {"cshift": new_shift}

@@ -1,0 +1,608 @@
+"""The LM stack: config, init, training forward, prefill and decode paths.
+
+Design:
+  * An architecture is a repeated PATTERN of layer specs (plus an optional
+    tail) — uniform archs have a 1-spec pattern; gemma3's 5:1 local:global
+    is a 6-spec pattern × 8; recurrentgemma's (rec, rec, attn) × 12 + 2.
+  * Per-pattern-position params are STACKED over repeats and the stack is a
+    single ``lax.scan`` (with a configurable remat policy), so the compiled
+    HLO is one layer group regardless of depth — essential for 94-layer
+    dry-runs.
+  * Decode state (KV caches / recurrent states) mirrors the stacking, so the
+    decode step scans over (params, state) pairs.
+  * The LM loss computes logits in SEQUENCE CHUNKS inside a scan: the full
+    (B, S, 256k-vocab) logits tensor never materialises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import recurrent
+from repro.models.attention import (
+    AttnCfg,
+    attn_decode,
+    attn_prefill,
+    attn_train,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.layers import Init, ffn_apply, init_ffn, init_norm, layernorm, rmsnorm
+from repro.models.moe import init_moe, moe_apply
+
+__all__ = ["LayerSpec", "ArchConfig", "init_params", "train_loss", "forward_hidden",
+           "init_decode_state", "decode_step", "prefill", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"                 # "attn" | "rglru" | "rwkv"
+    window: int | None = None          # sliding-window attention
+    rope_theta: float | None = None    # per-layer RoPE override (gemma3 local)
+    ffn: str = "dense"                 # "dense" | "moe" | "none"
+    cross_attn: bool = False           # decoder cross-attention (whisper)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    pattern: tuple[LayerSpec, ...]
+    repeats: int
+    tail: tuple[LayerSpec, ...] = ()
+    ffn_act: str = "swiglu"            # "swiglu" | "geglu" | "gelu"
+    norm: str = "rmsnorm"              # "rmsnorm" | "layernorm"
+    post_norm: bool = False            # gemma3: post-attn/post-ffn norms
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    attn_scale: float | None = None
+    attn_matmul: str = "float32"       # "input": bf16 QK/PV operands (§Perf)
+    embed_scale: bool = False          # scale embeddings by sqrt(d_model)
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_dense_residual: bool = False
+    capacity_factor: float = 1.25
+    # --- recurrent ---
+    lru_width: int = 0
+    conv_width: int = 4
+    rwkv_head_size: int = 64
+    # --- encoder-decoder / frontends ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    learned_pos: bool = False
+    max_position: int = 0
+    frontend: str = "none"             # "none" | "audio_stub" | "vision_stub"
+    num_patches: int = 0
+    # --- numerics / compilation ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"                # "none" | "dots" | "full"
+    loss_chunk: int = 512              # sequence chunk for the CE scan
+    scan_layers: bool = True           # False: unroll (exact dry-run FLOP counts)
+    unroll_loss: bool = False          # unroll the CE chunk loop too (dry-run)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats + len(self.tail)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def attn_cfg(self, spec: LayerSpec, cross: bool = False) -> AttnCfg:
+        return AttnCfg(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            bias=self.qkv_bias, qk_norm=self.qk_norm,
+            window=None if cross else spec.window,
+            rope_theta=(None if self.learned_pos
+                        else (spec.rope_theta or self.rope_theta)),
+            logit_softcap=self.attn_softcap, scale=self.attn_scale,
+            cross=cross, matmul_dtype=self.attn_matmul,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(init: Init, cfg: ArchConfig, spec: LayerSpec) -> dict:
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": init_norm(init, d, cfg.norm)}
+    if spec.kind == "attn":
+        p["attn"] = init_attention(init, cfg.attn_cfg(spec))
+    elif spec.kind == "rglru":
+        p["rec"] = recurrent.init_rglru_block(
+            init, d, cfg.lru_width or d, cfg.conv_width
+        )
+    elif spec.kind == "rwkv":
+        p.update(recurrent.init_rwkv_block(init, d, cfg.d_ff, cfg.rwkv_head_size))
+        p["norm2"] = init_norm(init, d, cfg.norm)
+        return p
+    else:
+        raise ValueError(f"unknown layer kind {spec.kind!r}")
+    if cfg.post_norm:
+        p["norm1b"] = init_norm(init, d, cfg.norm)
+    if spec.cross_attn:
+        p["normx"] = init_norm(init, d, cfg.norm)
+        p["xattn"] = init_attention(init, cfg.attn_cfg(spec, cross=True))
+    if spec.ffn != "none":
+        p["norm2"] = init_norm(init, d, cfg.norm)
+        if spec.ffn == "moe":
+            p["moe"] = init_moe(
+                init, d, cfg.n_experts, cfg.d_ff_expert, act=cfg.ffn_act,
+                dense_residual_ff=cfg.d_ff if cfg.moe_dense_residual else 0,
+            )
+        else:
+            p["ffn"] = init_ffn(init, d, cfg.d_ff, cfg.ffn_act)
+        if cfg.post_norm:
+            p["norm2b"] = init_norm(init, d, cfg.norm)
+    return p
+
+
+def _init_enc_layer(init: Init, cfg: ArchConfig) -> dict:
+    """Whisper-style bidirectional encoder layer: MHA + GELU FFN."""
+    d = cfg.d_model
+    spec = LayerSpec(kind="attn", ffn="dense")
+    return {
+        "norm1": init_norm(init, d, cfg.norm),
+        "attn": init_attention(init, cfg.attn_cfg(spec)),
+        "norm2": init_norm(init, d, cfg.norm),
+        "ffn": init_ffn(init, d, cfg.d_ff, cfg.ffn_act),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    """Build the stacked param pytree (pure-jax: usable under eval_shape)."""
+    init = Init(key, cfg.pdtype)
+    params: dict[str, Any] = {
+        # σ = d^-1/2 keeps TIED unembed logits O(1); embed_scale archs restore
+        # O(1) input magnitude by multiplying √d back on at the input.
+        "embed": init.normal((cfg.vocab, cfg.d_model), stddev=cfg.d_model**-0.5),
+    }
+    if cfg.learned_pos:
+        params["pos_embed"] = init.normal((max(cfg.max_position, 1), cfg.d_model), stddev=0.02)
+    if cfg.encoder_layers:
+        keys = jax.random.split(init.next_key(), cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_enc_layer(Init(k, cfg.pdtype), cfg)
+        )(keys)
+        params["enc_norm"] = init_norm(init, cfg.d_model, cfg.norm)
+    # pattern blocks: stacked over repeats
+    blocks = {}
+    for j, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(init.next_key(), cfg.repeats)
+        blocks[f"b{j}"] = jax.vmap(
+            lambda k, spec=spec: _init_layer(Init(k, cfg.pdtype), cfg, spec)
+        )(keys)
+    params["blocks"] = blocks
+    for j, spec in enumerate(cfg.tail):
+        params[f"tail{j}"] = _init_layer(init, cfg, spec)
+    params["final_norm"] = init_norm(init, cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init.normal((cfg.d_model, cfg.vocab))
+    return params
+
+
+def count_params(cfg: ArchConfig) -> int:
+    import math
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x: jax.Array,
+                 positions: jax.Array, memory: jax.Array | None) -> jax.Array:
+    if spec.kind == "rwkv":
+        t_out, _ = recurrent.rwkv_time_mix(p, _norm(cfg, p["norm1"], x), None,
+                                           cfg.rwkv_head_size)
+        x = x + t_out
+        c_out, _ = recurrent.rwkv_channel_mix(p, _norm(cfg, p["norm2"], x), None)
+        return x + c_out
+
+    h = _norm(cfg, p["norm1"], x)
+    if spec.kind == "attn":
+        h = attn_train(p["attn"], cfg.attn_cfg(spec), h, positions)
+    else:  # rglru
+        h, _ = recurrent.rglru_block_apply(p["rec"], h)
+    if cfg.post_norm:
+        h = _norm(cfg, p["norm1b"], h)
+    x = x + h
+    if spec.cross_attn:
+        h = attn_train(p["xattn"], cfg.attn_cfg(spec, cross=True),
+                       _norm(cfg, p["normx"], x), positions, memory=memory)
+        x = x + h
+    if spec.ffn != "none":
+        h = _norm(cfg, p["norm2"], x)
+        if spec.ffn == "moe":
+            h = moe_apply(
+                p["moe"], h, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.ffn_act,
+            )
+        else:
+            h = ffn_apply(p["ffn"], h, cfg.ffn_act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["norm2b"], h)
+        x = x + h
+    return x
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _run_stack(cfg: ArchConfig, params: dict, x: jax.Array, positions: jax.Array,
+               memory: jax.Array | None) -> jax.Array:
+    def body(carry, layer_params):
+        h = carry
+        for j, spec in enumerate(cfg.pattern):
+            h = _apply_layer(cfg, spec, layer_params[f"b{j}"], h, positions, memory)
+        return h, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+    else:
+        # unrolled: identical math; every layer appears in the HLO, so the
+        # dry-run's cost_analysis counts all of them (scan bodies count once)
+        rbody = _remat(cfg, body)
+        for i in range(cfg.repeats):
+            x, _ = rbody(x, jax.tree.map(lambda l: l[i], params["blocks"]))
+    for j, spec in enumerate(cfg.tail):
+        x = _apply_layer(cfg, spec, params[f"tail{j}"], x, positions, memory)
+    return x
+
+
+def _sinusoid(t: int, d: int) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _run_encoder(cfg: ArchConfig, params: dict, enc_embeds: jax.Array) -> jax.Array:
+    """Whisper encoder stack over stub frame embeddings (B, Te, d)."""
+    x = enc_embeds.astype(cfg.cdtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+    spec = LayerSpec(kind="attn", ffn="dense")
+
+    def body(h, lp):
+        a = attn_train(lp["attn"], cfg.attn_cfg(spec), _norm(cfg, lp["norm1"], h),
+                       positions, causal=False)
+        h = h + a
+        f = ffn_apply(lp["ffn"], _norm(cfg, lp["norm2"], h), cfg.ffn_act)
+        return h + f, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"])
+    else:
+        rbody = _remat(cfg, body)
+        for i in range(cfg.encoder_layers):
+            x, _ = rbody(x, jax.tree.map(lambda l: l[i], params["encoder"]))
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _embed_inputs(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        patches = batch["patch_embeds"].astype(cfg.cdtype)
+        x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+    if cfg.learned_pos:
+        t = x.shape[1]
+        x = x + params["pos_embed"][:t][None].astype(x.dtype)
+    return x
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    """Embeddings → stack → final norm. batch: tokens (B,S) [+ stub embeds]."""
+    x = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    memory = None
+    if cfg.encoder_layers:
+        memory = _run_encoder(cfg, params, batch["enc_embeds"])
+    x = _run_stack(cfg, params, x, positions, memory)
+    return _norm(cfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def _unembed(cfg: ArchConfig, params: dict) -> jax.Array:
+    return (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+
+def lm_loss(cfg: ArchConfig, params: dict, hidden: jax.Array, labels: jax.Array):
+    """Mean next-token CE; labels < 0 are masked. Scans sequence chunks so
+    (B, chunk, V) is the largest logits tensor that ever exists."""
+    b, s, d = hidden.shape
+    w = _unembed(cfg, params)
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    def chunk_loss(h_c, y_c):
+        logits = jax.lax.dot_general(
+            h_c, w.astype(h_c.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    if n_chunks > 0 and cfg.unroll_loss:
+        tot = cnt = jnp.float32(0)
+        for i in range(n_chunks):
+            l, n = chunk_loss(
+                hidden[:, i * chunk : (i + 1) * chunk], labels[:, i * chunk : (i + 1) * chunk]
+            )
+            tot, cnt = tot + l, cnt + n
+    elif n_chunks > 0:
+        h_main = hidden[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+        y_main = labels[:, : n_chunks * chunk].reshape(b, n_chunks, chunk)
+
+        def body(acc, xs):
+            h_c, y_c = xs
+            l, n = chunk_loss(h_c, y_c)
+            return (acc[0] + l, acc[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.float32(0)),
+            (h_main.swapaxes(0, 1), y_main.swapaxes(0, 1)),
+        )
+    else:
+        tot = cnt = jnp.float32(0)
+    if rem:
+        l, n = chunk_loss(hidden[:, -rem:], labels[:, -rem:])
+        tot, cnt = tot + l, cnt + n
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    hidden = forward_hidden(cfg, params, batch)
+    return lm_loss(cfg, params, hidden, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def _init_layer_state(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int,
+                      cache_dtype) -> dict:
+    if spec.kind == "attn":
+        st = {"kv": init_kv_cache(cfg.attn_cfg(spec), batch, max_len, cache_dtype)}
+        if spec.cross_attn:
+            st["xkv"] = init_kv_cache(
+                cfg.attn_cfg(spec), batch, max(cfg.encoder_seq, 1), cache_dtype
+            )
+        return st
+    if spec.kind == "rglru":
+        return {"rec": recurrent.init_rglru_state(
+            cfg.lru_width or cfg.d_model, batch, cfg.conv_width
+        )}
+    return {"rwkv": recurrent.init_rwkv_state(cfg.d_model, batch, cfg.rwkv_head_size)}
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> dict:
+    """State pytree mirroring the block stacking (leaves lead with repeats)."""
+    state: dict[str, Any] = {"blocks": {}}
+    for j, spec in enumerate(cfg.pattern):
+        one = _init_layer_state(cfg, spec, batch, max_len, cache_dtype)
+        state["blocks"][f"b{j}"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.repeats,) + l.shape), one
+        )
+    for j, spec in enumerate(cfg.tail):
+        state[f"tail{j}"] = _init_layer_state(cfg, spec, batch, max_len, cache_dtype)
+    return state
+
+
+def _apply_layer_decode(cfg: ArchConfig, spec: LayerSpec, p: dict, st: dict,
+                        x: jax.Array, pos) -> tuple[jax.Array, dict]:
+    new_st = dict(st)
+    if spec.kind == "rwkv":
+        t_out, tstate = recurrent.rwkv_time_mix(
+            p, _norm(cfg, p["norm1"], x), st["rwkv"], cfg.rwkv_head_size
+        )
+        x = x + t_out
+        c_out, cstate = recurrent.rwkv_channel_mix(p, _norm(cfg, p["norm2"], x), st["rwkv"])
+        new_st["rwkv"] = {**tstate, **cstate}
+        return x + c_out, new_st
+
+    h = _norm(cfg, p["norm1"], x)
+    if spec.kind == "attn":
+        h, kv = attn_decode(p["attn"], cfg.attn_cfg(spec), h, pos, st["kv"])
+        new_st["kv"] = kv
+    else:
+        h, rec = recurrent.rglru_block_apply(p["rec"], h, st["rec"])
+        new_st["rec"] = rec
+    if cfg.post_norm:
+        h = _norm(cfg, p["norm1b"], h)
+    x = x + h
+    if spec.cross_attn:
+        h, _ = attn_decode(p["xattn"], cfg.attn_cfg(spec, cross=True),
+                           _norm(cfg, p["normx"], x), pos, st["xkv"])
+        x = x + h
+    if spec.ffn != "none":
+        h = _norm(cfg, p["norm2"], x)
+        if spec.ffn == "moe":
+            h = moe_apply(p["moe"], h, top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor, act=cfg.ffn_act)
+        else:
+            h = ffn_apply(p["ffn"], h, cfg.ffn_act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["norm2b"], h)
+        x = x + h
+    return x, new_st
+
+
+def decode_step(cfg: ArchConfig, params: dict, state: dict, tokens: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (current index).
+
+    Returns (logits (B, vocab) f32, new_state). The layer sweep is a scan over
+    (stacked params, stacked state) pairs.
+    """
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    if cfg.learned_pos:
+        maxp = params["pos_embed"].shape[0]
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], jnp.minimum(pos, maxp - 1), 1, 0
+        )[None].astype(x.dtype)
+
+    def body(carry, xs):
+        h = carry
+        lp, ls = xs
+        new_ls = {}
+        for j, spec in enumerate(cfg.pattern):
+            h, new_ls[f"b{j}"] = _apply_layer_decode(
+                cfg, spec, lp[f"b{j}"], ls[f"b{j}"], h, pos
+            )
+        return h, new_ls
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], state["blocks"]))
+    else:
+        per_layer = []
+        for i in range(cfg.repeats):
+            x, ls = body(x, jax.tree.map(lambda l: l[i],
+                                         (params["blocks"], state["blocks"])))
+            per_layer.append(ls)
+        new_blocks = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+    new_state: dict[str, Any] = {"blocks": new_blocks}
+    for j, spec in enumerate(cfg.tail):
+        x, new_state[f"tail{j}"] = _apply_layer_decode(
+            cfg, spec, params[f"tail{j}"], state[f"tail{j}"], x, pos
+        )
+    x = _norm(cfg, params["final_norm"], x)
+    logits = jax.lax.dot_general(
+        x[:, 0], _unembed(cfg, params).astype(x.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_state
+
+
+def prefill(cfg: ArchConfig, params: dict, state: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """Full-sequence prompt pass that fills decode state. Returns
+    (last-position logits (B, vocab), state ready for decode at pos=S)."""
+    x = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+    memory = None
+    if cfg.encoder_layers:
+        memory = _run_encoder(cfg, params, batch["enc_embeds"])
+
+    def body(carry, xs):
+        h = carry
+        lp, ls = xs
+        new_ls = {}
+        for j, spec in enumerate(cfg.pattern):
+            h, new_ls[f"b{j}"] = _prefill_layer(
+                cfg, spec, lp[f"b{j}"], ls[f"b{j}"], h, positions, memory
+            )
+        return h, new_ls
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], state["blocks"]))
+    else:
+        per_layer = []
+        for i in range(cfg.repeats):
+            x, ls = body(x, jax.tree.map(lambda l: l[i],
+                                         (params["blocks"], state["blocks"])))
+            per_layer.append(ls)
+        new_blocks = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+    new_state: dict[str, Any] = {"blocks": new_blocks}
+    for j, spec in enumerate(cfg.tail):
+        x, new_state[f"tail{j}"] = _prefill_layer(
+            cfg, spec, params[f"tail{j}"], state[f"tail{j}"], x, positions, memory
+        )
+    x = _norm(cfg, params["final_norm"], x)
+    logits = jax.lax.dot_general(
+        x[:, -1], _unembed(cfg, params).astype(x.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_state
+
+
+def _prefill_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, st: dict,
+                   x: jax.Array, positions: jax.Array, memory) -> tuple[jax.Array, dict]:
+    new_st = dict(st)
+    if spec.kind == "rwkv":
+        t_out, tstate = recurrent.rwkv_time_mix(
+            p, _norm(cfg, p["norm1"], x), None, cfg.rwkv_head_size
+        )
+        x = x + t_out
+        c_out, cstate = recurrent.rwkv_channel_mix(p, _norm(cfg, p["norm2"], x), None)
+        new_st["rwkv"] = {**tstate, **cstate}
+        return x + c_out, new_st
+    h = _norm(cfg, p["norm1"], x)
+    if spec.kind == "attn":
+        h, kv = attn_prefill(p["attn"], cfg.attn_cfg(spec), h, positions, st["kv"])
+        new_st["kv"] = kv
+    else:
+        h, rec = recurrent.rglru_block_apply(p["rec"], h, None)
+        new_st["rec"] = rec
+    if cfg.post_norm:
+        h = _norm(cfg, p["norm1b"], h)
+    x = x + h
+    if spec.cross_attn:
+        h, xkv = attn_prefill(p["xattn"], cfg.attn_cfg(spec, cross=True),
+                              _norm(cfg, p["normx"], x), positions, st["xkv"],
+                              memory=memory)
+        new_st["xkv"] = xkv
+        x = x + h
+    if spec.ffn != "none":
+        h = _norm(cfg, p["norm2"], x)
+        if spec.ffn == "moe":
+            h = moe_apply(p["moe"], h, top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor, act=cfg.ffn_act)
+        else:
+            h = ffn_apply(p["ffn"], h, cfg.ffn_act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["norm2b"], h)
+        x = x + h
+    return x, new_st

@@ -1,0 +1,11 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    CellReport,
+    analyze_compiled,
+    model_flops,
+    parse_collective_bytes,
+)
+
+__all__ = [
+    "HW_V5E", "CellReport", "analyze_compiled", "model_flops", "parse_collective_bytes",
+]

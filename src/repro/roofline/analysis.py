@@ -1,0 +1,229 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s           (per chip)
+    memory term     = HLO_bytes / HBM_bw                (per chip)
+    collective term = collective_bytes / link_bw        (per chip)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD-partitioned,
+per-device module). Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO text (``compiled.as_text()``), build a symbol table of
+instruction shapes, and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async ``-start`` variants
+counted once; ``-done`` skipped).
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) anchors the "useful fraction":
+MODEL_FLOPS / HLO_FLOPs catches remat recompute and dispatch overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+__all__ = ["HW_V5E", "CellReport", "analyze_compiled", "parse_collective_bytes", "model_flops"]
+
+# TPU v5e hardware constants (per chip)
+HW_V5E = {
+    "peak_flops": 197e12,      # bf16 FLOP/s
+    "hbm_bw": 819e9,           # bytes/s
+    "link_bw": 50e9,           # bytes/s per ICI link
+    "hbm_bytes": 16 * 2**30,   # 16 GiB HBM
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _split_instr(rest: str) -> tuple[str, str, str] | None:
+    """'f32[512,512]{1,0} all-reduce(%dot), …' → (shape, op, argstring)."""
+    idx = rest.find("(")
+    # tuple-shaped outputs: '(f32[2]{0}, f32[2]{0}) op(…)' — skip the tuple
+    if idx == 0:
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                idx = rest.find("(", i + 1)
+                break
+        if idx is None or idx < 0:
+            return None
+    head = rest[:idx].rstrip()
+    parts = head.split()
+    if not parts:
+        return None
+    op = parts[-1]
+    shape = head[: len(head) - len(op)].strip()
+    return shape, op, rest[idx + 1:]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape string 'f32[16,128]{1,0}' or tuple '(f32[2], …)'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    # symbol table: instruction name -> shape string; plus parsed instr list
+    shapes: dict[str, str] = {}
+    parsed: list[tuple[str, str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        split = _split_instr(m.group(2))
+        if split is None:
+            continue
+        shape, op, args = split
+        shapes[m.group(1)] = shape
+        parsed.append((shape, op, args))
+
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for out_shape, op, args in parsed:
+        kind = next(
+            (c for c in _COLLECTIVES
+             if op == c or op == c + "-start" or op == c.replace("-", "_")),
+            None,
+        )
+        if kind is None:
+            continue
+        # operand list: up to the matching ')' (attrs like channel_id follow)
+        depth, arglist = 1, ""
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arglist += ch
+        nbytes = 0
+        for operand in re.findall(r"%?([\w.\-]+)", arglist):
+            if operand in shapes:
+                nbytes += _shape_bytes(shapes[operand])
+        if nbytes == 0:
+            nbytes = _shape_bytes(out_shape)     # fallback: output size
+        out[kind] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg, shape, n_params: int, n_params_active: int | None = None) -> float:
+    """6·N·D (train) / 2·N·D (inference forward); MoE uses active params."""
+    n = n_params_active if n_params_active is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def active_params(cfg, n_params: int) -> int:
+    """Subtract the inactive experts' weights (top_k of n_experts active)."""
+    if not cfg.n_experts:
+        return n_params
+    expert_matrices = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+    per_expert = expert_matrices * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = sum(
+        1 for s in (list(cfg.pattern) * cfg.repeats) + list(cfg.tail) if s.ffn == "moe"
+    )
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * n_moe_layers
+    return n_params - inactive
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_fraction: float            # MODEL_FLOPS / (HLO_FLOPs × devices)
+    memory_stats: dict[str, float]
+    step_time_s: float = 0.0          # max of the three terms
+    hw: dict = dataclasses.field(default_factory=lambda: dict(HW_V5E))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:18s} {self.shape:12s} {self.mesh:10s} "
+            f"compute={self.compute_s*1e3:9.3f}ms memory={self.memory_s*1e3:9.3f}ms "
+            f"collective={self.collective_s*1e3:9.3f}ms -> {self.dominant:10s} "
+            f"useful={self.useful_fraction:6.1%}"
+        )
+
+
+def analyze_compiled(compiled, *, arch: str, shape, mesh_desc: str, n_devices: int,
+                     cfg=None, n_params: int | None = None, hw: dict = HW_V5E) -> CellReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(compiled.as_text())
+
+    compute_s = flops / hw["peak_flops"]
+    memory_s = nbytes / hw["hbm_bw"]
+    collective_s = coll["total"] / hw["link_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = 0.0
+    useful = 0.0
+    if cfg is not None and n_params is not None:
+        mf = model_flops(cfg, shape, n_params, active_params(cfg, n_params))
+        total_hlo = flops * n_devices
+        useful = mf / total_hlo if total_hlo else 0.0
+
+    mem_stats = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem_stats[attr] = float(v)
+    except Exception:
+        pass
+
+    return CellReport(
+        arch=arch, shape=shape.name, mesh=mesh_desc, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=nbytes, collective_bytes=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_total=mf, useful_fraction=useful,
+        memory_stats=mem_stats, step_time_s=max(terms.values()), hw=dict(hw),
+    )

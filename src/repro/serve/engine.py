@@ -1,0 +1,120 @@
+"""Batched serving engine: request batching, prefill, greedy decode.
+
+Serving path for the inference shape cells. Requests are padded into fixed
+(batch, prompt_len) buckets, prefilled in one full-sequence pass (flash
+attention + cache fill), then decoded one token/step for the whole batch.
+Left-padding alignment keeps every live request at the same position so the
+decode step stays a single jitted program.
+
+The KV cache is sharded per ``state_pspecs`` (heads over tp, batch over dp;
+``seq_shard=True`` switches to sequence-sharded flash-decoding for
+long-context cells whose kv_heads < |tp|).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+from repro.models import decode_step, init_decode_state, prefill
+from repro.models.transformer import ArchConfig
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, mesh: Mesh, *,
+                 batch_size: int = 8, max_len: int = 512,
+                 cache_dtype=jnp.bfloat16, seq_shard: bool = False):
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.batch_size, self.max_len = batch_size, max_len
+        self.cache_dtype = cache_dtype
+
+        state_shapes = jax.eval_shape(
+            lambda: init_decode_state(cfg, batch_size, max_len, cache_dtype)
+        )
+        dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+        sspecs = shd.state_pspecs(state_shapes, seq_shard=seq_shard,
+                                  dp_size=dp_size, tp_size=mesh.shape["model"])
+        self._state_sh = shd.named_shardings(mesh, sspecs)
+        with jax.set_mesh(mesh):
+            self._prefill = jax.jit(
+                lambda p, s, b: prefill(cfg, p, s, b),
+                out_shardings=(None, self._state_sh),
+            )
+            self._decode = jax.jit(
+                lambda p, s, t, pos: decode_step(cfg, p, s, t, pos),
+                out_shardings=(None, self._state_sh),
+                donate_argnums=1,
+            )
+            self._fresh_state = jax.jit(
+                lambda: init_decode_state(cfg, batch_size, max_len, cache_dtype),
+                out_shardings=self._state_sh,
+            )
+
+    # ------------------------------------------------------------------
+    def _make_batch(self, requests: list[Request]) -> dict:
+        """Right-align prompts at a common length (left pad with 0)."""
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((self.batch_size, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt
+        batch = {"tokens": toks}
+        if self.cfg.frontend == "audio_stub":
+            batch["enc_embeds"] = np.zeros(
+                (self.batch_size, self.cfg.encoder_seq, self.cfg.d_model), np.float32
+            )
+        if self.cfg.frontend == "vision_stub":
+            batch["patch_embeds"] = np.zeros(
+                (self.batch_size, min(self.cfg.num_patches, plen), self.cfg.d_model),
+                np.float32,
+            )
+        return batch, plen
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Run a wave of ≤ batch_size requests to completion (greedy)."""
+        if len(requests) > self.batch_size:
+            raise ValueError(f"{len(requests)} requests > batch_size {self.batch_size}")
+        live = list(requests)
+        while len(live) < self.batch_size:   # pad the wave with a dummy
+            live.append(Request(request_id=-1, prompt=np.zeros(1, np.int32)))
+        batch, plen = self._make_batch(live)
+        with jax.set_mesh(self.mesh):
+            state = self._fresh_state()
+            logits, state = self._prefill(self.params, state, batch)
+            pos = plen
+            max_new = max(r.max_new_tokens for r in requests)
+            for _ in range(max_new):
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+                toks = np.asarray(jax.device_get(next_tok))
+                for i, r in enumerate(live):
+                    if r.request_id >= 0 and not r.done:
+                        r.output.append(int(toks[i]))
+                if all(r.done for r in live if r.request_id >= 0):
+                    break
+                if pos >= self.max_len:
+                    break
+                logits, state = self._decode(
+                    self.params, state, next_tok[:, None], jnp.int32(pos)
+                )
+                pos += 1
+        return requests
+
+    def throughput_tokens(self, requests: list[Request]) -> int:
+        return sum(len(r.output) for r in requests)

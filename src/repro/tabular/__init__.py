@@ -1,0 +1,24 @@
+"""The paper's four evaluated algorithms, re-implemented in pure JAX.
+
+Importing this package registers all four estimators (gbdt, mlp, forest,
+logreg) with the common-interface registry — the module bodies ARE the
+"glue code" whose line count reproduces the paper's Fig. 4.
+"""
+from repro.tabular.gbdt import GBDTEstimator, GBDTModel
+from repro.tabular.forest import ForestEstimator, ForestModel
+from repro.tabular.logreg import LogRegEstimator, LogRegModel
+from repro.tabular.mlp import MLPEstimator, MLPModel
+from repro.tabular.numpy_impls import NumpyLogRegEstimator, NumpyMLPEstimator
+
+__all__ = [
+    "GBDTEstimator",
+    "GBDTModel",
+    "ForestEstimator",
+    "ForestModel",
+    "LogRegEstimator",
+    "LogRegModel",
+    "MLPEstimator",
+    "MLPModel",
+    "NumpyLogRegEstimator",
+    "NumpyMLPEstimator",
+]

@@ -1,0 +1,107 @@
+"""Random forest in JAX — stands in for scikit-learn's RandomForestClassifier.
+
+Reuses the GBDT histogram tree builder (tabular/gbdt.py) with squared-error
+statistics: with g = −y and h = 1 the split gain reduces to variance
+reduction and the leaf value −G/H is the leaf's mean label, i.e. a
+probability estimate. Per tree: a Poisson(1) bootstrap (as row weights
+scaling g and h) and a random √F feature subset (as a gain mask). Tree
+predictions are averaged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import Estimator, TrainedModel, register_estimator
+from repro.tabular.gbdt import build_tree, predict_margin
+
+__all__ = ["ForestEstimator", "ForestModel"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
+)
+def _fit_forest(
+    bins, y, key, *, n_bins: int, n_trees: int, max_depth: int,
+    max_features: int, min_samples_leaf: float,
+):
+    r, f = bins.shape
+
+    def one_tree(_, key):
+        kb, kf = jax.random.split(key)
+        w = jax.random.poisson(kb, 1.0, (r,)).astype(jnp.float32)  # bootstrap
+        perm = jax.random.permutation(kf, f)
+        feat_mask = jnp.zeros((f,), bool).at[perm[:max_features]].set(True)
+        g = -y * w
+        h = w
+        feat, split, leaf_g, leaf_h = build_tree(
+            bins, g, h, n_bins=n_bins, max_depth=max_depth,
+            lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
+            feat_mask=feat_mask,
+        )
+        leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
+        return None, (feat, split, leaf_value)
+
+    keys = jax.random.split(key, n_trees)
+    _, trees = jax.lax.scan(one_tree, None, keys)
+    return trees
+
+
+class ForestModel(TrainedModel):
+    def __init__(self, feat, thresh, leaves, max_depth: int):
+        self.feat = np.asarray(feat)
+        self.thresh = np.asarray(thresh)
+        self.leaves = np.asarray(leaves)
+        self.max_depth = max_depth
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        out = np.zeros((x.shape[0],), np.float32)
+        for feat, thresh, leaves in zip(self.feat, self.thresh, self.leaves):
+            local = np.zeros(x.shape[0], np.int64)
+            for level in range(self.max_depth):
+                g = (1 << level) - 1 + local
+                local = 2 * local + (x[np.arange(x.shape[0]), feat[g]] > thresh[g])
+            out += leaves[local]
+        return np.clip(out / len(self.feat), 0.0, 1.0)
+
+
+@register_estimator
+class ForestEstimator(Estimator):
+    name = "forest"
+    data_format = "quantized_bins"
+
+    def default_params(self) -> dict[str, Any]:
+        return {"n_estimators": 100, "max_depth": 8, "min_samples_leaf": 1.0, "seed": 0}
+
+    def train(self, data, params: Mapping[str, Any]) -> ForestModel:
+        p = {**self.default_params(), **params}
+        bins, edges = data["bins"], data["edges"]
+        n_bins = int(data["n_bins"])
+        f = bins.shape[1]
+        max_depth = int(p["max_depth"])
+        feat, split, leaves = _fit_forest(
+            bins, data["y"], jax.random.key(int(p["seed"])),
+            n_bins=n_bins, n_trees=int(p["n_estimators"]), max_depth=max_depth,
+            max_features=max(1, int(np.sqrt(f))),
+            min_samples_leaf=float(p["min_samples_leaf"]),
+        )
+        edges_np = np.asarray(edges)               # (F, n_bins − 1)
+        feat_np, split_np = np.asarray(feat), np.asarray(split)
+        in_range = split_np < edges_np.shape[1]
+        thresh = np.where(
+            in_range,
+            edges_np[feat_np, np.minimum(split_np, edges_np.shape[1] - 1)],
+            np.float32(np.inf),
+        ).astype(np.float32)
+        return ForestModel(feat_np, thresh, leaves, max_depth)
+
+    @staticmethod
+    def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:
+        p = {"n_estimators": 100, "max_depth": 8, **dict(params)}
+        per_tree = n_rows * max(1, int(np.sqrt(n_features))) * int(p["max_depth"])
+        return int(p["n_estimators"]) * per_tree / 2e8

@@ -1,0 +1,84 @@
+"""Logistic regression in JAX — stands in for scikit-learn's LR (paper §V-A).
+
+Full-batch Adam on L2-regularised logistic loss; ``c`` is the inverse
+regularisation strength exactly as in sklearn's ``LogisticRegression(C=...)``.
+The whole training loop is one ``lax.scan`` under jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import Estimator, TrainedModel, register_estimator
+
+__all__ = ["LogRegEstimator", "LogRegModel"]
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit(x, y, c, lr, steps: int):
+    n, d = x.shape
+    w0 = jnp.zeros((d,), jnp.float32)
+    b0 = jnp.zeros((), jnp.float32)
+
+    def loss_fn(params):
+        w, b = params
+        logits = x @ w + b
+        nll = jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        reg = 0.5 / (c * n) * jnp.sum(w * w)
+        return nll + reg
+
+    grad_fn = jax.grad(loss_fn)
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, i):
+        (w, b), (mw, mb), (vw, vb) = carry
+        gw, gb = grad_fn((w, b))
+        mw = beta1 * mw + (1 - beta1) * gw
+        mb = beta1 * mb + (1 - beta1) * gb
+        vw = beta2 * vw + (1 - beta2) * gw * gw
+        vb = beta2 * vb + (1 - beta2) * gb * gb
+        t = i + 1.0
+        mw_h = mw / (1 - beta1**t)
+        mb_h = mb / (1 - beta1**t)
+        vw_h = vw / (1 - beta2**t)
+        vb_h = vb / (1 - beta2**t)
+        w = w - lr * mw_h / (jnp.sqrt(vw_h) + eps)
+        b = b - lr * mb_h / (jnp.sqrt(vb_h) + eps)
+        return ((w, b), (mw, mb), (vw, vb)), 0.0
+
+    init = ((w0, b0), (jnp.zeros_like(w0), b0), (jnp.zeros_like(w0), b0))
+    (params, _, _), _ = jax.lax.scan(step, init, jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+class LogRegModel(TrainedModel):
+    def __init__(self, w: np.ndarray, b: float):
+        self.w, self.b = np.asarray(w), float(b)
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        z = np.asarray(x, np.float32) @ self.w + self.b
+        return 1.0 / (1.0 + np.exp(-z))
+
+
+@register_estimator
+class LogRegEstimator(Estimator):
+    name = "logreg"
+    data_format = "dense_rows"
+
+    def default_params(self) -> dict[str, Any]:
+        return {"c": 1.0, "lr": 0.05, "steps": 200}
+
+    def train(self, data, params: Mapping[str, Any]) -> LogRegModel:
+        p = {**self.default_params(), **params}
+        w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]), jnp.float32(p["lr"]), int(p["steps"]))
+        return LogRegModel(np.asarray(w), float(b))
+
+    @staticmethod
+    def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:
+        steps = int(params.get("steps", 200))
+        flops = 4.0 * steps * n_rows * n_features  # fwd+bwd matvec
+        return flops / 2e9  # effective CPU-core FLOP/s; relative scale is what LPT needs

@@ -1,0 +1,119 @@
+"""Multilayer perceptron in JAX — stands in for the paper's TensorFlow MLPs.
+
+The paper's TF grid varies ``network`` ("128_128", "64_64_64", ...) and
+``learning_rate``; we accept the same string encoding. Minibatch Adam with a
+``lax.scan`` over steps; one jit per (architecture, n_steps) signature.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import Estimator, TrainedModel, register_estimator
+
+__all__ = ["MLPEstimator", "MLPModel"]
+
+
+def _init_params(key, dims):
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (d_in, d_out), jnp.float32) * jnp.sqrt(2.0 / d_in)
+        params.append((w, jnp.zeros((d_out,), jnp.float32)))
+    return params
+
+
+def _forward(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "steps", "batch_size"))
+def _fit(x, y, key, lr, dims: tuple[int, ...], steps: int, batch_size: int):
+    n = x.shape[0]
+    params = _init_params(key, dims)
+
+    def loss_fn(params, xb, yb):
+        logits = _forward(params, xb)
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * yb + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        )
+
+    opt_state = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params], [
+        (jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params
+    ]
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, i):
+        params, (m, v), key = carry
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (batch_size,), 0, n)
+        grads = jax.grad(loss_fn)(params, x[idx], y[idx])
+        t = i + 1.0
+        new_params, new_m, new_v = [], [], []
+        for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, m, v):
+            mw = beta1 * mw + (1 - beta1) * gw
+            mb = beta1 * mb + (1 - beta1) * gb
+            vw = beta2 * vw + (1 - beta2) * gw * gw
+            vb = beta2 * vb + (1 - beta2) * gb * gb
+            w = w - lr * (mw / (1 - beta1**t)) / (jnp.sqrt(vw / (1 - beta2**t)) + eps)
+            b = b - lr * (mb / (1 - beta1**t)) / (jnp.sqrt(vb / (1 - beta2**t)) + eps)
+            new_params.append((w, b))
+            new_m.append((mw, mb))
+            new_v.append((vw, vb))
+        return (new_params, (new_m, new_v), key), 0.0
+
+    (params, _, _), _ = jax.lax.scan(step, (params, opt_state, key), jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+class MLPModel(TrainedModel):
+    def __init__(self, params):
+        self.params = [(np.asarray(w), np.asarray(b)) for w, b in params]
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        h = np.asarray(x, np.float32)
+        for i, (w, b) in enumerate(self.params):
+            h = h @ w + b
+            if i < len(self.params) - 1:
+                h = np.maximum(h, 0)
+        return 1.0 / (1.0 + np.exp(-h[:, 0]))
+
+
+@register_estimator
+class MLPEstimator(Estimator):
+    name = "mlp"
+    data_format = "dense_rows"
+
+    def default_params(self) -> dict[str, Any]:
+        return {"network": "64_64", "learning_rate": 0.003, "steps": 300, "batch_size": 128, "seed": 0}
+
+    def train(self, data, params: Mapping[str, Any]) -> MLPModel:
+        p = {**self.default_params(), **params}
+        x, y = data["x"], data["y"]
+        hidden = tuple(int(h) for h in str(p["network"]).split("_"))
+        dims = (int(x.shape[1]),) + hidden + (1,)
+        bs = int(min(p["batch_size"], x.shape[0]))
+        params_out = _fit(
+            x, y, jax.random.key(int(p["seed"])), jnp.float32(p["learning_rate"]),
+            dims, int(p["steps"]), bs,
+        )
+        return MLPModel(params_out)
+
+    @staticmethod
+    def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:
+        p = str(params.get("network", "64_64"))
+        hidden = [int(h) for h in p.split("_")]
+        dims = [n_features] + hidden + [1]
+        flops_per_row = sum(6 * a * b for a, b in zip(dims[:-1], dims[1:]))  # fwd+bwd
+        steps = int(params.get("steps", 300))
+        bs = int(params.get("batch_size", 128))
+        return steps * min(bs, n_rows) * flops_per_row / 2e9

@@ -1,0 +1,9 @@
+from repro.train.optimizer import Optimizer, adafactor, adamw, make_optimizer, sgdm
+from repro.train.train_step import build_train_step, init_train_state, make_train_state_specs
+from repro.train.trainer import Trainer, TrainMetrics
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "make_optimizer", "sgdm",
+    "build_train_step", "init_train_state", "make_train_state_specs",
+    "Trainer", "TrainMetrics",
+]

@@ -1,0 +1,140 @@
+"""Optimizers in pure JAX: AdamW, Adafactor, SGD-momentum.
+
+Each optimizer is (init, update) over arbitrary param pytrees. Optimizer
+state trees mirror params, so the ZeRO-1 pspec transform (sharding.zero1)
+applies leaf-wise. Adafactor factors second moments for ≥2-D leaves — the
+memory-binding choice for the 480B MoE (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm", "make_optimizer", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), grads), gnorm
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+
+        def leaf(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moments: O(rows + cols) state for matrices — the only
+    optimizer whose state fits for 480B-param archs at 256 chips."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def leaf(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                row = beta * s["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * s["col"] + (1 - beta) * g2.mean(axis=-2)
+                row_mean = row.mean(axis=-1, keepdims=True)
+                vhat = (row / jnp.maximum(row_mean, eps))[..., None] * col[..., None, :]
+                upd = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+                new_s = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = gf / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # relative update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(upd * upd))
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+        out = jax.tree_util.tree_map(
+            leaf, grads, state, params,
+            is_leaf=lambda x: isinstance(x, dict) and ("row" in x or "v" in x),
+        )
+        is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_state = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_params, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+def sgdm(lr: float = 0.1, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        del step
+
+        def leaf(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(leaf, grads, state["m"], params)
+        is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+        return (
+            jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
+            {"m": jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)},
+        )
+
+    return Optimizer("sgdm", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "sgdm":
+        return sgdm(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

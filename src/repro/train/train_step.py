@@ -1,0 +1,160 @@
+"""Train-step construction: loss → grads → clip → optimizer, under GSPMD.
+
+Two DP modes:
+  * ``gspmd``          (default) — one jit, shardings in/out; XLA inserts all
+                        gradient collectives (overlapped with backward compute
+                        by the latency-hiding scheduler).
+  * ``shard_map_int8`` — data-parallel gradients computed per-shard under
+                        shard_map with an EXPLICIT int8-compressed all-reduce
+                        (distributed/collectives.py) + error feedback. 4×
+                        lower DP collective bytes (§Perf).
+
+``state_specs``/``init_state`` build the sharded TrainState (params + opt
+state + step), with optimizer state optionally ZeRO-1-sharded over data.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import compressed_psum
+from repro.models import init_params, train_loss
+from repro.models.transformer import ArchConfig
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+
+__all__ = ["build_train_step", "make_train_state_specs", "init_train_state", "opt_pspecs"]
+
+
+def opt_pspecs(opt_name: str, param_specs: Any, param_shapes: Any) -> Any:
+    """Optimizer-state pspecs derived from param pspecs."""
+    if opt_name in ("adamw",):
+        return {"m": param_specs, "v": param_specs}
+    if opt_name == "sgdm":
+        return {"m": param_specs}
+    if opt_name == "adafactor":
+        def leaf(spec: P, shape) -> dict:
+            nd = len(shape.shape)
+            spec = P(*(tuple(spec) + (None,) * (nd - len(spec))))
+            if nd >= 2:
+                return {
+                    "row": P(*spec[:-1]),
+                    "col": P(*(tuple(spec[:-2]) + (spec[-1],))),
+                }
+            return {"v": spec}
+
+        return jax.tree.map(
+            leaf, param_specs, param_shapes, is_leaf=lambda x: isinstance(x, P)
+        )
+    raise ValueError(opt_name)
+
+
+def make_train_state_specs(
+    cfg: ArchConfig, optimizer: Optimizer, *, fsdp: bool = False,
+    zero1: bool = True, data_size: int = 1,
+) -> tuple[Any, Any]:
+    """Returns (state_shapes, state_logical_pspecs)."""
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    p_specs = shd.param_pspecs(param_shapes, fsdp=fsdp)
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    o_specs = opt_pspecs(optimizer.name, p_specs, param_shapes)
+    if zero1:
+        o_specs = shd.zero1_pspecs(o_specs, opt_shapes, data_size)
+    state_shapes = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "params": param_shapes,
+        "opt_state": opt_shapes,
+    }
+    state_specs = {"step": P(), "params": p_specs, "opt_state": o_specs}
+    return state_shapes, state_specs
+
+
+def init_train_state(cfg: ArchConfig, optimizer: Optimizer, key: jax.Array,
+                     mesh: Mesh, state_specs: Any) -> Any:
+    """Materialise the sharded TrainState on ``mesh`` (jit with out_shardings)."""
+    out_sh = shd.named_shardings(mesh, state_specs)
+
+    def build(k):
+        params = init_params(cfg, k)
+        return {
+            "step": jnp.int32(0),
+            "params": params,
+            "opt_state": optimizer.init(params),
+        }
+
+    with jax.set_mesh(mesh):
+        return jax.jit(build, out_shardings=out_sh)(key)
+
+
+def build_train_step(
+    cfg: ArchConfig, optimizer: Optimizer, *, grad_clip: float = 1.0,
+    dp_mode: str = "gspmd", mesh: Mesh | None = None,
+):
+    """Returns step_fn(state, batch) → (state, metrics). Not yet jitted."""
+
+    def loss_fn(params, batch):
+        return train_loss(cfg, params, batch)
+
+    if dp_mode == "gspmd":
+
+        def step_fn(state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            new_params, new_opt = optimizer.update(
+                grads, state["opt_state"], state["params"], state["step"]
+            )
+            # non-finite guard: a NaN/inf step is DROPPED in-graph (works with
+            # donated buffers, unlike host-side state rollback)
+            bad = ~(jnp.isfinite(loss) & jnp.isfinite(gnorm))
+            keep = lambda new, old: jnp.where(bad, old, new)  # noqa: E731
+            new_state = {
+                "step": state["step"] + 1,
+                "params": jax.tree.map(keep, new_params, state["params"]),
+                "opt_state": jax.tree.map(keep, new_opt, state["opt_state"]),
+            }
+            return new_state, {"loss": loss, "grad_norm": gnorm}
+
+        return step_fn
+
+    if dp_mode == "shard_map_int8":
+        if mesh is None:
+            raise ValueError("shard_map_int8 needs the mesh")
+        axis_map = shd.infer_axis_map(mesh)
+        dp_axes = axis_map["dp"]
+        dp_axes = (dp_axes,) if isinstance(dp_axes, str) else tuple(dp_axes)
+
+        def grad_psum(params, batch):
+            # per-DP-shard grads; explicit compressed reduce over the dp axes.
+            # TP stays GSPMD (auto) — only dp is manual here.
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            for ax in dp_axes:
+                grads, _ = compressed_psum(grads, ax)
+                loss = jax.lax.pmean(loss, ax)
+            return loss, grads
+
+        def step_fn(state, batch):
+            p_spec_manual = jax.tree.map(lambda _: P(), state["params"])
+            b_specs = jax.tree.map(lambda _: P(dp_axes), batch)
+            loss, grads = jax.shard_map(
+                grad_psum, mesh=mesh, axis_names=set(dp_axes),
+                in_specs=(p_spec_manual, b_specs),
+                out_specs=(P(), p_spec_manual),
+                check_vma=False,
+            )(state["params"], batch)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            new_params, new_opt = optimizer.update(
+                grads, state["opt_state"], state["params"], state["step"]
+            )
+            return (
+                {"step": state["step"] + 1, "params": new_params, "opt_state": new_opt},
+                {"loss": loss, "grad_norm": gnorm},
+            )
+
+        return step_fn
+
+    raise ValueError(f"unknown dp_mode {dp_mode!r}")

@@ -1,0 +1,135 @@
+"""The training-loop driver: step loop + checkpoint/restart + fault recovery.
+
+Fault model (exercised in tests):
+  * process crash / preemption → restart resumes from the latest checkpoint;
+    the data stream is step-indexed so resumed training consumes exactly the
+    batches it would have seen (no skips, no repeats);
+  * transient step failure (injected via ``failure_hook``) → retry the step;
+    after ``max_retries`` the step is restored from the last checkpoint
+    (protects against corrupted device state after an XLA error);
+  * NaN loss → step is skipped (grads discarded), counter logged.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.distributed import sharding as shd
+from repro.models.transformer import ArchConfig
+from repro.train.optimizer import Optimizer
+from repro.train.train_step import build_train_step, init_train_state, make_train_state_specs
+
+__all__ = ["Trainer", "TrainMetrics"]
+
+
+class TrainMetrics:
+    def __init__(self):
+        self.history: list[dict[str, float]] = []
+        self.nan_skips = 0
+        self.retries = 0
+        self.restores = 0
+
+    def log(self, step: int, loss: float, gnorm: float, secs: float) -> None:
+        self.history.append(
+            {"step": step, "loss": loss, "grad_norm": gnorm, "seconds": secs}
+        )
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        optimizer: Optimizer,
+        mesh: Mesh,
+        stream,                        # ShardedStream
+        ckpt_dir: str | None = None,
+        ckpt_every: int = 50,
+        fsdp: bool = False,
+        zero1: bool = True,
+        grad_clip: float = 1.0,
+        dp_mode: str = "gspmd",
+        failure_hook: Callable[[int], None] | None = None,
+        max_retries: int = 2,
+    ):
+        self.cfg, self.optimizer, self.mesh, self.stream = cfg, optimizer, mesh, stream
+        self.ckpt = CheckpointManager(ckpt_dir, every=ckpt_every) if ckpt_dir else None
+        self.metrics = TrainMetrics()
+        self.failure_hook = failure_hook
+        self.max_retries = max_retries
+
+        data_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+        self._shapes, self._specs = make_train_state_specs(
+            cfg, optimizer, fsdp=fsdp, zero1=zero1, data_size=data_size
+        )
+        step_fn = build_train_step(
+            cfg, optimizer, grad_clip=grad_clip, dp_mode=dp_mode, mesh=mesh
+        )
+        sh = shd.named_shardings(mesh, self._specs)
+        self._step_fn = jax.jit(step_fn, in_shardings=(sh, None),
+                                out_shardings=(sh, None), donate_argnums=0)
+        self._state_shardings = sh
+        self.state: Any = None
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self, seed: int = 0) -> int:
+        """Fresh init, or resume from the latest checkpoint if one exists."""
+        if self.ckpt and latest_step(self.ckpt.directory) is not None:
+            step, tree = self.ckpt.restore_latest(shardings=self._state_shardings)
+            self.state = tree
+            self.metrics.restores += 1
+            return int(step)
+        with jax.set_mesh(self.mesh):
+            self.state = init_train_state(
+                self.cfg, self.optimizer, jax.random.key(seed), self.mesh, self._specs
+            )
+        return 0
+
+    def run(self, n_steps: int) -> TrainMetrics:
+        if self.state is None:
+            start = self.init_or_restore()
+        else:
+            start = int(jax.device_get(self.state["step"]))
+        step = start
+        while step < n_steps:
+            batch = self.stream.get(step)
+            t0 = time.perf_counter()
+            tries = 0
+            while True:
+                try:
+                    if self.failure_hook is not None:
+                        self.failure_hook(step)     # may raise (injected fault)
+                    with jax.set_mesh(self.mesh):
+                        new_state, m = self._step_fn(self.state, batch)
+                    loss = float(jax.device_get(m["loss"]))
+                    break
+                except Exception:
+                    tries += 1
+                    self.metrics.retries += 1
+                    if tries > self.max_retries:
+                        # device state suspect → restore last checkpoint
+                        if self.ckpt and latest_step(self.ckpt.directory) is not None:
+                            _, self.state = self.ckpt.restore_latest(
+                                shardings=self._state_shardings
+                            )
+                            self.metrics.restores += 1
+                            step = int(jax.device_get(self.state["step"]))
+                            batch = self.stream.get(step)
+                            tries = 0
+                        else:
+                            raise
+            if np.isnan(loss):
+                self.metrics.nan_skips += 1      # update was dropped in-graph
+            self.state = new_state
+            self.metrics.log(step, loss, float(jax.device_get(m["grad_norm"])),
+                             time.perf_counter() - t0)
+            step += 1
+            if self.ckpt:
+                self.ckpt.maybe_save(step, self.state)
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.metrics

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only dryrun.py forces 512 host devices.
+Multi-device tests spawn subprocesses (see test_distributed.py helpers)."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_higgs_like
+
+
+@pytest.fixture(scope="session")
+def higgs_small():
+    data = make_higgs_like(2000, seed=7)
+    train, valid = data.split((0.8, 0.2), seed=1)
+    train, mu, sd = train.standardize()
+    valid, _, _ = valid.standardize(mu, sd)
+    return train, valid
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,64 @@
+"""Dry-run machinery on a SMALL mesh (subprocess with 8 fake devices):
+build_cell + lower + compile + roofline report for representative cells.
+The full 16×16 / 2×16×16 sweeps run via ``python -m repro.launch.dryrun``
+(results under experiments/); this test keeps the machinery honest in CI.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=900,
+        env={"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2_1_5b", "train_4k"),
+    ("rwkv6_7b", "decode_32k"),
+    ("qwen3_moe_235b", "train_4k"),
+    ("whisper_medium", "prefill_32k"),
+])
+def test_cell_compiles_on_small_mesh(arch, shape):
+    out = run_sub(f"""
+        import jax, json
+        from jax.sharding import AxisType
+        from repro.launch.dryrun import run_cell
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rep, secs = run_cell("{arch}", "{shape}", mesh=mesh, scan=True,
+                             verbose=False)
+        print("REPORT", json.dumps({{
+            "dominant": rep.dominant,
+            "flops": rep.flops_per_device,
+            "coll": rep.collective_bytes["total"],
+        }}))
+    """)
+    rep = json.loads(out.split("REPORT ")[1])
+    assert rep["dominant"] in ("compute", "memory", "collective")
+    assert rep["flops"] > 0
+    assert rep["coll"] > 0          # sharded step must communicate
+
+
+def test_multipod_mesh_small():
+    """pod axis shards: same cell compiles on a (2,2,2) pod mesh."""
+    out = run_sub("""
+        import jax
+        from jax.sharding import AxisType
+        from repro.launch.dryrun import run_cell
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+        rep, _ = run_cell("tinyllama_1_1b", "train_4k", mesh=mesh, scan=True,
+                          verbose=False)
+        print("OK", rep.mesh, rep.n_devices)
+    """)
+    assert "OK 2x2x2 8" in out

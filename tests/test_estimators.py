@@ -1,0 +1,93 @@
+"""Tabular estimator quality + property tests (the paper's 4 algorithms)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.tabular  # noqa: F401
+from repro.core import DenseMatrix, auc, convert, get_estimator, estimator_names
+from repro.data.synthetic import make_secom_like
+
+
+def test_all_four_registered():
+    assert set(estimator_names()) >= {"gbdt", "mlp", "forest", "logreg"}
+
+
+@pytest.mark.parametrize("name,params,min_auc", [
+    ("gbdt", {"round": 20, "max_depth": 5, "max_bin": 64}, 0.90),
+    ("mlp", {"network": "32_32", "steps": 400}, 0.90),
+    ("forest", {"n_estimators": 30, "max_depth": 8}, 0.85),
+    ("logreg", {"c": 0.3}, 0.80),
+])
+def test_estimator_beats_chance_on_higgs(higgs_small, name, params, min_auc):
+    train, valid = higgs_small
+    est = get_estimator(name)
+    model, secs = est.run(train, params)
+    score = auc(valid.y, model.predict_proba(valid.x))
+    assert score >= min_auc, f"{name} auc={score:.3f} < {min_auc}"
+    assert secs > 0
+
+
+def test_gbdt_on_imbalanced_secom_like():
+    data = make_secom_like(n_rows=800, n_features=120, seed=3)
+    train, valid = data.split((0.8, 0.2), seed=0)
+    train, mu, sd = train.standardize()
+    valid, _, _ = valid.standardize(mu, sd)
+    est = get_estimator("gbdt")
+    model, _ = est.run(train, {"round": 30, "max_depth": 4, "max_bin": 64})
+    score = auc(valid.y, model.predict_proba(valid.x))
+    assert score > 0.6                          # imbalanced + noisy: modest bar
+
+
+def test_gbdt_more_rounds_fits_train_better(higgs_small):
+    train, _ = higgs_small
+    est = get_estimator("gbdt")
+    m_small, _ = est.run(train, {"round": 3, "max_depth": 4})
+    m_big, _ = est.run(train, {"round": 40, "max_depth": 4})
+    auc_small = auc(train.y, m_small.predict_proba(train.x))
+    auc_big = auc(train.y, m_big.predict_proba(train.x))
+    assert auc_big > auc_small
+
+
+def test_gbdt_predictions_are_probabilities(higgs_small):
+    train, valid = higgs_small
+    model, _ = get_estimator("gbdt").run(train, {"round": 5, "max_depth": 3})
+    p = model.predict_proba(valid.x)
+    assert p.shape == (valid.n_rows,)
+    assert np.all((p >= 0) & (p <= 1))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_forest_prob_range_property(seed):
+    """Forest output is a mean of leaf means of {0,1} labels → always [0,1]."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(120, 6)).astype(np.float32)
+    y = (x[:, 0] * x[:, 1] > 0).astype(np.float32)
+    d = DenseMatrix(x, y)
+    model, _ = get_estimator("forest").run(d, {"n_estimators": 4, "max_depth": 4})
+    p = model.predict_proba(x)
+    assert np.all((p >= 0.0) & (p <= 1.0))
+
+
+def test_quantized_bins_roundtrip_consistency(higgs_small):
+    """bin > s  ⇔  x > edges[s] — the split-threshold identity GBDT's
+    float-space predictor relies on."""
+    train, _ = higgs_small
+    q = convert(train, "quantized_bins")
+    bins = np.asarray(q["bins"])
+    edges = np.asarray(q["edges"])             # (F, B−1)
+    x = train.x
+    f = 3
+    for s in (5, 100, 200):
+        if s >= edges.shape[1]:
+            continue
+        lhs = bins[:, f] > s
+        rhs = x[:, f] > edges[f, s]
+        np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_mlp_cost_model_monotonic():
+    est = get_estimator("mlp")
+    small = est.estimate_cost({"network": "32", "steps": 100}, 1000, 28)
+    big = est.estimate_cost({"network": "256_256", "steps": 100}, 1000, 28)
+    assert big > small

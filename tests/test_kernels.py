@@ -1,0 +1,181 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+sweeping shapes and dtypes (the tests/ contract for kernels/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,t,d,causal,window",
+    [
+        (1, 2, 2, 128, 64, True, None),
+        (2, 4, 2, 256, 64, True, None),      # GQA
+        (1, 4, 1, 256, 128, True, None),     # MQA
+        (1, 2, 2, 256, 64, False, None),     # bidirectional
+        (1, 2, 1, 256, 64, True, 64),        # sliding window
+    ],
+)
+def test_flash_attention_vs_ref(rng, b, hq, hkv, t, d, causal, window, dtype):
+    q = _rand(rng, (b, hq, t, d), dtype)
+    k = _rand(rng, (b, hkv, t, d), dtype)
+    v = _rand(rng, (b, hkv, t, d), dtype)
+    out_k = ops.attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_k=128, force="kernel")
+    out_r = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_softcap(rng):
+    q = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    out_k = ops.attention(q, k, v, logit_softcap=30.0, block_q=64, block_k=64,
+                          force="kernel")
+    out_r = ref.attention_ref(q, k, v, logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+
+
+def test_attention_xla_blocked_matches_ref(rng):
+    q = _rand(rng, (1, 2, 4096, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 4096, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 4096, 64), jnp.float32)
+    for window in (None, 512):
+        blocked = ref.attention_xla_blocked(q, k, v, causal=True, window=window,
+                                            block_q=1024)
+        full = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_prefix(rng):
+    """Decode over a cache == last row of full attention."""
+    b, hq, hkv, t, d = 2, 4, 2, 64, 32
+    q_all = _rand(rng, (b, hq, t, d), jnp.float32)
+    k_all = _rand(rng, (b, hkv, t, d), jnp.float32)
+    v_all = _rand(rng, (b, hkv, t, d), jnp.float32)
+    full = ref.attention_ref(q_all, k_all, v_all, causal=True)
+    cache_k = jnp.pad(k_all, ((0, 0), (0, 0), (0, 16), (0, 0)))
+    cache_v = jnp.pad(v_all, ((0, 0), (0, 0), (0, 16), (0, 0)))
+    dec = ref.decode_attention_ref(q_all[:, :, -1:], cache_k, cache_v, t)
+    np.testing.assert_allclose(np.asarray(dec[:, :, 0]), np.asarray(full[:, :, -1]),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,d", [(1, 64, 128), (2, 128, 256), (1, 8, 128)])
+def test_rglru_vs_ref(rng, b, t, d):
+    x = _rand(rng, (b, t, d), jnp.float32)
+    ig = _rand(rng, (b, t, d), jnp.float32)
+    rg_ = _rand(rng, (b, t, d), jnp.float32)
+    a = _rand(rng, (d,), jnp.float32)
+    yk, hk = ops.rglru(x, ig, rg_, a, force="kernel")
+    yr, hr = ref.rglru_ref(x, ig, rg_, a)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=2e-5)
+
+
+def test_rglru_state_chaining(rng):
+    """Running [0:T] == running [0:T/2] then [T/2:T] with carried state."""
+    b, t, d = 1, 64, 128
+    x = _rand(rng, (b, t, d), jnp.float32)
+    ig = _rand(rng, (b, t, d), jnp.float32)
+    rg_ = _rand(rng, (b, t, d), jnp.float32)
+    a = _rand(rng, (d,), jnp.float32)
+    y_full, h_full = ref.rglru_ref(x, ig, rg_, a)
+    h = None
+    ys = []
+    for lo, hi in ((0, t // 2), (t // 2, t)):
+        y, h = ref.rglru_ref(x[:, lo:hi], ig[:, lo:hi], rg_[:, lo:hi], a, h)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,t,dk,dv,chunk", [
+    (1, 2, 64, 32, 32, 16),
+    (2, 2, 128, 64, 64, 64),
+    (1, 1, 96, 16, 64, 32),
+])
+def test_rwkv6_vs_ref(rng, b, h, t, dk, dv, chunk):
+    r = _rand(rng, (b, h, t, dk), jnp.float32)
+    k = _rand(rng, (b, h, t, dk), jnp.float32)
+    v = _rand(rng, (b, h, t, dv), jnp.float32)
+    w = _rand(rng, (b, h, t, dk), jnp.float32)
+    u = _rand(rng, (h, dk), jnp.float32)
+    yk, sk = ops.rwkv6(r, k, v, w, u, chunk=chunk, force="kernel")
+    yr, sr = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=5e-3)
+
+
+def test_rwkv6_state_chaining(rng):
+    b, h, t, dk, dv = 1, 2, 64, 32, 32
+    r = _rand(rng, (b, h, t, dk), jnp.float32)
+    k = _rand(rng, (b, h, t, dk), jnp.float32)
+    v = _rand(rng, (b, h, t, dv), jnp.float32)
+    w = _rand(rng, (b, h, t, dk), jnp.float32)
+    u = _rand(rng, (h, dk), jnp.float32)
+    y_full, s_full = ref.rwkv6_ref(r, k, v, w, u)
+    s = None
+    ys = []
+    for lo, hi in ((0, 32), (32, 64)):
+        y, s = ref.rwkv6_ref(r[:, :, lo:hi], k[:, :, lo:hi], v[:, :, lo:hi],
+                             w[:, :, lo:hi], u, s)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 2)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,f,nb,nn", [(100, 5, 8, 1), (500, 7, 16, 4), (1000, 3, 64, 8)])
+def test_histogram_all_paths_agree(rng, r, f, nb, nn):
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = _rand(rng, (r,), jnp.float32)
+    h = jnp.abs(_rand(rng, (r,), jnp.float32)) + 0.1
+    node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+    oracle = ref.histogram_ref(bins, g, h, node, nn, nb)
+    kernel = ops.histogram(bins, g, h, node, n_nodes=nn, n_bins=nb, force="kernel")
+    scatter = ops.histogram(bins, g, h, node, n_nodes=nn, n_bins=nb)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(oracle), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(scatter), np.asarray(oracle), atol=1e-4)
+
+
+def test_histogram_conservation(rng):
+    """Σ over all cells of the grad histogram == Σ grads (per feature)."""
+    r, f, nb, nn = 300, 4, 16, 4
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = _rand(rng, (r,), jnp.float32)
+    h = jnp.ones((r,), jnp.float32)
+    node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+    hist = ops.histogram(bins, g, h, node, n_nodes=nn, n_bins=nb, force="kernel")
+    total_g = np.asarray(hist[..., 0].sum(axis=(0, 2)))
+    np.testing.assert_allclose(total_g, float(g.sum()) * np.ones(f), rtol=1e-4)
+    total_h = np.asarray(hist[..., 1].sum(axis=(0, 2)))
+    np.testing.assert_allclose(total_h, r * np.ones(f), rtol=1e-5)

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step +
+prefill/decode consistency + shape/NaN assertions (the assignment's
+required smoke contract), for ALL 10 archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (
+    count_params,
+    decode_step,
+    forward_hidden,
+    init_decode_state,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+
+def _batch(cfg, rng, b=2, s=32):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "audio_stub":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_train_step(arch, rng):
+    """Reduced config: forward + loss + one grad step, no NaNs, shapes OK."""
+    cfg = configs.get_smoke_config(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, rng)
+    loss, grads = jax.value_and_grad(lambda p: train_loss(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    assert 3.0 < float(loss) < 12.0            # ≈ ln(vocab) at init
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    hidden = forward_hidden(cfg, params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(hidden).any())
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_prefill_decode_consistency(arch, rng):
+    """Prefill logits at position S−1 ≈ decode-step logits after feeding
+    S−1 tokens — the serving path computes the same function as training."""
+    cfg = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")   # tight compare
+    if cfg.n_experts:
+        # capacity-based token dropping legitimately differs between a
+        # full-sequence prefill and a 1-token decode; remove drops so the
+        # comparison tests the MATH equivalence of the two paths
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = init_params(cfg, jax.random.key(1))
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    state = init_decode_state(cfg, b, 64, cache_dtype=jnp.float32)
+    logits_pre, state2 = prefill(cfg, params, state, batch)
+    # feed the same prefix token-by-token through decode_step
+    state_d = init_decode_state(cfg, b, 64, cache_dtype=jnp.float32)
+    if cfg.encoder_layers:
+        # decode needs the cross-KV from a prefill; use a 1-token prefill
+        _, state_d = prefill(cfg, params, state_d,
+                             {**batch, "tokens": batch["tokens"][:, :1]})
+        start = 1
+    else:
+        start = 0
+        if cfg.frontend == "vision_stub":
+            pytest.skip("stepwise decode from scratch undefined with patch stub")
+    logits_d = None
+    for i in range(start, s):
+        logits_d, state_d = decode_step(cfg, params, state_d,
+                                        batch["tokens"][:, i:i + 1], jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(logits_pre),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_match_published():
+    expected = {
+        "qwen2_1_5b": (1.4e9, 1.7e9),
+        "gemma3_12b": (11e9, 13e9),
+        "tinyllama_1_1b": (1.0e9, 1.2e9),
+        "gemma_2b": (2.0e9, 2.7e9),
+        "rwkv6_7b": (7.0e9, 8.0e9),
+        "whisper_medium": (0.6e9, 0.9e9),
+        "recurrentgemma_9b": (8.5e9, 10e9),
+        "qwen3_moe_235b": (230e9, 240e9),
+        "arctic_480b": (460e9, 490e9),
+        "internvl2_1b": (0.4e9, 0.9e9),   # backbone only (ViT stubbed)
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params(configs.get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_live_cells_enumeration():
+    cells = configs.live_cells()
+    assert len(cells) == 33
+    assert ("rwkv6_7b", "long_500k") in cells
+    assert ("gemma3_12b", "long_500k") in cells
+    assert ("recurrentgemma_9b", "long_500k") in cells
+    assert ("qwen2_1_5b", "long_500k") not in cells
+
+
+def test_loss_chunking_invariance(rng):
+    """Chunked CE == unchunked CE (the memory optimisation is exact)."""
+    cfg = configs.get_smoke_config("tinyllama_1_1b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, rng, 2, 32)
+    l_small = train_loss(dataclasses.replace(cfg, loss_chunk=8), params, batch)
+    l_big = train_loss(dataclasses.replace(cfg, loss_chunk=512), params, batch)
+    l_unrolled = train_loss(
+        dataclasses.replace(cfg, loss_chunk=8, unroll_loss=True), params, batch)
+    np.testing.assert_allclose(float(l_small), float(l_big), rtol=2e-5)
+    np.testing.assert_allclose(float(l_small), float(l_unrolled), rtol=2e-5)
+
+
+def test_scan_vs_unrolled_stack(rng):
+    """scan_layers=False is numerically identical to the scan form."""
+    cfg = configs.get_smoke_config("gemma3_12b")
+    cfg32 = dataclasses.replace(cfg, compute_dtype="float32")
+    params = init_params(cfg32, jax.random.key(0))
+    batch = _batch(cfg32, rng, 2, 16)
+    h_scan = forward_hidden(cfg32, params, batch)
+    h_unroll = forward_hidden(
+        dataclasses.replace(cfg32, scan_layers=False), params, batch)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_unroll),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_label_masking(rng):
+    cfg = configs.get_smoke_config("qwen2_1_5b")
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, rng, 2, 32)
+    full = train_loss(cfg, params, batch)
+    masked_labels = batch["labels"].at[:, 16:].set(-1)
+    half = train_loss(cfg, params, {**batch, "labels": masked_labels})
+    assert np.isfinite(float(half))
+    assert abs(float(half) - float(full)) > 1e-6   # actually different rows
