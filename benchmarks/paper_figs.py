@@ -20,8 +20,9 @@ import repro.tabular as tabular_pkg
 from repro.core import (
     METRICS,
     GridBuilder,
-    ModelSearcher,
     SamplingProfiler,
+    SearchSpec,
+    Session,
     attach_costs,
     enumerate_tasks,
     schedule,
@@ -31,6 +32,20 @@ from repro.core import (
 from repro.data.synthetic import make_higgs_like, make_secom_like
 
 Row = tuple[str, float, str]
+
+
+def _run_search(spaces, train, *, policy="lpt", n_executors=4, rate=None, seed=0):
+    """One Session run; returns (session, multi_model)."""
+    spec = SearchSpec(
+        spaces=tuple(spaces),
+        n_executors=n_executors,
+        policy=policy,
+        profiler=SamplingProfiler(rate) if rate is not None else None,
+        seed=seed,
+    )
+    session = Session(spec)
+    multi = session.search(train)
+    return session, multi
 
 
 def _datasets(rows=6000):
@@ -92,12 +107,8 @@ def fig3_profiling_ratio() -> list[Row]:
     rows: list[Row] = []
     for ds, (train, valid, _) in _datasets().items():
         rate = 0.01 if ds == "higgs" else 0.03       # the paper's rates
-        s = ModelSearcher(n_executors=4).set_scheduler("lpt").set_profiler(
-            SamplingProfiler(rate))
-        for sp in _spaces():
-            s.add_space(sp)
-        s.model_search(train)
-        rows.append((f"fig3.profiling_ratio.{ds}", s.stats.profiling_ratio,
+        session, _ = _run_search(_spaces(), train, policy="lpt", rate=rate)
+        rows.append((f"fig3.profiling_ratio.{ds}", session.stats.profiling_ratio,
                      f"paper: <8% | sampled {rate:.0%}"))
     return rows
 
@@ -153,12 +164,8 @@ def fig5_scheduling(n_sim_tasks: int = 1211) -> list[Row]:
                      f"random={100 * ideal / t_rnd:.1f}% dyn={100 * ideal / t_dyn:.1f}%"))
     # real measurement at 4 executors
     for policy in ("lpt", "random"):
-        s = ModelSearcher(n_executors=4, seed=0).set_scheduler(policy)
-        s.set_profiler(SamplingProfiler(0.05))
-        for sp in _spaces():
-            s.add_space(sp)
         t0 = time.perf_counter()
-        s.model_search(train)
+        _run_search(_spaces(), train, policy=policy, rate=0.05)
         rows.append((f"fig5.real_4exec.{policy}_s", time.perf_counter() - t0,
                      "wall time, 4 threads"))
     return rows
@@ -180,13 +187,10 @@ def fig6_frameworks() -> list[Row]:
         }
         for name, (spaces, policy) in variants.items():
             n_exec = 1 if name == "mllib_style" else 4
-            s = ModelSearcher(n_executors=n_exec, seed=0).set_scheduler(policy)
-            if policy == "lpt":
-                s.set_profiler(SamplingProfiler(0.03))
-            for sp in spaces:
-                s.add_space(sp)
             t0 = time.perf_counter()
-            multi = s.model_search(train)
+            _, multi = _run_search(spaces, train, policy=policy,
+                                   n_executors=n_exec,
+                                   rate=0.03 if policy == "lpt" else None)
             secs = time.perf_counter() - t0
             best = multi.best(valid).score if len(multi) else float("nan")
             rows.append((f"fig6.{ds}.{name}_s", secs, f"best_auc={best:.4f}"))
@@ -198,11 +202,7 @@ def fig7_auc_parity() -> list[Row]:
     for ds, (train, valid, test) in _datasets(rows=4000).items():
         best_by_policy = {}
         for policy in ("lpt", "random", "round_robin", "dynamic"):
-            s = ModelSearcher(n_executors=4, seed=0).set_scheduler(policy)
-            s.set_profiler(SamplingProfiler(0.03))
-            for sp in _spaces():
-                s.add_space(sp)
-            multi = s.model_search(train)
+            _, multi = _run_search(_spaces(), train, policy=policy, rate=0.03)
             best = multi.best(valid)
             model = multi.model_for(best.task.task_id)
             best_by_policy[policy] = METRICS["auc"](
@@ -213,13 +213,38 @@ def fig7_auc_parity() -> list[Row]:
         # worst single-algorithm search (the paper's "Worst result" bars)
         worst = 1.0
         for sp in _spaces():
-            s = ModelSearcher(n_executors=4).set_scheduler("lpt").set_profiler(
-                SamplingProfiler(0.03))
-            s.add_space(sp)
-            multi = s.model_search(train)
+            _, multi = _run_search([sp], train, policy="lpt", rate=0.03)
             best = multi.best(valid)
             model = multi.model_for(best.task.task_id)
             worst = min(worst, METRICS["auc"](test.y, model.predict_proba(test.x)))
         rows.append((f"fig7.{ds}.auc.worst_single_algo", worst,
                      "multi-algorithm search beats any single family"))
     return rows
+
+
+def session_streaming() -> list[Row]:
+    """Time-to-first-result vs total search time on the streaming Session API.
+
+    The blocking ModelSearcher flow surfaced nothing until the whole search
+    finished; Session.results() yields each TaskResult as it completes, so a
+    monitor (or successive-halving scheduler) sees the first model at a small
+    fraction of the total wall time.
+    """
+    train, _, _ = _datasets(rows=4000)["higgs"]
+    spec = SearchSpec(spaces=_spaces(), n_executors=4, policy="lpt",
+                      profiler=SamplingProfiler(0.03))
+    session = Session(spec)
+    t0 = time.perf_counter()
+    first = None
+    n = 0
+    for _ in session.results(train):
+        n += 1
+        if first is None:
+            first = time.perf_counter() - t0
+    total = time.perf_counter() - t0
+    return [
+        ("session.first_result_s", first, f"{n} tasks total"),
+        ("session.total_s", total, "same search, end to end"),
+        ("session.first_result_frac", first / total if total else 0.0,
+         "streaming: first model visible at this fraction of the search"),
+    ]

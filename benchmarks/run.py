@@ -20,6 +20,7 @@ BENCHES = {
     "fig5": paper_figs.fig5_scheduling,
     "fig6": paper_figs.fig6_frameworks,
     "fig7": paper_figs.fig7_auc_parity,
+    "session_stream": paper_figs.session_streaming,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
 }

@@ -3,9 +3,10 @@ TPU-native adaptation of the paper (DESIGN.md §2).
 
 The search space is (architecture × learning rate); each task trains its
 config for a few steps on a mesh SLICE (executors = submeshes, tasks use
-DP×TP inside their slice). Costs come from the analytic profiler, and the
-LPT scheduler balances slices. Run with fake host devices to see real
-slicing:
+DP×TP inside their slice). Costs come from the analytic profiler, the LPT
+scheduler balances slices, and results STREAM off the pool's
+ExecutorBackend.submit iterator as each slice finishes a task. Run with
+fake host devices to see real slicing:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/distributed_search.py
@@ -15,18 +16,17 @@ import time
 import jax
 
 from repro import configs
-from repro.core import GridBuilder, TrainTask, schedule
-from repro.core.executor import MeshSliceExecutorPool
+from repro.core import GridBuilder, MeshSliceExecutorPool, TrainTask, schedule
 from repro.data.pipeline import make_lm_stream
+from repro.launch.mesh import compat_make_mesh
 from repro.models import count_params
 from repro.train import Trainer, make_optimizer
 
 N_SLICES = min(2, jax.device_count())
 STEPS = 5
 
-mesh = jax.make_mesh(
-    (N_SLICES, jax.device_count() // N_SLICES), ("data", "model"),
-    axis_types=(jax.sharding.AxisType.Auto,) * 2,
+mesh = compat_make_mesh(
+    (N_SLICES, jax.device_count() // N_SLICES), ("data", "model")
 )
 
 spaces = [
@@ -59,8 +59,13 @@ def task_runner(task, slice_mesh, _data):
 
 
 pool = MeshSliceExecutorPool(mesh, N_SLICES, task_runner)
-results = pool.run(assignment, None)
-print("results (lower loss after 5 steps = faster learner at this lr):")
-for r in sorted(results, key=lambda r: (r.model if r.ok else float("inf"))):
+print("results stream in as each slice finishes a task:")
+results = []
+for r in pool.submit(assignment, None):
     mark = f"loss={r.model:.4f}" if r.ok else f"ERROR: {r.error}"
     print(f"  slice {r.executor_id}  {r.task.key():42s} {mark}")
+    results.append(r)
+ranked = sorted((r for r in results if r.ok), key=lambda r: r.model)
+if ranked:
+    print(f"fastest learner at its lr after {STEPS} steps: "
+          f"{ranked[0].task.key()} (loss={ranked[0].model:.4f})")

@@ -1,14 +1,15 @@
 """Quickstart — the paper's Fig. 1 example, in this framework.
 
-Defines a search space over THREE implementation families (jax GBDT
+Declares a search space over THREE implementation families (jax GBDT
 standing in for XGBoost, jax MLP for TensorFlow, logreg/forest for
-scikit-learn), runs the profile-scheduled distributed search, and
-validates every produced model:
+scikit-learn) as one frozen SearchSpec, streams results from a Session
+as the profile-scheduled distributed search runs, and validates every
+produced model:
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import repro.tabular  # noqa: F401 — registers all implementations
-from repro.core import GridBuilder, ModelSearcher, SamplingProfiler
+from repro.core import GridBuilder, SamplingProfiler, SearchSpec, Session
 from repro.data.synthetic import make_higgs_like
 
 # ----- search space (paper Fig. 1, first half) ---------------------------
@@ -25,23 +26,31 @@ sklearn_lr_grid = (GridBuilder("logreg")
                    .add_grid("c", [0.011, 0.033, 0.1, 0.3, 0.9])
                    .build())
 
+# ----- declarative spec (replaces the mutable builder) -------------------
+spec = SearchSpec(
+    spaces=[xgb_grid, tf_grid, sklearn_lr_grid],
+    n_executors=4,
+    policy="lpt",
+    profiler=SamplingProfiler(0.01),
+)
+
 # ----- model search (paper Fig. 1, second half) --------------------------
 data = make_higgs_like(8000, seed=0)
 train_df, validate_df = data.split((0.8, 0.2), seed=0)
 train_df, mu, sd = train_df.standardize()
 validate_df, _, _ = validate_df.standardize(mu, sd)
 
-searcher = (ModelSearcher(n_executors=4)
-            .add_space(xgb_grid)
-            .add_space(tf_grid)
-            .add_space(sklearn_lr_grid)
-            .set_scheduler("lpt")
-            .set_profiler(SamplingProfiler(0.01)))
-multi_model = searcher.model_search(train_df)
+session = Session(spec)
+done = 0
+for result in session.results(train_df):      # streams as tasks complete
+    done += 1
+    if done % 10 == 0:
+        print(f"  ... {done}/{spec.n_grid_tasks} tasks done")
+multi_model = session.multi_model()
 scores = multi_model.validate_all(validate_df, metric="auc")
 
 print(f"searched {len(scores)} configurations "
-      f"(profiling {searcher.stats.profiling_ratio:.1%} of total time)")
+      f"(profiling {session.stats.profiling_ratio:.1%} of total time)")
 for m in scores[:5]:
     print(f"  auc={m.score:.4f}  {m.task.key()}")
 print(f"best: {scores[0].task.key()}")

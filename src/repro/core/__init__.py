@@ -2,7 +2,9 @@
 
 Public API re-exports; see DESIGN.md §1 for the paper mapping.
 """
+from repro.core.backend import ExecutorBackend
 from repro.core.data_format import DenseMatrix, available_formats, convert
+from repro.core.executor import LocalExecutorPool, MeshSliceExecutorPool
 from repro.core.grid import GridBuilder, SearchSpace, enumerate_tasks
 from repro.core.interface import (
     Estimator,
@@ -12,6 +14,7 @@ from repro.core.interface import (
     estimator_names,
     get_estimator,
     register_estimator,
+    unregister_estimator,
 )
 from repro.core.profiler import AnalyticProfiler, ProfileReport, SamplingProfiler, attach_costs
 from repro.core.results import METRICS, ModelScore, MultiModel, accuracy, auc, logloss
@@ -26,7 +29,9 @@ from repro.core.scheduler import (
     simulate_dynamic,
     simulate_makespan,
 )
-from repro.core.searcher import ModelSearcher, SearchStats
+from repro.core.searcher import ModelSearcher
+from repro.core.session import SearchStats, Session
+from repro.core.spec import POLICIES, SearchSpec
 from repro.core.tuner import (
     GridSearchTuner,
     RandomSearchTuner,

@@ -1,6 +1,8 @@
 """Executors: where training tasks actually run (paper §III-A).
 
-Two pools share one interface:
+Two pools implement the one :class:`repro.core.backend.ExecutorBackend`
+protocol — ``submit(assignment, data)`` yields ``TaskResult``s as tasks
+complete:
 
 * :class:`LocalExecutorPool` — N worker threads, each the analogue of one
   Spark executor in the paper. Supports static plans (LPT/random/round-robin)
@@ -11,7 +13,9 @@ Two pools share one interface:
   is partitioned into submesh slices and each slice is one executor; tasks are
   compiled train-step callables placed onto their slice. On this CPU container
   slices are degenerate (1 device) but the partitioning/placement logic is the
-  same code that runs on a pod.
+  same code that runs on a pod. It shares the thread pool's scheduling
+  semantics: WAL de-dup/resume, per-task error capture, dynamic load-balanced
+  queues, and ExecutorFailure re-queue onto surviving slices.
 
 The uniform→native data-format conversion happens HERE (executor-side), via
 ``Estimator.run`` — never in the Driver (paper §III-B).
@@ -21,9 +25,7 @@ from __future__ import annotations
 import queue as _queue
 import threading
 import time
-from typing import Callable, Sequence
-
-import jax
+from typing import Callable, Iterator, Sequence
 
 from repro.core.data_format import DenseMatrix
 from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
@@ -31,6 +33,8 @@ from repro.core.interface import TaskResult, TrainTask, get_estimator
 from repro.core.scheduler import Assignment
 
 __all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
+
+_DYNAMIC_POLICIES = ("dynamic", "lpt_dynamic")
 
 
 class LocalExecutorPool:
@@ -43,17 +47,25 @@ class LocalExecutorPool:
         failure_hook: Callable[[int, TrainTask], None] | None = None,
         speculation_factor: float | None = None,
     ):
-        self.n_executors = n_executors
+        self._n_executors = n_executors
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook  # tests inject ExecutorFailure here
         self.speculation_factor = speculation_factor
         self._dead: set[int] = set()
 
+    @property
+    def n_executors(self) -> int:
+        return self._n_executors
+
     # ------------------------------------------------------------------
-    def run(self, assignment: Assignment, data: DenseMatrix) -> list[TaskResult]:
-        """Execute a static or dynamic plan; returns one result per task."""
+    def submit(self, assignment: Assignment, data: DenseMatrix) -> Iterator[TaskResult]:
+        """Execute a static or dynamic plan, yielding results as they land.
+
+        Closing the iterator early cancels cleanly: workers stop pulling new
+        tasks after their current one and the pool joins them.
+        """
         shared: _queue.Queue[TrainTask] = _queue.Queue()
-        dynamic = assignment.policy in ("dynamic", "lpt_dynamic")
+        dynamic = assignment.policy in _DYNAMIC_POLICIES
         if dynamic:
             for t in assignment.all_tasks():
                 if not self.wal.is_done(t.task_id):
@@ -61,6 +73,8 @@ class LocalExecutorPool:
         results: dict[int, TaskResult] = {}
         results_lock = threading.Lock()
         requeue: _queue.Queue[TrainTask] = _queue.Queue()
+        out: _queue.Queue[TaskResult] = _queue.Queue()  # completion stream
+        stop = threading.Event()
         in_flight: dict[int, tuple[int, float]] = {}  # task_id -> (executor, t0)
         speculated: set[int] = set()
 
@@ -78,6 +92,8 @@ class LocalExecutorPool:
                 model, secs = est.run(data, task.params)
                 res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
             except ExecutorFailure:
+                with results_lock:
+                    in_flight.pop(task.task_id, None)
                 raise
             except Exception as e:  # task-level failure: record, don't kill pool
                 res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
@@ -85,14 +101,16 @@ class LocalExecutorPool:
                 in_flight.pop(task.task_id, None)
                 if task.task_id not in results:  # first completion wins
                     results[task.task_id] = res
-                    self.wal.record(
-                        WALRecord(
-                            task_id=task.task_id,
-                            key=task.key(),
-                            seconds=res.train_seconds,
-                            executor_id=eid,
+                    if res.ok:  # failures stay out of the WAL so resume retries
+                        self.wal.record(
+                            WALRecord(
+                                task_id=task.task_id,
+                                key=task.key(),
+                                seconds=res.train_seconds,
+                                executor_id=eid,
+                            )
                         )
-                    )
+                    out.put(res)
 
         def maybe_speculate(eid: int) -> TrainTask | None:
             """Idle executor: duplicate the longest-overdue in-flight task."""
@@ -120,7 +138,7 @@ class LocalExecutorPool:
         def worker(eid: int, static_queue: list[TrainTask]) -> None:
             try:
                 if dynamic:
-                    while True:
+                    while not stop.is_set():
                         try:
                             task = requeue.get_nowait()
                         except _queue.Empty:
@@ -130,9 +148,16 @@ class LocalExecutorPool:
                                 task = maybe_speculate(eid)
                                 if task is None:
                                     return
-                        execute(eid, task)
+                        try:
+                            execute(eid, task)
+                        except ExecutorFailure:
+                            # dying with a claimed task: hand it to survivors
+                            requeue.put(task)
+                            raise
                 else:
                     for i, task in enumerate(static_queue):
+                        if stop.is_set():
+                            return
                         try:
                             execute(eid, task)
                         except ExecutorFailure:
@@ -142,7 +167,7 @@ class LocalExecutorPool:
                                     requeue.put(rest)
                             raise
                     # static plan finished: drain any re-queued work from dead peers
-                    while True:
+                    while not stop.is_set():
                         try:
                             task = requeue.get_nowait()
                         except _queue.Empty:
@@ -156,38 +181,59 @@ class LocalExecutorPool:
                 self._dead.add(eid)
 
         threads = []
-        for eid in range(self.n_executors):
+        for eid in range(self._n_executors):
             q = assignment.plan[eid] if eid < len(assignment.plan) and not dynamic else []
             th = threading.Thread(target=worker, args=(eid, q), daemon=True)
             threads.append(th)
             th.start()
-        for th in threads:
-            th.join()
-
-        # If every executor died mid-plan, some tasks may remain: run them
-        # inline (the "driver as executor of last resort" recovery path).
-        leftovers = []
-        while True:
-            try:
-                leftovers.append(requeue.get_nowait())
-            except _queue.Empty:
-                break
-        if dynamic:
-            while True:
+        try:
+            while any(th.is_alive() for th in threads):
                 try:
-                    leftovers.append(shared.get_nowait())
+                    res = out.get(timeout=0.05)
+                except _queue.Empty:
+                    continue
+                yield res
+            for th in threads:
+                th.join()
+            while True:  # drain completions raced in while the last thread exited
+                try:
+                    res = out.get_nowait()
                 except _queue.Empty:
                     break
-        for task in leftovers:
-            if not self.wal.is_done(task.task_id) and task.task_id not in results:
-                est = get_estimator(task.estimator)
+                yield res
+            # If every executor died mid-plan, some tasks may remain: run them
+            # inline (the "driver as executor of last resort" recovery path).
+            leftovers = []
+            while True:
                 try:
-                    model, secs = est.run(data, task.params)
-                    results[task.task_id] = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
-                    self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
-                except Exception as e:
-                    results[task.task_id] = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
-        return list(results.values())
+                    leftovers.append(requeue.get_nowait())
+                except _queue.Empty:
+                    break
+            if dynamic:
+                while True:
+                    try:
+                        leftovers.append(shared.get_nowait())
+                    except _queue.Empty:
+                        break
+            for task in leftovers:
+                if not self.wal.is_done(task.task_id) and task.task_id not in results:
+                    est = get_estimator(task.estimator)
+                    try:
+                        model, secs = est.run(data, task.params)
+                        res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
+                        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
+                    except Exception as e:
+                        res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
+                    results[task.task_id] = res
+                    yield res
+        finally:
+            stop.set()
+            for th in threads:
+                th.join()
+
+    def run(self, assignment: Assignment, data: DenseMatrix) -> list[TaskResult]:
+        """Blocking convenience: drain :meth:`submit` into a list."""
+        return list(self.submit(assignment, data))
 
     @property
     def dead_executors(self) -> set[int]:
@@ -198,12 +244,14 @@ class LocalExecutorPool:
 # Mesh-slice executors (TPU-native adaptation).
 # --------------------------------------------------------------------------
 
-def make_slices(mesh: jax.sharding.Mesh, n_slices: int, axis: str = "data"):
+def make_slices(mesh, n_slices: int, axis: str = "data"):
     """Partition ``mesh`` into ``n_slices`` submeshes along ``axis``.
 
     Each slice keeps every other axis intact, so a task placed on a slice can
     still use tensor/expert parallelism internally. Returns a list of Mesh.
     """
+    import jax
+
     axis_idx = mesh.axis_names.index(axis)
     size = mesh.devices.shape[axis_idx]
     if size % n_slices != 0:
@@ -221,48 +269,134 @@ def make_slices(mesh: jax.sharding.Mesh, n_slices: int, axis: str = "data"):
 class MeshSliceExecutorPool:
     """Executors = submesh slices of one device mesh.
 
-    ``task_runner(task, slice_mesh, data) -> TaskResult-payload`` is supplied
-    by the LM substrate (launch/search.py); this pool owns only placement,
-    ordering, failure re-queue and WAL bookkeeping — the same scheduling
-    semantics as LocalExecutorPool, with slices instead of threads.
+    ``task_runner(task, slice_mesh, data) -> (model-payload, seconds)`` is
+    supplied by the LM substrate (launch/search.py); this pool owns only
+    placement, ordering, failure re-queue and WAL bookkeeping — the same
+    scheduling semantics as LocalExecutorPool, with slices instead of threads.
+
+    Pass ``slices=[...]`` to supply pre-built (or stand-in) slice handles
+    directly instead of partitioning a mesh — tests and custom partitioners
+    use this to exercise the pool without real multi-device state.
     """
 
     def __init__(
         self,
-        mesh: jax.sharding.Mesh,
-        n_slices: int,
-        task_runner: Callable[[TrainTask, jax.sharding.Mesh, object], tuple[object, float]],
+        mesh=None,
+        n_slices: int | None = None,
+        task_runner: Callable[[TrainTask, object, object], tuple[object, float]] | None = None,
         wal: SearchWAL | None = None,
         slice_axis: str = "data",
+        *,
+        failure_hook: Callable[[int, TrainTask], None] | None = None,
+        slices: Sequence[object] | None = None,
+        driver_slice: object | None = None,
     ):
-        self.slices = make_slices(mesh, n_slices, axis=slice_axis)
+        if slices is not None:
+            self.slices = list(slices)
+        else:
+            if mesh is None or n_slices is None:
+                raise ValueError("provide either a mesh + n_slices or explicit slices=")
+            self.slices = make_slices(mesh, n_slices, axis=slice_axis)
+        if task_runner is None:
+            raise ValueError("task_runner is required")
         self.task_runner = task_runner
         self.wal = wal or SearchWAL(None)
+        self.failure_hook = failure_hook
+        # where stranded tasks run when every slice is lost; defaults to
+        # slice 0's handle (fine on a single host where slices are logical —
+        # on a real pod pass a driver-local mesh that outlives the slices)
+        self.driver_slice = driver_slice if driver_slice is not None else self.slices[0]
+        self._dead: set[int] = set()
 
-    def run(self, assignment: Assignment, data) -> list[TaskResult]:
-        results: list[TaskResult] = []
-        dynamic = assignment.policy in ("dynamic", "lpt_dynamic")
-        queues: list[list[TrainTask]]
-        if dynamic:
-            # single-host simulation: serialize longest-first over slices
+    @property
+    def n_executors(self) -> int:
+        return len(self.slices)
+
+    def _queues(self, assignment: Assignment) -> list[list[TrainTask]]:
+        if assignment.policy in _DYNAMIC_POLICIES:
+            # single-host simulation of the pull queue: longest-first tasks go
+            # to the least-loaded slice, so slice loads stay balanced.
             all_tasks = [t for t in assignment.all_tasks() if not self.wal.is_done(t.task_id)]
-            queues = [[] for _ in self.slices]
+            queues: list[list[TrainTask]] = [[] for _ in self.slices]
             loads = [0.0] * len(self.slices)
             for t in all_tasks:
                 i = loads.index(min(loads))
                 queues[i].append(t)
                 loads[i] += t.cost or 1.0
-        else:
-            queues = [list(q) for q in assignment.plan]
+            return queues
+        return [list(q) for q in assignment.plan]
+
+    def _run_one(self, eid: int, task: TrainTask, sl, data) -> TaskResult:
+        """One placed task; task-level errors become TaskResult.error,
+        ExecutorFailure propagates (the slice is lost)."""
+        try:
+            if self.failure_hook is not None:
+                self.failure_hook(eid, task)  # may raise ExecutorFailure
+            model, secs = self.task_runner(task, sl, data)
+        except ExecutorFailure:
+            raise
+        except Exception as e:
+            return TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
+        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=eid))
+        return TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
+
+    def submit(self, assignment: Assignment, data) -> Iterator[TaskResult]:
+        """Execute the plan slice by slice, yielding each result as it lands.
+
+        A slice lost to :class:`ExecutorFailure` has its remaining queue
+        re-distributed over the surviving slices; with no survivors the
+        driver runs stranded tasks inline (executor_id=-1), matching
+        LocalExecutorPool's recovery semantics.
+        """
+        queues = self._queues(assignment)
+        alive = set(range(len(self.slices)))
+        stranded: list[TrainTask] = []
         for eid, (q, sl) in enumerate(zip(queues, self.slices)):
-            for task in q:
+            for i, task in enumerate(q):
                 if self.wal.is_done(task.task_id):
                     continue
                 try:
-                    model, secs = self.task_runner(task, sl, data)
-                    res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
-                    self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=eid))
-                except Exception as e:
-                    res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
-                results.append(res)
-        return results
+                    res = self._run_one(eid, task, sl, data)
+                except ExecutorFailure:
+                    self._dead.add(eid)
+                    alive.discard(eid)
+                    stranded.extend(q[i:])
+                    break
+                yield res
+        # failure re-queue: surviving slices absorb dead slices' work
+        while stranded:
+            pending = [t for t in stranded if not self.wal.is_done(t.task_id)]
+            stranded = []
+            if not pending:
+                break
+            if not alive:
+                for task in pending:  # driver as executor of last resort
+                    try:
+                        model, secs = self.task_runner(task, self.driver_slice, data)
+                        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
+                        res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
+                    except Exception as e:
+                        res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
+                    yield res
+                break
+            for idx, task in enumerate(pending):
+                if not alive:  # last survivor died mid-re-queue
+                    stranded.extend(pending[idx:])
+                    break
+                eid = sorted(alive)[idx % len(alive)]
+                try:
+                    res = self._run_one(eid, task, self.slices[eid], data)
+                except ExecutorFailure:
+                    self._dead.add(eid)
+                    alive.discard(eid)
+                    stranded.append(task)  # retry on the next survivor
+                    continue
+                yield res
+
+    def run(self, assignment: Assignment, data) -> list[TaskResult]:
+        """Blocking convenience: drain :meth:`submit` into a list."""
+        return list(self.submit(assignment, data))
+
+    @property
+    def dead_executors(self) -> set[int]:
+        return set(self._dead)

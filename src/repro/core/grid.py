@@ -1,9 +1,10 @@
 """Search-space description — the paper's GridBuilder API (Fig. 1), in Python.
 
 A ``SearchSpace`` is a list of (estimator, param-grid) blocks; ``GridBuilder``
-builds the cartesian product for one estimator. ``ModelSearcher.add_space``
-accepts any number of these, mirroring the paper's
-``searcher.addSpace(xgbGrid).addSpace(tfGrid)...`` chain.
+builds the cartesian product for one estimator. ``SearchSpec.spaces`` takes
+any number of these, mirroring the paper's
+``searcher.addSpace(xgbGrid).addSpace(tfGrid)...`` chain (which the
+deprecated ``ModelSearcher.add_space`` still accepts verbatim).
 """
 from __future__ import annotations
 

@@ -26,6 +26,7 @@ __all__ = [
     "TrainTask",
     "TaskResult",
     "register_estimator",
+    "unregister_estimator",
     "get_estimator",
     "estimator_names",
 ]
@@ -113,19 +114,46 @@ class Estimator(abc.ABC):
 _REGISTRY: dict[str, Callable[[], Estimator]] = {}
 
 
-def register_estimator(factory: Callable[[], Estimator] | type[Estimator]):
-    """Register an Estimator class/factory under its ``name``.
+def register_estimator(obj: Callable[[], Estimator] | type[Estimator] | Estimator):
+    """Register an Estimator under its ``name``; returns ``obj`` unchanged.
 
-    Usable as a decorator; this plus the subclass body is the entire "glue
-    code" needed to add a new ML implementation (paper Fig.4).
+    Accepts three forms (usable as a decorator on the first two):
+
+    * an ``Estimator`` subclass — instantiated fresh on every lookup;
+    * a zero-arg factory returning an ``Estimator`` — called on every lookup
+      (lets implementations close over config or lazy imports);
+    * a ready ``Estimator`` instance — the SAME object is returned by every
+      lookup, so it must be stateless across ``train`` calls.
+
+    This plus the subclass body is the entire "glue code" needed to add a new
+    ML implementation (paper Fig. 4).
     """
-    probe = factory() if isinstance(factory, type) else factory()
+    if isinstance(obj, type):
+        if not issubclass(obj, Estimator):
+            raise TypeError(f"{obj.__name__} must subclass Estimator")
+        probe, factory = obj(), obj
+    elif isinstance(obj, Estimator):
+        probe, factory = obj, (lambda inst=obj: inst)
+    elif callable(obj):
+        probe = obj()
+        if not isinstance(probe, Estimator):
+            raise TypeError(f"factory {obj!r} returned {type(probe).__name__}, "
+                            "not an Estimator")
+        factory = obj
+    else:
+        raise TypeError(f"cannot register {type(obj).__name__}: expected an "
+                        "Estimator class, factory, or instance")
     if not probe.name:
-        raise ValueError(f"{factory} must set a non-empty .name")
+        raise ValueError(f"{obj} must set a non-empty .name")
     if probe.name in _REGISTRY:
         raise ValueError(f"estimator {probe.name!r} already registered")
-    _REGISTRY[probe.name] = factory if not isinstance(factory, type) else factory
-    return factory
+    _REGISTRY[probe.name] = factory
+    return obj
+
+
+def unregister_estimator(name: str) -> None:
+    """Remove a registered estimator (tests and hot-reload tooling)."""
+    _REGISTRY.pop(name, None)
 
 
 def get_estimator(name: str) -> Estimator:

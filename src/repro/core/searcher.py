@@ -1,6 +1,6 @@
-"""The Driver (paper §III-A): ties tuner → profiler → scheduler → executors.
+"""DEPRECATED builder API — a thin shim over SearchSpec + Session.
 
-Mirrors the paper's user-facing flow (Fig. 1):
+The paper's Fig. 1 flow keeps working verbatim:
 
     searcher = (ModelSearcher(n_executors=8)
                 .add_space(gbdt_grid)
@@ -10,49 +10,41 @@ Mirrors the paper's user-facing flow (Fig. 1):
     multi_model = searcher.model_search(train)
     scores = multi_model.validate_all(validate, metric="auc")
 
-Dynamic tuners run the propose→profile→schedule→execute→observe loop until
-the tuner stops proposing. A WAL path makes the whole search restartable.
+but each mutator now just accumulates fields for one frozen
+:class:`repro.core.spec.SearchSpec`, and ``model_search`` delegates to
+:class:`repro.core.session.Session`. New code should build the spec directly
+(DESIGN.md §2 has the migration table) — ``Session`` additionally offers
+streaming results, early-stop budgets and WAL resume, none of which this
+shim exposes.
 """
 from __future__ import annotations
 
-import time
-from typing import Sequence
+import warnings
 
 from repro.core.data_format import DenseMatrix
-from repro.core.fault import SearchWAL
 from repro.core.grid import SearchSpace
-from repro.core.executor import LocalExecutorPool
-from repro.core.interface import TaskResult, TrainTask
-from repro.core.profiler import AnalyticProfiler, SamplingProfiler, attach_costs
 from repro.core.results import METRICS, MultiModel
-from repro.core.scheduler import schedule
-from repro.core.tuner import GridSearchTuner, Tuner
+from repro.core.session import SearchStats, Session
+from repro.core.spec import SearchSpec
+from repro.core.tuner import Tuner
 
 __all__ = ["ModelSearcher", "SearchStats"]
 
 
-class SearchStats:
-    """Bookkeeping the benchmarks read (profiling ratio, makespan, etc.)."""
-
-    def __init__(self):
-        self.profiling_seconds = 0.0
-        self.execution_seconds = 0.0
-        self.total_seconds = 0.0
-        self.n_tasks = 0
-        self.n_failures = 0
-        self.policy = ""
-
-    @property
-    def profiling_ratio(self) -> float:  # paper Fig. 3
-        return self.profiling_seconds / self.total_seconds if self.total_seconds else 0.0
-
-
 class ModelSearcher:
+    """Deprecated: build a :class:`SearchSpec` and run a :class:`Session`."""
+
     def __init__(self, n_executors: int = 1, seed: int = 0):
+        warnings.warn(
+            "ModelSearcher is deprecated; construct a SearchSpec and use "
+            "Session.run(spec, train, validate) instead (see DESIGN.md §2)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self._spaces: list[SearchSpace] = []
         self._n_executors = n_executors
         self._policy = "lpt"
-        self._profiler = None  # default chosen in model_search
+        self._profiler = None
         self._tuner: Tuner | None = None
         self._wal_path: str | None = None
         self._metric = "auc"
@@ -92,60 +84,28 @@ class ModelSearcher:
         self._pool_kwargs.update(kw)
         return self
 
-    # -- the search -------------------------------------------------------
+    # -- conversion + the search ------------------------------------------
+    def to_spec(self) -> SearchSpec:
+        """The accumulated builder state as one frozen SearchSpec."""
+        return SearchSpec(
+            spaces=tuple(self._spaces),
+            n_executors=self._n_executors,
+            policy=self._policy,
+            tuner=self._tuner,
+            profiler=self._profiler,
+            metric=self._metric,
+            seed=self._seed,
+            wal_path=self._wal_path,
+            pool_options=dict(self._pool_kwargs),
+        )
+
     def model_search(
         self,
         train: DenseMatrix,
         validate: DenseMatrix | None = None,
     ) -> MultiModel:
         """Run the full search; ``validate`` is required for dynamic tuners."""
-        t_start = time.perf_counter()
-        tuner = self._tuner or GridSearchTuner(self._spaces)
-        profiler = self._profiler
-        if profiler is None:
-            profiler = SamplingProfiler(sampling_rate=0.03, seed=self._seed)
-        wal = SearchWAL(self._wal_path)
-        pool = LocalExecutorPool(self._n_executors, wal=wal, **self._pool_kwargs)
-        all_results: list[TaskResult] = []
-
-        while True:
-            batch = tuner.propose()
-            if not batch:
-                break
-            batch = wal.remaining(batch)
-            if not batch:
-                if not tuner.is_dynamic:
-                    break
-                continue
-            # 1. profile (paper §III-C) — skipped for cost-blind policies,
-            #    matching the paper's random-scheduling baseline which pays
-            #    no profiling overhead.
-            if self._policy in ("random", "round_robin"):
-                costed = list(batch)
-            else:
-                report = profiler.profile(batch, train)
-                self.stats.profiling_seconds += report.profiling_seconds
-                costed = attach_costs(batch, report)
-            # 2. schedule (greedy job-shop / baselines)
-            assignment = schedule(costed, self._n_executors, policy=self._policy, seed=self._seed)
-            # 3. execute on the pool (format conversion happens executor-side)
-            t0 = time.perf_counter()
-            results = pool.run(assignment, train)
-            self.stats.execution_seconds += time.perf_counter() - t0
-            all_results.extend(results)
-            # 4. feed scores back to dynamic tuners
-            if tuner.is_dynamic:
-                if validate is None:
-                    raise ValueError("dynamic tuners need validation data")
-                fn = METRICS[self._metric]
-                feedback = []
-                for r in results:
-                    if r.ok:
-                        feedback.append((r.task, fn(validate.y, r.model.predict_proba(validate.x))))
-                tuner.observe(feedback)
-
-        self.stats.total_seconds = time.perf_counter() - t_start
-        self.stats.n_tasks = len(all_results)
-        self.stats.n_failures = sum(1 for r in all_results if not r.ok)
-        self.stats.policy = self._policy
-        return MultiModel(all_results)
+        session = Session(self.to_spec())
+        multi = session.search(train, validate)
+        self.stats = session.stats
+        return multi

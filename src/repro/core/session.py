@@ -1,0 +1,249 @@
+"""Session — the Driver's lifecycle object (paper §III-A, Tune-style trials).
+
+A Session binds one immutable :class:`repro.core.spec.SearchSpec` to one
+executor backend and runs the propose → profile → schedule → execute →
+observe loop with a REAL lifecycle instead of a single blocking call:
+
+    spec = SearchSpec(spaces=[...], n_executors=8, policy="lpt")
+    session = Session(spec)
+    for result in session.results(train, validate):   # streams TaskResults
+        print(result.task.key(), result.ok)
+    multi = session.multi_model()
+
+* ``session.results(...)`` is a generator yielding each :class:`TaskResult`
+  the moment its task completes on the backend (both backends stream via
+  ``ExecutorBackend.submit``), so schedulers/monitors can react mid-search;
+* ``on_result`` callbacks observe the same stream without owning the loop;
+* early-stop budgets (``max_seconds``, ``max_tasks``, ``target_metric`` on
+  the spec) cancel cleanly mid-round — the WAL already holds every finished
+  task, so nothing is lost;
+* ``Session.resume(wal_path, spec)`` reconstructs a killed search from its
+  write-ahead log and finishes only the remaining work;
+* ``Session.run(spec, train, validate)`` is the one-shot convenience that
+  the deprecated ``ModelSearcher`` shim (searcher.py) delegates to.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Mapping
+
+from repro.core.backend import ExecutorBackend
+from repro.core.data_format import DenseMatrix
+from repro.core.executor import LocalExecutorPool
+from repro.core.fault import SearchWAL
+from repro.core.interface import TaskResult
+from repro.core.profiler import attach_costs
+from repro.core.results import METRICS, MultiModel
+from repro.core.scheduler import schedule
+from repro.core.spec import SearchSpec
+
+__all__ = ["Session", "SearchStats"]
+
+#: cost-blind policies skip profiling entirely, matching the paper's
+#: random-scheduling baseline which pays no profiling overhead.
+_COST_BLIND = ("random", "round_robin")
+
+
+class SearchStats:
+    """Bookkeeping the benchmarks read (profiling ratio, makespan, etc.)."""
+
+    def __init__(self):
+        self.profiling_seconds = 0.0
+        self.execution_seconds = 0.0
+        self.total_seconds = 0.0
+        self.n_tasks = 0
+        self.n_failures = 0
+        self.policy = ""
+
+    @property
+    def profiling_ratio(self) -> float:  # paper Fig. 3
+        return self.profiling_seconds / self.total_seconds if self.total_seconds else 0.0
+
+
+class Session:
+    """One run (or resumed run) of one SearchSpec on one backend."""
+
+    def __init__(self, spec: SearchSpec | Mapping, backend: ExecutorBackend | None = None):
+        if isinstance(spec, Mapping):
+            spec = SearchSpec.from_dict(spec)
+        self.spec = spec
+        if backend is not None:
+            # adopt the backend's WAL so resume/skip sees one source of truth
+            self._backend: ExecutorBackend | None = backend
+            self.wal = backend.wal
+        else:
+            self._backend = None
+            self.wal = SearchWAL(spec.wal_path)
+        self.stats = SearchStats()
+        self.stats.policy = spec.policy
+        self.finished = False          # True once results() has been drained
+        self.stop_reason: str | None = None
+        self._results: list[TaskResult] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def backend(self) -> ExecutorBackend:
+        if self._backend is None:
+            self._backend = LocalExecutorPool(
+                self.spec.n_executors, wal=self.wal, **self.spec.pool_options
+            )
+        return self._backend
+
+    # ------------------------------------------------------------------
+    def results(
+        self,
+        train: DenseMatrix,
+        validate: DenseMatrix | None = None,
+        *,
+        on_result: Callable[[TaskResult], None] | None = None,
+    ) -> Iterator[TaskResult]:
+        """Run the search, yielding TaskResults as rounds complete.
+
+        ``validate`` is required for dynamic tuners (they need scores to
+        steer) and for the ``target_metric`` budget. Closing the generator
+        early is a clean cancellation; completed work stays in the WAL.
+        """
+        if self.finished:
+            raise RuntimeError("this Session already ran; create a new one "
+                               "(or Session.resume the WAL) to search again")
+        spec = self.spec
+        t_start = time.perf_counter()
+        tuner = spec.build_tuner()
+        profiler = spec.build_profiler()
+        backend = self.backend
+        metric_fn = METRICS[spec.metric]
+        try:
+            while True:
+                batch = tuner.propose()
+                if not batch:
+                    break
+                batch = self.wal.remaining(batch)
+                if not batch:
+                    if not tuner.is_dynamic:
+                        break
+                    continue
+                # 1. profile (paper §III-C)
+                if spec.policy in _COST_BLIND:
+                    costed = list(batch)
+                else:
+                    report = profiler.profile(batch, train)
+                    self.stats.profiling_seconds += report.profiling_seconds
+                    costed = attach_costs(batch, report)
+                # 2. schedule (greedy job-shop / baselines)
+                assignment = schedule(costed, spec.n_executors,
+                                      policy=spec.policy, seed=spec.seed)
+                # 3. execute — stream results off the backend as they land
+                t0 = time.perf_counter()
+                round_results: list[TaskResult] = []
+                scores: dict[int, float] = {}  # task_id -> validation score
+
+                def score_of(r: TaskResult) -> float:
+                    if r.task.task_id not in scores:
+                        scores[r.task.task_id] = metric_fn(
+                            validate.y, r.model.predict_proba(validate.x))
+                    return scores[r.task.task_id]
+
+                stream = backend.submit(assignment, train)
+                stream_close = getattr(stream, "close", None)
+                try:
+                    for res in stream:
+                        round_results.append(res)
+                        self._results.append(res)
+                        if on_result is not None:
+                            on_result(res)
+                        yield res
+                        self.stop_reason = self._budget_hit(t_start)
+                        if (self.stop_reason is None
+                                and spec.target_metric is not None
+                                and validate is not None and res.ok
+                                and score_of(res) >= spec.target_metric):
+                            self.stop_reason = "target_metric"
+                        if self.stop_reason:
+                            break
+                finally:
+                    if stream_close is not None:  # plain iterators lack close
+                        stream_close()  # cancels workers if we broke out early
+                self.stats.execution_seconds += time.perf_counter() - t0
+                if self.stop_reason:
+                    break
+                # 4. feed scores back to dynamic tuners (reusing any scores
+                # the target_metric budget already computed)
+                if tuner.is_dynamic:
+                    if validate is None:
+                        raise ValueError("dynamic tuners need validation data")
+                    tuner.observe([(r.task, score_of(r))
+                                   for r in round_results if r.ok])
+        finally:
+            self.stats.total_seconds = time.perf_counter() - t_start
+            self.stats.n_tasks = len(self._results)
+            self.stats.n_failures = sum(1 for r in self._results if not r.ok)
+            self.finished = True
+
+    def _budget_hit(self, t_start: float) -> str | None:
+        spec = self.spec
+        if spec.max_tasks is not None and len(self._results) >= spec.max_tasks:
+            return "max_tasks"
+        if (spec.max_seconds is not None
+                and time.perf_counter() - t_start >= spec.max_seconds):
+            return "max_seconds"
+        return None
+
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        train: DenseMatrix,
+        validate: DenseMatrix | None = None,
+        *,
+        on_result: Callable[[TaskResult], None] | None = None,
+    ) -> MultiModel:
+        """Drain :meth:`results` and return every model as a MultiModel."""
+        for _ in self.results(train, validate, on_result=on_result):
+            pass
+        return self.multi_model()
+
+    def multi_model(self) -> MultiModel:
+        """Models produced so far (usable mid-stream and after completion)."""
+        return MultiModel(list(self._results))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def run(
+        cls,
+        spec: SearchSpec | Mapping,
+        train: DenseMatrix,
+        validate: DenseMatrix | None = None,
+        *,
+        backend: ExecutorBackend | None = None,
+        on_result: Callable[[TaskResult], None] | None = None,
+    ) -> MultiModel:
+        """One-shot: build a Session, run it to completion, return the models."""
+        return cls(spec, backend=backend).search(train, validate, on_result=on_result)
+
+    @classmethod
+    def resume(
+        cls,
+        wal_path: str,
+        spec: SearchSpec | Mapping,
+        *,
+        backend: ExecutorBackend | None = None,
+        keep_budgets: bool = False,
+    ) -> "Session":
+        """Reconstruct a killed search from its write-ahead log.
+
+        The returned Session's WAL is pre-loaded with every completion the
+        dead run journalled, so ``results()`` schedules only remaining work.
+        By default the budgets that stopped the original run are cleared —
+        resume means "finish the search", not "stop at the same place
+        again"; pass ``keep_budgets=True`` to enforce them on the resumed
+        run too (e.g. a fresh wall-clock allowance per invocation).
+        """
+        if isinstance(spec, Mapping):
+            spec = SearchSpec.from_dict(spec)
+        if not keep_budgets:
+            spec = spec.replace(max_seconds=None, max_tasks=None,
+                                target_metric=None)
+        if backend is not None and getattr(backend.wal, "path", None) != wal_path:
+            # a Session adopts its backend's WAL, so resume must point the
+            # backend at the journal — otherwise completed work re-runs
+            backend.wal = SearchWAL(wal_path)
+        return cls(spec.replace(wal_path=wal_path), backend=backend)

@@ -1,0 +1,152 @@
+"""Declarative search specification — the paper's Fig. 1 setup, made immutable.
+
+A :class:`SearchSpec` replaces the eight ``ModelSearcher.set_*`` mutators with
+one frozen, validated value object. It declares WHAT to search (spaces, tuner),
+HOW to run it (executors, scheduler policy, profiler, pool options), WHAT to
+optimise (metric, early-stop budgets) and WHERE to journal progress (WAL) —
+and nothing about execution state, which lives in :class:`repro.core.session.Session`.
+
+Construct it from kwargs::
+
+    spec = SearchSpec(spaces=[gbdt_grid, mlp_grid], n_executors=8,
+                      policy="lpt", profiler=SamplingProfiler(0.01))
+
+or declaratively from a plain dict (e.g. parsed from JSON/YAML config)::
+
+    spec = SearchSpec.from_dict({
+        "spaces": [{"estimator": "gbdt", "grid": {"eta": [0.1, 0.3]}}],
+        "n_executors": 8,
+        "tuner": {"kind": "asha", "budget_param": "steps",
+                  "base_budget": 20, "max_budget": 100},
+    })
+
+Validation happens once, at construction (Propheticus-style): a bad policy,
+metric, tuner kind or budget fails immediately, not three rounds into a search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.core.grid import GridBuilder, SearchSpace
+from repro.core.profiler import AnalyticProfiler, SamplingProfiler
+from repro.core.results import METRICS
+from repro.core.tuner import GridSearchTuner, Tuner, make_tuner
+
+__all__ = ["SearchSpec", "POLICIES"]
+
+#: scheduling policies understood by repro.core.scheduler.schedule
+POLICIES = ("lpt", "random", "round_robin", "dynamic", "lpt_dynamic")
+
+_PROFILER_KINDS = ("sampling", "analytic")
+
+
+def _space_from_dict(d: Mapping[str, Any]) -> SearchSpace:
+    b = GridBuilder(d["estimator"])
+    for param, values in d.get("grid", {}).items():
+        b.add_grid(param, values)
+    return b.build()
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Frozen, validated declaration of one model search."""
+
+    spaces: tuple[SearchSpace, ...] = ()
+    n_executors: int = 1
+    policy: str = "lpt"
+    #: a Tuner instance, a {"kind": ..., **kwargs} mapping, or None (grid)
+    tuner: Any = None
+    #: a profiler instance, a {"kind": "sampling"|"analytic", ...} mapping,
+    #: or None (sampling at 3%, the ModelSearcher default)
+    profiler: Any = None
+    metric: str = "auc"
+    seed: int = 0
+    wal_path: str | None = None
+    # -- early-stop budgets (Session enforces them mid-stream) -----------
+    max_seconds: float | None = None
+    max_tasks: int | None = None
+    #: stop as soon as a validated result reaches this metric value
+    target_metric: float | None = None
+    #: fault-injection / speculation knobs forwarded to the executor pool
+    pool_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        spaces = self.spaces
+        if isinstance(spaces, SearchSpace):
+            spaces = (spaces,)
+        spaces = tuple(spaces)
+        for sp in spaces:
+            if not isinstance(sp, SearchSpace):
+                raise TypeError(f"spaces must be SearchSpace, got {type(sp).__name__}")
+        object.__setattr__(self, "spaces", spaces)
+        object.__setattr__(self, "pool_options", dict(self.pool_options))
+        if not spaces and not isinstance(self.tuner, Tuner):
+            raise ValueError("a SearchSpec needs at least one space "
+                             "(or a Tuner instance that carries its own tasks)")
+        if self.n_executors < 1:
+            raise ValueError(f"n_executors must be >= 1, got {self.n_executors}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; known: {POLICIES}")
+        if self.metric not in METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; known: {sorted(METRICS)}")
+        if isinstance(self.tuner, Mapping) and "kind" not in self.tuner:
+            raise ValueError("declarative tuner mapping needs a 'kind' key")
+        if (self.tuner is not None and not isinstance(self.tuner, (Tuner, Mapping))):
+            raise TypeError("tuner must be a Tuner, a {'kind': ...} mapping, or None")
+        if isinstance(self.profiler, Mapping):
+            kind = self.profiler.get("kind")
+            if kind not in _PROFILER_KINDS:
+                raise ValueError(f"unknown profiler kind {kind!r}; known: {_PROFILER_KINDS}")
+        elif self.profiler is not None and not hasattr(self.profiler, "profile"):
+            raise TypeError("profiler must expose .profile(tasks, data)")
+        for name in ("max_seconds", "max_tasks"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+        if self.max_tasks is not None:
+            object.__setattr__(self, "max_tasks", int(self.max_tasks))
+
+    # -- construction helpers ------------------------------------------
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SearchSpec":
+        """Build a spec from a plain mapping (JSON/YAML-friendly)."""
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown SearchSpec keys: {sorted(unknown)}")
+        spaces = []
+        for sp in d.pop("spaces", ()):
+            spaces.append(sp if isinstance(sp, SearchSpace) else _space_from_dict(sp))
+        return cls(spaces=tuple(spaces), **d)
+
+    def replace(self, **changes) -> "SearchSpec":
+        """A copy with some fields swapped (the spec itself never mutates)."""
+        return dataclasses.replace(self, **changes)
+
+    # -- materialisation (called by Session, once per run) -------------
+    def build_tuner(self) -> Tuner:
+        if self.tuner is None:
+            return GridSearchTuner(self.spaces)
+        if isinstance(self.tuner, Tuner):
+            return self.tuner
+        kw = dict(self.tuner)
+        return make_tuner(kw.pop("kind"), self.spaces, **kw)
+
+    def build_profiler(self):
+        if self.profiler is None:
+            return SamplingProfiler(sampling_rate=0.03, seed=self.seed)
+        if isinstance(self.profiler, Mapping):
+            kw = dict(self.profiler)
+            kind = kw.pop("kind")
+            if kind == "sampling":
+                kw.setdefault("seed", self.seed)
+                return SamplingProfiler(**kw)
+            return AnalyticProfiler(**kw)
+        return self.profiler
+
+    @property
+    def n_grid_tasks(self) -> int:
+        """Size of the declared static grid (dynamic tuners may differ)."""
+        return sum(len(sp) for sp in self.spaces)

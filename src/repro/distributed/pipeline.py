@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["pipeline_apply", "bubble_fraction", "stage_params_sharding"]
 
 
@@ -98,7 +100,7 @@ def pipeline_apply(
         )
         return outs[None]
 
-    shmap = jax.shard_map(
+    shmap = compat.shard_map(
         per_device,
         mesh=mesh,
         in_specs=(P(stage_axis), P(stage_axis)),

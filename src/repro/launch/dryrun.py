@@ -20,6 +20,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro import configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
@@ -46,7 +47,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              **overrides.pop("extra_cfg", {})}
     cell = build_cell(arch, shape_name, mesh, extra_cfg=extra, **overrides)
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             cell.step_fn,
             in_shardings=cell.in_shardings,

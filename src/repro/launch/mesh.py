@@ -3,32 +3,51 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+``AxisType`` only exists in newer jax; on older installs ``jax.make_mesh``
+takes no ``axis_types`` argument and every axis is implicitly Auto, so
+:func:`compat_make_mesh` degrades gracefully instead of failing at import.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from typing import Sequence
 
-__all__ = ["make_production_mesh", "make_test_mesh", "device_count_needed"]
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType
+except ImportError:  # older jax: no explicit axis types (all axes are Auto)
+    AxisType = None
+
+__all__ = [
+    "compat_make_mesh",
+    "make_production_mesh",
+    "make_test_mesh",
+    "device_count_needed",
+]
+
+
+def compat_make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the installed jax has them."""
+    if AxisType is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 = 256 chips/pod; multi-pod adds a leading pod=2 axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None) -> Mesh:
     """Small mesh for CPU tests (requires forced host device count)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+        return compat_make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def device_count_needed(multi_pod: bool = False) -> int:

@@ -6,7 +6,10 @@ Two workloads:
     four algorithms (GBDT / MLP / RF / LogReg, all pure-JAX) on a synthetic
     HIGGS- or SECOM-like dataset, with profile-based (or baseline)
     scheduling over N thread executors. Prints per-policy makespans and the
-    best model under the chosen metric.
+    best model under the chosen metric. Built as a declarative
+    ``SearchSpec`` run by a ``Session`` (DESIGN.md §2) — results stream as
+    tasks finish, ``--wal`` makes the run resumable, and ``--max-seconds`` /
+    ``--max-tasks`` / ``--target-metric`` early-stop it mid-stream.
 
   * ``--workload lm`` (the TPU-native adaptation): the search space is LM
     architectures × hyperparameters; executors are MESH SLICES — each task
@@ -19,21 +22,18 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
-
 import repro.tabular  # noqa: F401  (registers the four estimators)
 from repro import configs
 from repro.core import (
     AnalyticProfiler,
     GridBuilder,
-    ModelSearcher,
+    MeshSliceExecutorPool,
     SamplingProfiler,
+    SearchSpec,
+    Session,
     TrainTask,
-    attach_costs,
     schedule,
 )
-from repro.core.executor import MeshSliceExecutorPool
 from repro.data.pipeline import make_lm_stream
 from repro.data.synthetic import make_higgs_like, make_secom_like
 from repro.launch.mesh import make_test_mesh
@@ -73,32 +73,49 @@ def run_tabular(args) -> int:
     valid, _, _ = valid.standardize(mu, sd)
     test, _, _ = test.standardize(mu, sd)
 
-    spaces = paper_search_space(args.scale)
-    n_tasks = sum(len(s) for s in spaces)
-    print(f"search space: {n_tasks} configurations over "
-          f"{[s.estimator for s in spaces]}")
-    searcher = (ModelSearcher(n_executors=args.executors, seed=0)
-                .set_scheduler(args.policy)
-                .set_metric(args.metric))
-    if args.profiler == "sampling":
-        searcher.set_profiler(SamplingProfiler(args.sample_rate))
+    spec = SearchSpec(
+        spaces=paper_search_space(args.scale),
+        n_executors=args.executors,
+        policy=args.policy,
+        profiler=(SamplingProfiler(args.sample_rate) if args.profiler == "sampling"
+                  else AnalyticProfiler()),
+        metric=args.metric,
+        seed=0,
+        wal_path=args.wal,
+        max_seconds=args.max_seconds,
+        max_tasks=args.max_tasks,
+        target_metric=args.target_metric,
+    )
+    print(f"search space: {spec.n_grid_tasks} configurations over "
+          f"{[s.estimator for s in spec.spaces]}")
+    if args.resume:
+        # budgets passed alongside --resume apply to THIS invocation too
+        keep = any(v is not None for v in
+                   (args.max_seconds, args.max_tasks, args.target_metric))
+        session = Session.resume(args.wal, spec, keep_budgets=keep)
     else:
-        searcher.set_profiler(AnalyticProfiler())
-    if args.wal:
-        searcher.set_wal(args.wal)
-    for s in spaces:
-        searcher.add_space(s)
+        session = Session(spec)
     t0 = time.perf_counter()
-    multi = searcher.model_search(train, valid)
+    done = 0
+    for r in session.results(train, valid):
+        done += 1
+        if args.verbose and r.ok:
+            print(f"  [{done}/{spec.n_grid_tasks}] exec {r.executor_id}: "
+                  f"{r.task.key()} ({r.train_seconds:.2f}s)")
+    multi = session.multi_model()
+    if not len(multi):
+        print("nothing left to search (WAL already complete?)")
+        return 0
     best = multi.best(valid, metric=args.metric)
     test_score = None
     for r in multi.results:
         if r.task.task_id == best.task.task_id:
             from repro.core import METRICS
             test_score = METRICS[args.metric](test.y, r.model.predict_proba(test.x))
+    stopped = f" stop={session.stop_reason}" if session.stop_reason else ""
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
-          f"profiling_ratio={searcher.stats.profiling_ratio:.1%} "
-          f"failures={searcher.stats.n_failures}")
+          f"profiling_ratio={session.stats.profiling_ratio:.1%} "
+          f"failures={session.stats.n_failures}{stopped}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
           f"test {args.metric}={test_score:.4f}")
     return 0
@@ -141,10 +158,16 @@ def run_lm(args) -> int:
         return m.history[-1]["loss"], time.perf_counter() - t0
 
     pool = MeshSliceExecutorPool(mesh, args.slices, task_runner)
-    results = pool.run(assignment, None)
-    for r in sorted(results, key=lambda r: r.model if r.ok else np.inf):
+    results = []
+    for r in pool.submit(assignment, None):     # streams slice by slice
         status = f"loss={r.model:.4f}" if r.ok else f"ERROR {r.error}"
         print(f"  slice {r.executor_id}: {r.task.key():40s} {status}")
+        results.append(r)
+    best = min((r for r in results if r.ok), default=None,
+               key=lambda r: r.model)
+    if best is not None:
+        print(f"best after {args.steps} steps: {best.task.key()} "
+              f"loss={best.model:.4f}")
     return 0
 
 
@@ -162,12 +185,24 @@ def main() -> int:
     p.add_argument("--scale", type=float, default=0.3,
                    help="search-space budget scale (1.0 = paper-sized)")
     p.add_argument("--wal", default=None, help="WAL path for restartable search")
+    p.add_argument("--resume", action="store_true",
+                   help="resume a search whose WAL is at --wal")
+    p.add_argument("--max-seconds", type=float, default=None,
+                   help="early-stop budget: wall-clock seconds")
+    p.add_argument("--max-tasks", type=int, default=None,
+                   help="early-stop budget: trained-task count")
+    p.add_argument("--target-metric", type=float, default=None,
+                   help="early-stop as soon as a model reaches this score")
+    p.add_argument("--verbose", action="store_true",
+                   help="print each task result as it streams in")
     # lm workload
     p.add_argument("--slices", type=int, default=2)
     p.add_argument("--model-par", type=int, default=1)
     p.add_argument("--archs", default=None)
     p.add_argument("--steps", type=int, default=5)
     args = p.parse_args()
+    if args.resume and not args.wal:
+        p.error("--resume requires --wal")
     return run_tabular(args) if args.workload == "tabular" else run_lm(args)
 
 

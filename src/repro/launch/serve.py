@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro import configs
 from repro.checkpoint import restore_checkpoint
 from repro.launch.mesh import make_test_mesh
@@ -39,7 +40,7 @@ def main() -> int:
         _, state = restore_checkpoint(args.ckpt_dir)
         params = state["params"]
     else:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params = init_params(cfg, jax.random.key(0))
     engine = ServeEngine(cfg, params, mesh, batch_size=args.batch,
                          max_len=args.max_len)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.distributed import sharding as shd
 from repro.models import decode_step, init_decode_state, prefill
 from repro.models.transformer import ArchConfig
@@ -53,7 +54,7 @@ class ServeEngine:
         sspecs = shd.state_pspecs(state_shapes, seq_shard=seq_shard,
                                   dp_size=dp_size, tp_size=mesh.shape["model"])
         self._state_sh = shd.named_shardings(mesh, sspecs)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self._prefill = jax.jit(
                 lambda p, s, b: prefill(cfg, p, s, b),
                 out_shardings=(None, self._state_sh),
@@ -95,7 +96,7 @@ class ServeEngine:
         while len(live) < self.batch_size:   # pad the wave with a dummy
             live.append(Request(request_id=-1, prompt=np.zeros(1, np.int32)))
         batch, plen = self._make_batch(live)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             state = self._fresh_state()
             logits, state = self._prefill(self.params, state, batch)
             pos = plen

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.distributed import sharding as shd
 from repro.distributed.collectives import compressed_psum
 from repro.models import init_params, train_loss
@@ -87,7 +88,7 @@ def init_train_state(cfg: ArchConfig, optimizer: Optimizer, key: jax.Array,
             "opt_state": optimizer.init(params),
         }
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jax.jit(build, out_shardings=out_sh)(key)
 
 
@@ -140,7 +141,7 @@ def build_train_step(
         def step_fn(state, batch):
             p_spec_manual = jax.tree.map(lambda _: P(), state["params"])
             b_specs = jax.tree.map(lambda _: P(dp_axes), batch)
-            loss, grads = jax.shard_map(
+            loss, grads = compat.shard_map(
                 grad_psum, mesh=mesh, axis_names=set(dp_axes),
                 in_specs=(p_spec_manual, b_specs),
                 out_specs=(P(), p_spec_manual),

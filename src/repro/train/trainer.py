@@ -18,6 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.checkpoint import CheckpointManager, latest_step
 from repro.distributed import sharding as shd
 from repro.models.transformer import ArchConfig
@@ -83,7 +84,7 @@ class Trainer:
             self.state = tree
             self.metrics.restores += 1
             return int(step)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             self.state = init_train_state(
                 self.cfg, self.optimizer, jax.random.key(seed), self.mesh, self._specs
             )
@@ -103,7 +104,7 @@ class Trainer:
                 try:
                     if self.failure_hook is not None:
                         self.failure_hook(step)     # may raise (injected fault)
-                    with jax.set_mesh(self.mesh):
+                    with compat.set_mesh(self.mesh):
                         new_state, m = self._step_fn(self.state, batch)
                     loss = float(jax.device_get(m["loss"]))
                     break
@@ -112,6 +113,8 @@ class Trainer:
                     self.metrics.retries += 1
                     if tries > self.max_retries:
                         # device state suspect → restore last checkpoint
+                        if self.ckpt:
+                            self.ckpt.wait()   # flush any in-flight async save
                         if self.ckpt and latest_step(self.ckpt.directory) is not None:
                             _, self.state = self.ckpt.restore_latest(
                                 shardings=self._state_shardings

@@ -1,0 +1,112 @@
+"""Minimal deterministic stand-in for `hypothesis` (offline containers).
+
+Test modules fall back to this when the real library is not installed:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+
+It implements only the surface our tests use — ``@given`` with positional or
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and
+``st.lists`` / ``st.floats`` / ``st.integers`` / ``st.sampled_from``. Every
+example is drawn from a seeded RNG, so runs are reproducible; shrinking and
+the example database are deliberately absent. Draws are biased toward
+boundaries and small sizes, which is where scheduler/estimator bugs live.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+
+_MAX_EXAMPLES_CAP = 100  # keep CI time bounded even if a test asks for more
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:
+    """Namespace mirroring hypothesis.strategies (the parts we use)."""
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False, allow_infinity=False):
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            if min_value > 0 and r < 0.55:  # log-uniform across the range
+                return math.exp(rng.uniform(math.log(min_value), math.log(max_value)))
+            return rng.uniform(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            return rng.randint(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def draw(rng):
+            size = min_size + int((max_size - min_size) * rng.random() ** 2)
+            return [elements.example(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+
+        def draw(rng):
+            return rng.choice(seq)
+
+        return _Strategy(draw)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        names = list(inspect.signature(fn).parameters)
+        mapped = dict(zip(names[: len(arg_strategies)], arg_strategies))
+        mapped.update(kw_strategies)
+        fixtures = [n for n in names if n not in mapped]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_stub_max_examples", 30), _MAX_EXAMPLES_CAP)
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + 7919 * i)
+                drawn = {name: s.example(rng) for name, s in mapped.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # hide the drawn params from pytest so only real fixtures remain
+        wrapper.__signature__ = inspect.Signature(
+            [inspect.Parameter(n, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+             for n in fixtures]
+        )
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = 30, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -4,11 +4,20 @@ The full 16×16 / 2×16×16 sweeps run via ``python -m repro.launch.dryrun``
 (results under experiments/); this test keeps the machinery honest in CI.
 """
 import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+# Cell compiles on a forced-8-device host take minutes each on CPU; they run
+# in the nightly/heavy CI lane (ci.yml) rather than every tier-1 invocation.
+pytestmark = pytest.mark.skipif(
+    os.environ.get("REPRO_HEAVY_TESTS") != "1",
+    reason="multi-device subprocess compile (minutes on CPU); "
+           "set REPRO_HEAVY_TESTS=1 to run",
+)
 
 
 def run_sub(code: str, devices: int = 8) -> str:
@@ -31,10 +40,9 @@ def run_sub(code: str, devices: int = 8) -> str:
 def test_cell_compiles_on_small_mesh(arch, shape):
     out = run_sub(f"""
         import jax, json
-        from jax.sharding import AxisType
+        from repro.launch.mesh import compat_make_mesh
         from repro.launch.dryrun import run_cell
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         rep, secs = run_cell("{arch}", "{shape}", mesh=mesh, scan=True,
                              verbose=False)
         print("REPORT", json.dumps({{
@@ -53,10 +61,9 @@ def test_multipod_mesh_small():
     """pod axis shards: same cell compiles on a (2,2,2) pod mesh."""
     out = run_sub("""
         import jax
-        from jax.sharding import AxisType
+        from repro.launch.mesh import compat_make_mesh
         from repro.launch.dryrun import run_cell
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
         rep, _ = run_cell("tinyllama_1_1b", "train_4k", mesh=mesh, scan=True,
                           verbose=False)
         print("OK", rep.mesh, rep.n_devices)

@@ -11,7 +11,11 @@ Key invariants:
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic stub, same surface
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     TrainTask,
