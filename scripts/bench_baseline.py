@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Regenerate benchmarks/baseline.json — the CI bench gate's reference.
+
+    PYTHONPATH=src python scripts/bench_baseline.py [--check]
+
+Runs exactly the ``--smoke`` bench set (fixed seeds, device-free simulated
+makespans — bit-deterministic across machines, so the baseline regenerates
+identically anywhere) and writes the rows to ``benchmarks/baseline.json``.
+Commit the refreshed file together with any INTENTIONAL scheduling change;
+the CI ``bench`` job fails when a ``*makespan*`` row regresses >20% against
+it (see benchmarks/run.py --baseline).
+
+``--check`` verifies the committed baseline is up to date without writing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)                       # make `benchmarks` importable
+sys.path.insert(0, os.path.join(_REPO, "src"))  # and `repro`, PYTHONPATH or not
+
+BASELINE = os.path.join(_REPO, "benchmarks", "baseline.json")
+
+
+def smoke_rows() -> dict[str, float]:
+    from benchmarks.run import SMOKE_BENCHES
+
+    rows: dict[str, float] = {}
+    for name, fn in SMOKE_BENCHES.items():
+        for row_name, value, _derived in fn():
+            rows[row_name] = float(value)
+    return rows
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if the committed baseline differs; write nothing")
+    args = p.parse_args()
+    payload = {"smoke": True, "rows": smoke_rows()}
+    if args.check:
+        try:
+            with open(BASELINE) as f:
+                committed = json.load(f)
+        except FileNotFoundError:
+            print(f"{BASELINE} missing — run scripts/bench_baseline.py")
+            return 1
+        if committed.get("rows") != payload["rows"]:
+            print("baseline.json is stale — regenerate with scripts/bench_baseline.py")
+            for k in sorted(set(committed.get("rows", {})) | set(payload["rows"])):
+                a, b = committed.get("rows", {}).get(k), payload["rows"][k] \
+                    if k in payload["rows"] else None
+                if a != b:
+                    print(f"  {k}: committed={a} regenerated={b}")
+            return 1
+        print("baseline.json is up to date")
+        return 0
+    with open(BASELINE, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    n_gated = sum(1 for n in payload["rows"] if "makespan" in n)
+    print(f"wrote {BASELINE}: {len(payload['rows'])} rows, {n_gated} gated")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

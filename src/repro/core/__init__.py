@@ -3,6 +3,7 @@
 Public API re-exports; see DESIGN.md §1 for the paper mapping.
 """
 from repro.core.backend import ExecutorBackend
+from repro.core.cost_model import CostModel, observed_drift, param_bucket
 from repro.core.data_format import DenseMatrix, available_formats, convert
 from repro.core.executor import LocalExecutorPool, MeshSliceExecutorPool
 from repro.core.grid import GridBuilder, SearchSpace, enumerate_tasks
@@ -21,13 +22,17 @@ from repro.core.results import METRICS, ModelScore, MultiModel, accuracy, auc, l
 from repro.core.scheduler import (
     Assignment,
     lpt_lower_bound,
+    plan_makespan_estimate,
     rebalance,
+    replan,
+    restrict,
     schedule,
     schedule_lpt,
     schedule_random,
     schedule_round_robin,
     simulate_dynamic,
     simulate_makespan,
+    simulate_replan,
 )
 from repro.core.searcher import ModelSearcher
 from repro.core.session import SearchStats, Session

@@ -1,0 +1,323 @@
+"""Online profile-feedback cost model (paper §III-C, closed-loop).
+
+The paper's profilers (profiler.py) produce ONE-SHOT static estimates: a
+sampled (or analytic) cost per task, computed before scheduling and never
+revisited. Mis-estimates — the paper's Fig. 5 concern — therefore inflate
+makespan silently: LPT packs executors against numbers that were wrong from
+the start. :class:`CostModel` closes the loop:
+
+* every completed :class:`~repro.core.interface.TaskResult` is fed back via
+  ``observe(task, seconds, n_rows)`` — both executor pools expose an
+  ``on_result`` hook and :class:`~repro.core.session.Session` wires it up, so
+  observation is free and automatic;
+* observations are keyed by ``(estimator family, hyperparameter bucket)`` and
+  carry the data size, so the model fits a per-bucket **power-law scaling in
+  data size** (``seconds ≈ a · rows^b``, the paper's linearity assumption
+  generalised and learned rather than assumed);
+* ``estimate``/``predict_many`` serve as a third profiler source: once a
+  family has been observed, predicting a task costs microseconds and beats
+  :class:`~repro.core.profiler.SamplingProfiler` (which must *train* on a
+  sample) — warm-up is one completed task per family;
+* the model persists as JSON next to the WAL, so ``Session.resume`` and
+  later sessions start warm instead of re-profiling from scratch.
+
+``observed_drift`` quantifies how far reality has diverged from the plan;
+Session uses it to trigger a mid-session :func:`repro.core.scheduler.replan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import threading
+from typing import Any, Iterable, Mapping, Sequence
+
+from repro.core.interface import TrainTask
+from repro.core.profiler import ProfileReport
+
+__all__ = ["CostModel", "observed_drift", "param_bucket"]
+
+#: learned scaling exponents are clamped here — training time is never
+#: decreasing in data size, and anything past cubic is a fit artefact
+_MIN_EXPONENT, _MAX_EXPONENT = 0.0, 3.0
+_EPS = 1e-12
+
+
+def param_bucket(params: Mapping[str, Any]) -> str:
+    """Canonical coarse bucket for a hyperparameter dict.
+
+    Numeric values collapse to their power-of-two magnitude (``400`` and
+    ``512`` share a bucket; ``0.003`` and ``0.03`` do not), strings/bools stay
+    verbatim. Buckets group configs whose runtime should be of the same order,
+    so a handful of observations covers a whole grid axis.
+    """
+    parts = []
+    for k in sorted(params):
+        v = params[k]
+        if isinstance(v, bool) or isinstance(v, str) or v is None:
+            parts.append(f"{k}={v}")
+        elif isinstance(v, (int, float)):
+            if v > 0:
+                parts.append(f"{k}~2^{round(math.log2(v))}")
+            elif v < 0:
+                parts.append(f"{k}~-2^{round(math.log2(-v))}")
+            else:
+                parts.append(f"{k}~0")
+        else:
+            parts.append(f"{k}={v!r}")
+    return ",".join(parts)
+
+
+@dataclasses.dataclass
+class _LogStats:
+    """Incremental least-squares over (x=log rows, y=log seconds)."""
+
+    n: int = 0
+    sum_x: float = 0.0
+    sum_y: float = 0.0
+    sum_xx: float = 0.0
+    sum_xy: float = 0.0
+
+    def add(self, x: float, y: float) -> None:
+        self.n += 1
+        self.sum_x += x
+        self.sum_y += y
+        self.sum_xx += x * x
+        self.sum_xy += x * y
+
+    def slope(self) -> float | None:
+        """Regression slope, or None when every x seen so far is identical."""
+        if self.n < 2:
+            return None
+        var = self.n * self.sum_xx - self.sum_x * self.sum_x
+        if var <= _EPS * max(1.0, self.sum_xx):
+            return None
+        return (self.n * self.sum_xy - self.sum_x * self.sum_y) / var
+
+    def predict(self, x: float, default_slope: float) -> float:
+        """ŷ at x, anchored at the observed mean, slope clamped monotone."""
+        b = self.slope()
+        if b is None:
+            b = default_slope
+        b = min(max(b, _MIN_EXPONENT), _MAX_EXPONENT)
+        mean_x = self.sum_x / self.n
+        mean_y = self.sum_y / self.n
+        return mean_y + b * (x - mean_x)
+
+
+@dataclasses.dataclass
+class _RatioStats:
+    """Mean log(observed/estimated) per family — the Fig. 5 correction."""
+
+    n: int = 0
+    sum_log_ratio: float = 0.0
+
+    def add(self, estimated: float, observed: float) -> None:
+        self.n += 1
+        self.sum_log_ratio += math.log(observed / estimated)
+
+    def factor(self) -> float:
+        return math.exp(self.sum_log_ratio / self.n) if self.n else 1.0
+
+
+class CostModel:
+    """Persistent, thread-safe runtime model learned from completed tasks.
+
+    Duck-types the profiler protocol (``profile(tasks, data) ->
+    ProfileReport``): tasks the model can estimate cost nothing; the rest go
+    to ``fallback`` (typically a :class:`SamplingProfiler`) when one is set.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str | None = None, *,
+                 default_exponent: float = 1.0, fallback=None):
+        #: where save() writes (JSON); None keeps the model in-memory only
+        self.path = path
+        #: exponent assumed before a bucket has seen two distinct sizes
+        #: (1.0 = the paper's "training time ∝ data size")
+        self.default_exponent = default_exponent
+        #: profiler consulted for tasks with no usable observations yet
+        self.fallback = fallback
+        self._lock = threading.RLock()
+        self._buckets: dict[str, dict[str, _LogStats]] = {}   # family -> bucket
+        self._families: dict[str, _LogStats] = {}             # pooled per family
+        self._ratios: dict[str, _RatioStats] = {}             # obs/est per family
+        self._n_observed = 0
+
+    # -- write side --------------------------------------------------------
+    def observe(self, task: TrainTask, seconds: float, n_rows: int) -> None:
+        """Record one completed task. No-ops on junk (failed tasks report 0s)."""
+        if seconds <= 0 or n_rows <= 0:
+            return
+        x, y = math.log(n_rows), math.log(seconds)
+        with self._lock:
+            fam = self._buckets.setdefault(task.estimator, {})
+            fam.setdefault(param_bucket(task.params), _LogStats()).add(x, y)
+            self._families.setdefault(task.estimator, _LogStats()).add(x, y)
+            if task.cost is not None and task.cost > 0:
+                self._ratios.setdefault(task.estimator, _RatioStats()).add(
+                    task.cost, seconds)
+            self._n_observed += 1
+
+    def observe_result(self, result, n_rows: int) -> None:
+        """``on_result``-shaped adapter: feed a TaskResult straight in."""
+        if result.ok:
+            self.observe(result.task, result.train_seconds, n_rows)
+
+    # -- read side ---------------------------------------------------------
+    @property
+    def n_observed(self) -> int:
+        with self._lock:
+            return self._n_observed
+
+    def _family_exponent(self, family: str) -> float:
+        """Count-weighted mean of the family's per-bucket slopes."""
+        num = den = 0.0
+        for stats in self._buckets.get(family, {}).values():
+            b = stats.slope()
+            if b is not None:
+                b = min(max(b, _MIN_EXPONENT), _MAX_EXPONENT)
+                num += b * stats.n
+                den += stats.n
+        return num / den if den else self.default_exponent
+
+    def predict(self, task: TrainTask, n_rows: int) -> float | None:
+        """Size-law prediction in seconds, or None with no relevant data.
+
+        Resolution order: exact (family, bucket) stats, then pooled family
+        stats. Monotone non-decreasing in ``n_rows`` by construction (slopes
+        are clamped to [0, 3]).
+        """
+        if n_rows <= 0:
+            return None
+        x = math.log(n_rows)
+        with self._lock:
+            fam = self._buckets.get(task.estimator, {})
+            stats = fam.get(param_bucket(task.params))
+            if stats is not None and stats.n:
+                return math.exp(stats.predict(x, self._family_exponent(task.estimator)))
+            pooled = self._families.get(task.estimator)
+            if pooled is not None and pooled.n:
+                return math.exp(pooled.predict(x, self._family_exponent(task.estimator)))
+        return None
+
+    def estimate(self, task: TrainTask, n_rows: int) -> float | None:
+        """Best cost estimate for scheduling: bucket law, else the task's own
+        prior estimate corrected by the family's observed/estimated ratio,
+        else the pooled family law. Still monotone in ``n_rows`` (the ratio
+        branch is constant in size; the others are monotone laws)."""
+        with self._lock:
+            fam = self._buckets.get(task.estimator, {})
+            stats = fam.get(param_bucket(task.params))
+            if stats is not None and stats.n and n_rows > 0:
+                return math.exp(stats.predict(
+                    math.log(n_rows), self._family_exponent(task.estimator)))
+            ratio = self._ratios.get(task.estimator)
+            if ratio is not None and ratio.n and task.cost is not None and task.cost > 0:
+                return task.cost * ratio.factor()
+        return self.predict(task, n_rows)
+
+    def predict_many(self, tasks: Sequence[TrainTask], n_rows: int) -> dict[int, float]:
+        """task_id -> estimate for every task the model can serve."""
+        out: dict[int, float] = {}
+        for t in tasks:
+            p = self.estimate(t, n_rows)
+            if p is not None and p > 0:
+                out[t.task_id] = p
+        return out
+
+    # -- profiler protocol -------------------------------------------------
+    def profile(self, tasks: Sequence[TrainTask], data) -> ProfileReport:
+        """Third profiler source: model estimates where warm, fallback where
+        cold. After one round of feedback the sampled-training cost of the
+        paper's profiler (Fig. 3) drops to ~zero for known families."""
+        import time
+
+        t0 = time.perf_counter()
+        costs = self.predict_many(tasks, getattr(data, "n_rows", 0))
+        unknown = [t for t in tasks if t.task_id not in costs]
+        profiling_seconds = time.perf_counter() - t0
+        sampling_rate = None
+        if unknown and self.fallback is not None:
+            report = self.fallback.profile(unknown, data)
+            costs.update(report.costs)
+            profiling_seconds += report.profiling_seconds
+            sampling_rate = report.sampling_rate
+        return ProfileReport(costs=costs, profiling_seconds=profiling_seconds,
+                             sampling_rate=sampling_rate)
+
+    # -- persistence -------------------------------------------------------
+    def to_dict(self) -> dict:
+        with self._lock:
+            return {
+                "version": self.VERSION,
+                "default_exponent": self.default_exponent,
+                "n_observed": self._n_observed,
+                "families": {
+                    family: {
+                        "pooled": dataclasses.asdict(self._families[family]),
+                        "ratio": dataclasses.asdict(
+                            self._ratios.get(family, _RatioStats())),
+                        "buckets": {
+                            bucket: dataclasses.asdict(stats)
+                            for bucket, stats in buckets.items()
+                        },
+                    }
+                    for family, buckets in self._buckets.items()
+                },
+            }
+
+    def save(self, path: str | None = None) -> str:
+        """Atomically write the model as JSON; returns the path written."""
+        path = path or self.path
+        if not path:
+            raise ValueError("no path: pass one or construct CostModel(path=...)")
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any], *, path: str | None = None,
+                  fallback=None) -> "CostModel":
+        if d.get("version") != cls.VERSION:
+            raise ValueError(f"unsupported cost-model version {d.get('version')!r}")
+        cm = cls(path, default_exponent=float(d.get("default_exponent", 1.0)),
+                 fallback=fallback)
+        for family, entry in d.get("families", {}).items():
+            cm._families[family] = _LogStats(**entry["pooled"])
+            ratio = _RatioStats(**entry.get("ratio", {}))
+            if ratio.n:
+                cm._ratios[family] = ratio
+            cm._buckets[family] = {
+                bucket: _LogStats(**stats)
+                for bucket, stats in entry.get("buckets", {}).items()
+            }
+        cm._n_observed = int(d.get("n_observed", 0))
+        return cm
+
+    @classmethod
+    def open(cls, path: str | None, *, fallback=None,
+             default_exponent: float = 1.0) -> "CostModel":
+        """Load the model at ``path`` if it exists, else start a fresh one
+        that will save there. ``open(None)`` is a fresh in-memory model."""
+        if path and os.path.exists(path):
+            with open(path) as f:
+                return cls.from_dict(json.load(f), path=path, fallback=fallback)
+        return cls(path, default_exponent=default_exponent, fallback=fallback)
+
+
+def observed_drift(pairs: Iterable[tuple[float, float]]) -> float:
+    """Mean |log(observed / estimated)| over (estimated, observed) pairs.
+
+    0.0 means the profile was perfect; ``log 2 ≈ 0.69`` means observations
+    run 2× off the estimates on (geometric) average. Pairs with a
+    non-positive side are skipped — failed tasks report 0 seconds and must
+    not register as drift.
+    """
+    logs = [abs(math.log(obs / est)) for est, obs in pairs if est > 0 and obs > 0]
+    return sum(logs) / len(logs) if logs else 0.0

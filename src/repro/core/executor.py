@@ -46,12 +46,26 @@ class LocalExecutorPool:
         wal: SearchWAL | None = None,
         failure_hook: Callable[[int, TrainTask], None] | None = None,
         speculation_factor: float | None = None,
+        on_result: Callable[[TaskResult], None] | None = None,
     ):
         self._n_executors = n_executors
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook  # tests inject ExecutorFailure here
         self.speculation_factor = speculation_factor
+        #: called with every accepted TaskResult the moment it lands, on the
+        #: worker thread — this is how the feedback CostModel observes
+        #: runtimes (session.py chains onto it). Exceptions are swallowed:
+        #: a broken observer must not take an executor down with it.
+        self.on_result = on_result
+        self._stragglers: list[TaskResult] = []
         self._dead: set[int] = set()
+
+    def _emit(self, res: TaskResult) -> None:
+        if self.on_result is not None:
+            try:
+                self.on_result(res)
+            except Exception:
+                pass
 
     @property
     def n_executors(self) -> int:
@@ -64,6 +78,7 @@ class LocalExecutorPool:
         Closing the iterator early cancels cleanly: workers stop pulling new
         tasks after their current one and the pool joins them.
         """
+        self._stragglers = []  # per-submit buffer (see drain_stragglers)
         shared: _queue.Queue[TrainTask] = _queue.Queue()
         dynamic = assignment.policy in _DYNAMIC_POLICIES
         if dynamic:
@@ -97,10 +112,12 @@ class LocalExecutorPool:
                 raise
             except Exception as e:  # task-level failure: record, don't kill pool
                 res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
+            accepted = False
             with results_lock:
                 in_flight.pop(task.task_id, None)
                 if task.task_id not in results:  # first completion wins
                     results[task.task_id] = res
+                    accepted = True
                     if res.ok:  # failures stay out of the WAL so resume retries
                         self.wal.record(
                             WALRecord(
@@ -110,7 +127,9 @@ class LocalExecutorPool:
                                 executor_id=eid,
                             )
                         )
-                    out.put(res)
+            if accepted:
+                self._emit(res)
+                out.put(res)
 
         def maybe_speculate(eid: int) -> TrainTask | None:
             """Idle executor: duplicate the longest-overdue in-flight task."""
@@ -225,11 +244,27 @@ class LocalExecutorPool:
                     except Exception as e:
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
                     results[task.task_id] = res
+                    self._emit(res)
                     yield res
         finally:
             stop.set()
             for th in threads:
                 th.join()
+            # tasks that finished while the stream was being cancelled: the
+            # WAL has them but the consumer never saw them. Park them for
+            # drain_stragglers() so a replanning driver can re-surface them.
+            while True:
+                try:
+                    self._stragglers.append(out.get_nowait())
+                except _queue.Empty:
+                    break
+
+    def drain_stragglers(self) -> list[TaskResult]:
+        """Results completed during an early ``submit`` cancellation (close /
+        break-out). The Session replan loop collects these so no trained
+        model is silently dropped; the buffer is cleared on read."""
+        got, self._stragglers = self._stragglers, []
+        return got
 
     def run(self, assignment: Assignment, data: DenseMatrix) -> list[TaskResult]:
         """Blocking convenience: drain :meth:`submit` into a list."""
@@ -290,6 +325,7 @@ class MeshSliceExecutorPool:
         failure_hook: Callable[[int, TrainTask], None] | None = None,
         slices: Sequence[object] | None = None,
         driver_slice: object | None = None,
+        on_result: Callable[[TaskResult], None] | None = None,
     ):
         if slices is not None:
             self.slices = list(slices)
@@ -306,7 +342,18 @@ class MeshSliceExecutorPool:
         # slice 0's handle (fine on a single host where slices are logical —
         # on a real pod pass a driver-local mesh that outlives the slices)
         self.driver_slice = driver_slice if driver_slice is not None else self.slices[0]
+        #: same contract as LocalExecutorPool.on_result: every result, as it
+        #: lands, observer exceptions swallowed (CostModel feedback hook)
+        self.on_result = on_result
         self._dead: set[int] = set()
+
+    def _emit(self, res: TaskResult) -> TaskResult:
+        if self.on_result is not None:
+            try:
+                self.on_result(res)
+            except Exception:
+                pass
+        return res
 
     @property
     def n_executors(self) -> int:
@@ -362,7 +409,7 @@ class MeshSliceExecutorPool:
                     alive.discard(eid)
                     stranded.extend(q[i:])
                     break
-                yield res
+                yield self._emit(res)
         # failure re-queue: surviving slices absorb dead slices' work
         while stranded:
             pending = [t for t in stranded if not self.wal.is_done(t.task_id)]
@@ -377,7 +424,7 @@ class MeshSliceExecutorPool:
                         res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
                     except Exception as e:
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
-                    yield res
+                    yield self._emit(res)
                 break
             for idx, task in enumerate(pending):
                 if not alive:  # last survivor died mid-re-queue
@@ -391,7 +438,7 @@ class MeshSliceExecutorPool:
                     alive.discard(eid)
                     stranded.append(task)  # retry on the next survivor
                     continue
-                yield res
+                yield self._emit(res)
 
     def run(self, assignment: Assignment, data) -> list[TaskResult]:
         """Blocking convenience: drain :meth:`submit` into a list."""

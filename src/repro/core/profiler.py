@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Sequence
 
 from repro.core.data_format import DenseMatrix
 from repro.core.interface import TrainTask, get_estimator
@@ -39,10 +39,26 @@ class ProfileReport:
     profiling_seconds: float         # wall time spent profiling
     sampling_rate: float | None      # None for analytic profiling
 
-    def ratio_of(self, total_seconds: float) -> float:
-        """Profiling overhead as a fraction of a given total (paper Fig. 3)."""
-        denom = total_seconds + self.profiling_seconds
+    def ratio_of(self, execution_seconds: float) -> float:
+        """Profiling overhead as a fraction of the whole search (paper Fig. 3).
+
+        CONTRACT: ``execution_seconds`` is time spent OUTSIDE profiling
+        (training/scheduling only) — this method adds ``profiling_seconds``
+        itself to form the total. Passing a wall-clock total that already
+        includes profiling double-counts it (profiling lands in the
+        denominator twice, understating the ratio); use
+        :meth:`ratio_of_total` for totals measured around the whole search.
+        """
+        denom = execution_seconds + self.profiling_seconds
         return self.profiling_seconds / denom if denom > 0 else 0.0
+
+    def ratio_of_total(self, total_seconds: float) -> float:
+        """Overhead fraction when ``total_seconds`` already INCLUDES the
+        profiling time (e.g. one timer around the whole search). Clamped to
+        [0, 1] so a slightly-stale total can't report an impossible ratio."""
+        if total_seconds <= 0:
+            return 0.0
+        return min(1.0, self.profiling_seconds / total_seconds)
 
 
 class SamplingProfiler:

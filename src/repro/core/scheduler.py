@@ -36,8 +36,12 @@ __all__ = [
     "schedule_round_robin",
     "simulate_makespan",
     "simulate_dynamic",
+    "simulate_replan",
     "lpt_lower_bound",
     "rebalance",
+    "replan",
+    "restrict",
+    "plan_makespan_estimate",
 ]
 
 
@@ -182,3 +186,173 @@ def rebalance(
     is exactly what makes elastic re-planning cheap.
     """
     return schedule(remaining, n_executors, policy=policy)
+
+
+# --------------------------------------------------------------------------
+# Profile-feedback re-planning (DESIGN.md §3.1).
+# --------------------------------------------------------------------------
+
+def plan_makespan_estimate(assignment: Assignment) -> float:
+    """Policy-aware makespan estimate of a plan under its tasks' costs.
+
+    Static plans answer directly (max per-executor load); dynamic pull-queue
+    plans are evaluated by list-scheduling their queue longest-first — their
+    ``estimated_loads`` pile everything on queue 0 and would be meaningless
+    as a makespan.
+    """
+    tasks = assignment.all_tasks()
+    if not tasks:
+        return 0.0
+    if assignment.policy in ("dynamic", "lpt_dynamic"):
+        costs = _costs(tasks)
+        return simulate_dynamic(
+            tasks, assignment.n_executors,
+            {t.task_id: c for t, c in zip(tasks, costs)})
+    return assignment.estimated_makespan
+
+
+def restrict(assignment: Assignment, remaining: Sequence[TrainTask]) -> Assignment:
+    """The residual of a plan: drop completed tasks, adopt updated costs.
+
+    ``remaining`` is matched by ``task_id``; the returned plan keeps the
+    original executor placement and ordering but carries ``remaining``'s
+    (possibly re-estimated) task objects, so its estimate is comparable with
+    a fresh :func:`replan` of the same tasks.
+    """
+    by_id = {t.task_id: t for t in remaining}
+    plan = [[by_id[t.task_id] for t in q if t.task_id in by_id]
+            for q in assignment.plan]
+    loads = [sum(_costs(q)) if q else 0.0 for q in plan]
+    return Assignment(plan=plan, estimated_loads=loads, policy=assignment.policy)
+
+
+def replan(
+    remaining: Sequence[TrainTask],
+    n_executors: int,
+    *,
+    current: Assignment | None = None,
+    policy: str = "lpt",
+) -> Assignment:
+    """Mid-session re-plan: re-run :func:`rebalance` on the remaining tasks.
+
+    Called by the Session when observed runtimes have drifted from the
+    profile (see ``repro.core.cost_model.observed_drift``) — ``remaining``
+    should carry costs re-estimated from the feedback CostModel. When
+    ``current`` (the residual of the active plan, via :func:`restrict`, with
+    the SAME updated costs) is given, the cheaper of {rebalanced, current} is
+    returned — so a replan NEVER increases the estimated makespan.
+    """
+    fresh = rebalance(remaining, n_executors, policy=policy)
+    if current is not None and (
+            plan_makespan_estimate(current) < plan_makespan_estimate(fresh)):
+        return current
+    return fresh
+
+
+class _RatioFeedback:
+    """Default feedback for :func:`simulate_replan`: per-family mean
+    observed/estimated ratio — the poor man's CostModel, no size axis."""
+
+    def __init__(self):
+        self._ratios: dict[str, list[float]] = {}
+
+    def observe(self, task: TrainTask, seconds: float) -> None:
+        if task.cost and task.cost > 0 and seconds > 0:
+            self._ratios.setdefault(task.estimator, []).append(seconds / task.cost)
+
+    def predict(self, task: TrainTask) -> float | None:
+        rs = self._ratios.get(task.estimator)
+        if rs and task.cost:
+            return task.cost * sum(rs) / len(rs)
+        return None
+
+
+def simulate_replan(
+    tasks: Sequence[TrainTask],
+    n_executors: int,
+    true_cost: dict[int, float],
+    *,
+    threshold: float = 0.25,
+    feedback=None,
+    min_window: int = 2,
+    max_replans: int = 8,
+) -> dict:
+    """Device-free event simulation of static LPT + profile-feedback replans.
+
+    Plans with the tasks' ESTIMATED costs, executes under ``true_cost``.
+    Each completion is fed to ``feedback`` (``observe(task, seconds)`` /
+    ``predict(task) -> seconds | None``; defaults to a per-family ratio
+    corrector). When the drift of completions since the last plan exceeds
+    ``threshold``, unstarted tasks are re-estimated and re-packed LPT onto
+    the executors' current frontiers. This is the benchmark's Fig. 5-style
+    mis-estimate recovery path and the reference semantics for the live
+    Session replan loop.
+
+    Returns ``{"makespan", "replans", "observed"}``.
+    """
+    from repro.core.cost_model import observed_drift
+
+    if n_executors <= 0:
+        raise ValueError("n_executors must be positive")
+    est = {t.task_id: c for t, c in zip(tasks, _costs(tasks))}
+    queues = [list(q) for q in schedule_lpt(list(tasks), n_executors).plan]
+    fb = feedback if feedback is not None else _RatioFeedback()
+    ready = [0.0] * n_executors         # per-executor frontier (last finish)
+    heap: list[tuple[float, int, int, TrainTask]] = []  # (finish, seq, eid, task)
+    busy: set[int] = set()
+    seq = 0
+
+    def start_next(eid: int, now: float | None = None) -> None:
+        nonlocal seq
+        if not queues[eid]:
+            busy.discard(eid)
+            return
+        if now is not None:
+            ready[eid] = max(ready[eid], now)   # an idle executor restarts NOW
+        t = queues[eid].pop(0)
+        finish = ready[eid] + true_cost[t.task_id]
+        ready[eid] = finish
+        heapq.heappush(heap, (finish, seq, eid, t))
+        busy.add(eid)
+        seq += 1
+
+    for e in range(n_executors):
+        start_next(e)
+    window: list[tuple[float, float]] = []
+    makespan, replans, observed = 0.0, 0, 0
+    while heap:
+        finish, _, eid, task = heapq.heappop(heap)
+        busy.discard(eid)
+        makespan = max(makespan, finish)
+        obs = true_cost[task.task_id]
+        fb.observe(task, obs)
+        observed += 1
+        window.append((est[task.task_id], obs))
+        remaining = [t for q in queues for t in q]
+        if (remaining and replans < max_replans and len(window) >= min_window
+                and observed_drift(window) > threshold):
+            recosted = []
+            for t in remaining:
+                p = fb.predict(t)
+                recosted.append(t.with_cost(p) if p is not None and p > 0 else t)
+            # LPT onto executors seeded with their current frontiers: busy
+            # executors free up at ready[e] >= now, idle ones are free NOW.
+            costs = _costs(recosted)
+            order = sorted(range(len(recosted)), key=lambda i: -costs[i])
+            loads = [(max(ready[e], finish), e) for e in range(n_executors)]
+            heapq.heapify(loads)
+            queues = [[] for _ in range(n_executors)]
+            for i in order:
+                load, e = heapq.heappop(loads)
+                queues[e].append(recosted[i])
+                heapq.heappush(loads, (load + costs[i], e))
+            for t, c in zip(recosted, costs):
+                est[t.task_id] = c           # drift now measured vs new plan
+            window = []
+            replans += 1
+            for e in range(n_executors):     # wake executors the replan fed
+                if e not in busy:
+                    start_next(e, now=finish)
+        if eid not in busy:
+            start_next(eid)
+    return {"makespan": makespan, "replans": replans, "observed": observed}

@@ -19,6 +19,11 @@ observe loop with a REAL lifecycle instead of a single blocking call:
   task, so nothing is lost;
 * ``Session.resume(wal_path, spec)`` reconstructs a killed search from its
   write-ahead log and finishes only the remaining work;
+* profile feedback (``spec.cost_model_path`` / ``spec.replan_threshold``):
+  every completion updates a persistent :class:`~repro.core.cost_model.CostModel`
+  through the pools' ``on_result`` hook, warm families skip the profiler, and
+  when observed runtimes drift past the threshold the remaining tasks are
+  re-estimated and re-planned mid-round (DESIGN.md §3.1);
 * ``Session.run(spec, train, validate)`` is the one-shot convenience that
   the deprecated ``ModelSearcher`` shim (searcher.py) delegates to.
 """
@@ -28,13 +33,13 @@ import time
 from typing import Callable, Iterator, Mapping
 
 from repro.core.backend import ExecutorBackend
+from repro.core.cost_model import CostModel, observed_drift
 from repro.core.data_format import DenseMatrix
 from repro.core.executor import LocalExecutorPool
 from repro.core.fault import SearchWAL
 from repro.core.interface import TaskResult
-from repro.core.profiler import attach_costs
 from repro.core.results import METRICS, MultiModel
-from repro.core.scheduler import schedule
+from repro.core.scheduler import replan, restrict, schedule
 from repro.core.spec import SearchSpec
 
 __all__ = ["Session", "SearchStats"]
@@ -42,6 +47,11 @@ __all__ = ["Session", "SearchStats"]
 #: cost-blind policies skip profiling entirely, matching the paper's
 #: random-scheduling baseline which pays no profiling overhead.
 _COST_BLIND = ("random", "round_robin")
+
+#: a replan needs at least this many fresh observations before the drift
+#: signal is trusted, and a single round never replans more than this often
+_MIN_REPLAN_WINDOW = 2
+_MAX_REPLANS_PER_ROUND = 8
 
 
 class SearchStats:
@@ -53,6 +63,9 @@ class SearchStats:
         self.total_seconds = 0.0
         self.n_tasks = 0
         self.n_failures = 0
+        self.n_replans = 0              # mid-round drift-triggered replans
+        self.n_model_estimates = 0      # tasks costed by the CostModel (free)
+        self.n_profiled = 0             # tasks that still needed the profiler
         self.policy = ""
 
     @property
@@ -79,6 +92,11 @@ class Session:
         self.finished = False          # True once results() has been drained
         self.stop_reason: str | None = None
         self._results: list[TaskResult] = []
+        #: the feedback CostModel (DESIGN.md §3.1); populated lazily by
+        #: results() when the spec enables it, or adopted from a CostModel
+        #: passed as the spec's profiler. Inspectable mid-stream.
+        self.cost_model: CostModel | None = None
+        self._observer_installed = False
 
     # ------------------------------------------------------------------
     @property
@@ -88,6 +106,108 @@ class Session:
                 self.spec.n_executors, wal=self.wal, **self.spec.pool_options
             )
         return self._backend
+
+    # -- profile-feedback plumbing (DESIGN.md §3.1) --------------------
+    def _default_cost_model_path(self) -> str | None:
+        """Where the model persists: ``cost_model_path``, else next to the
+        WAL ("<wal_path>.cost.json") once the feedback loop is enabled."""
+        spec = self.spec
+        if spec.cost_model_path is not None:
+            return spec.cost_model_path
+        if spec.wal_path and spec.replan_threshold is not None:
+            return spec.wal_path + ".cost.json"
+        return None
+
+    def _ensure_cost_model(self, profiler) -> CostModel | None:
+        """Resolve the session's CostModel: an explicitly-passed CostModel
+        profiler is adopted (inheriting the default persistence path if it
+        has none of its own); otherwise one is opened at the default path."""
+        if self.cost_model is not None:
+            return self.cost_model
+        if isinstance(profiler, CostModel):
+            if profiler.path is None:
+                default = self._default_cost_model_path()
+                if default is not None and profiler.n_observed == 0:
+                    # pathless declared model + a default location: warm-load
+                    # what a previous session persisted there, keeping the
+                    # declared fallback/exponent
+                    profiler = CostModel.open(
+                        default, fallback=profiler.fallback,
+                        default_exponent=profiler.default_exponent)
+                else:
+                    profiler.path = default
+            self.cost_model = profiler
+            return profiler
+        path = self._default_cost_model_path()
+        if path is None and self.spec.replan_threshold is None:
+            return None                       # feedback loop not requested
+        self.cost_model = CostModel.open(path)
+        return self.cost_model
+
+    def _install_observer(self, backend, cm: CostModel, n_rows: int) -> bool:
+        """Chain the cost-model observer onto the pool's ``on_result`` hook
+        so EVERY completion updates the model the moment it lands — including
+        results a cancelled stream never surfaces. Returns False for foreign
+        backends without the hook; the caller then observes inline.
+
+        A hook installed by an earlier Session on a reused backend is
+        REPLACED, not chained onto — otherwise the dead session's model
+        would keep absorbing runtimes tagged with ITS training-data size."""
+        if not hasattr(backend, "on_result"):
+            return False
+        if not self._observer_installed:
+            prev = backend.on_result
+            if getattr(prev, "_session_observer", False):
+                prev = prev._chained_prev      # drop the stale session's hook
+
+            def _observe(res: TaskResult, _prev=prev) -> None:
+                cm.observe_result(res, n_rows)
+                if _prev is not None:
+                    _prev(res)
+
+            _observe._session_observer = True
+            _observe._chained_prev = prev
+            backend.on_result = _observe
+            self._observer_installed = True
+        return True
+
+    def _cost_batch(self, batch, train, profiler, cm: CostModel | None):
+        """Attach cost estimates: CostModel answers what it has learned
+        (microseconds), the profiler is paid only for cold tasks — after
+        warm-up the paper's Fig. 3 profiling overhead goes to ~zero."""
+        known: dict[int, float] = {}
+        if cm is not None:
+            known = cm.predict_many(batch, train.n_rows)
+            self.stats.n_model_estimates += len(known)
+        unknown = [t for t in batch if t.task_id not in known]
+        if unknown:
+            report = profiler.profile(unknown, train)
+            self.stats.profiling_seconds += report.profiling_seconds
+            self.stats.n_profiled += len(report.costs)
+            known.update(report.costs)
+        return [t.with_cost(known[t.task_id]) if t.task_id in known else t
+                for t in batch]
+
+    def _reestimate(self, pending, train, cm: CostModel | None, round_results):
+        """Re-cost the remaining tasks from observed feedback before a replan."""
+        if cm is not None:
+            out = []
+            for t in pending:
+                p = cm.estimate(t, train.n_rows)
+                out.append(t.with_cost(p) if p is not None and p > 0 else t)
+            return out
+        # no model (foreign setup): per-family observed/estimated correction
+        ratios: dict[str, list[float]] = {}
+        for r in round_results:
+            if r.ok and r.task.cost and r.train_seconds > 0:
+                ratios.setdefault(r.task.estimator, []).append(
+                    r.train_seconds / r.task.cost)
+        out = []
+        for t in pending:
+            rs = ratios.get(t.estimator)
+            out.append(t.with_cost(t.cost * sum(rs) / len(rs))
+                       if rs and t.cost else t)
+        return out
 
     # ------------------------------------------------------------------
     def results(
@@ -110,7 +230,12 @@ class Session:
         t_start = time.perf_counter()
         tuner = spec.build_tuner()
         profiler = spec.build_profiler()
+        cm = self._ensure_cost_model(profiler)
+        if isinstance(profiler, CostModel) and cm is not None:
+            profiler = cm          # _ensure may have swapped in the warm copy
         backend = self.backend
+        pool_observes = (self._install_observer(backend, cm, train.n_rows)
+                         if cm is not None else False)
         metric_fn = METRICS[spec.metric]
         try:
             while True:
@@ -122,17 +247,19 @@ class Session:
                     if not tuner.is_dynamic:
                         break
                     continue
-                # 1. profile (paper §III-C)
+                # 1. profile (paper §III-C) — the CostModel serves what it
+                # has learned for free, the profiler covers cold tasks
                 if spec.policy in _COST_BLIND:
                     costed = list(batch)
                 else:
-                    report = profiler.profile(batch, train)
-                    self.stats.profiling_seconds += report.profiling_seconds
-                    costed = attach_costs(batch, report)
+                    costed = self._cost_batch(batch, train, profiler, cm)
                 # 2. schedule (greedy job-shop / baselines)
                 assignment = schedule(costed, spec.n_executors,
                                       policy=spec.policy, seed=spec.seed)
-                # 3. execute — stream results off the backend as they land
+                # 3. execute — stream results off the backend as they land.
+                # When observed runtimes drift past spec.replan_threshold,
+                # cancel the stream, re-estimate the remaining tasks from
+                # feedback and re-run rebalance (scheduler.replan) mid-round.
                 t0 = time.perf_counter()
                 round_results: list[TaskResult] = []
                 scores: dict[int, float] = {}  # task_id -> validation score
@@ -143,27 +270,74 @@ class Session:
                             validate.y, r.model.predict_proba(validate.x))
                     return scores[r.task.task_id]
 
-                stream = backend.submit(assignment, train)
-                stream_close = getattr(stream, "close", None)
-                try:
-                    for res in stream:
-                        round_results.append(res)
-                        self._results.append(res)
-                        if on_result is not None:
-                            on_result(res)
-                        yield res
-                        self.stop_reason = self._budget_hit(t_start)
-                        if (self.stop_reason is None
-                                and spec.target_metric is not None
-                                and validate is not None and res.ok
-                                and score_of(res) >= spec.target_metric):
-                            self.stop_reason = "target_metric"
-                        if self.stop_reason:
-                            break
-                finally:
-                    if stream_close is not None:  # plain iterators lack close
-                        stream_close()  # cancels workers if we broke out early
+                pending = list(costed)
+                done_ids: set[int] = set()
+                replans_left = _MAX_REPLANS_PER_ROUND
+
+                def take(res: TaskResult) -> None:
+                    """Bookkeeping shared by the stream and straggler paths."""
+                    round_results.append(res)
+                    self._results.append(res)
+                    done_ids.add(res.task.task_id)
+                    if cm is not None and not pool_observes:
+                        cm.observe_result(res, train.n_rows)
+                    if on_result is not None:
+                        on_result(res)
+
+                while True:
+                    stream = backend.submit(assignment, train)
+                    stream_close = getattr(stream, "close", None)
+                    window: list[tuple[float, float]] = []  # (est, observed)
+                    want_replan = False
+                    try:
+                        for res in stream:
+                            take(res)
+                            yield res
+                            self.stop_reason = self._budget_hit(t_start)
+                            if (self.stop_reason is None
+                                    and spec.target_metric is not None
+                                    and validate is not None and res.ok
+                                    and score_of(res) >= spec.target_metric):
+                                self.stop_reason = "target_metric"
+                            if self.stop_reason:
+                                break
+                            if res.ok and res.task.cost and res.train_seconds > 0:
+                                window.append((res.task.cost, res.train_seconds))
+                            if (spec.replan_threshold is not None
+                                    and replans_left > 0
+                                    and len(window) >= _MIN_REPLAN_WINDOW
+                                    and observed_drift(window) > spec.replan_threshold):
+                                want_replan = True
+                                break
+                    finally:
+                        if stream_close is not None:  # plain iterators lack close
+                            stream_close()  # cancels workers if we broke out early
+                    if want_replan and not self.stop_reason:
+                        # tasks that finished while the stream was cancelling
+                        # are journalled but unseen — surface them, or their
+                        # trained models would be silently lost
+                        drain = getattr(backend, "drain_stragglers", None)
+                        if drain is not None:
+                            for res in drain():
+                                take(res)
+                                yield res
+                    if self.stop_reason:
+                        break
+                    pending = [t for t in pending if t.task_id not in done_ids
+                               and not self.wal.is_done(t.task_id)]
+                    if not want_replan or not pending:
+                        break
+                    # feedback: re-cost the remainder, then rebalance — never
+                    # accepting a plan worse than the current residual
+                    pending = self._reestimate(pending, train, cm, round_results)
+                    assignment = replan(pending, spec.n_executors,
+                                        current=restrict(assignment, pending),
+                                        policy=spec.policy)
+                    replans_left -= 1
+                    self.stats.n_replans += 1
                 self.stats.execution_seconds += time.perf_counter() - t0
+                if cm is not None and cm.path:
+                    cm.save()          # per-round checkpoint of the model
                 if self.stop_reason:
                     break
                 # 4. feed scores back to dynamic tuners (reusing any scores
@@ -174,6 +348,11 @@ class Session:
                     tuner.observe([(r.task, score_of(r))
                                    for r in round_results if r.ok])
         finally:
+            if cm is not None and cm.path:
+                try:
+                    cm.save()
+                except OSError:
+                    pass               # a torn-down tmpdir must not mask stats
             self.stats.total_seconds = time.perf_counter() - t_start
             self.stats.n_tasks = len(self._results)
             self.stats.n_failures = sum(1 for r in self._results if not r.ok)

@@ -26,7 +26,7 @@ metric, tuner kind or budget fails immediately, not three rounds into a search.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Sequence
+from typing import Any, Mapping
 
 from repro.core.grid import GridBuilder, SearchSpace
 from repro.core.profiler import AnalyticProfiler, SamplingProfiler
@@ -38,7 +38,7 @@ __all__ = ["SearchSpec", "POLICIES"]
 #: scheduling policies understood by repro.core.scheduler.schedule
 POLICIES = ("lpt", "random", "round_robin", "dynamic", "lpt_dynamic")
 
-_PROFILER_KINDS = ("sampling", "analytic")
+_PROFILER_KINDS = ("sampling", "analytic", "cost_model")
 
 
 def _space_from_dict(d: Mapping[str, Any]) -> SearchSpace:
@@ -68,6 +68,16 @@ class SearchSpec:
     max_tasks: int | None = None
     #: stop as soon as a validated result reaches this metric value
     target_metric: float | None = None
+    # -- profile-feedback loop (DESIGN.md §3.1) --------------------------
+    #: where the persistent CostModel JSON lives; None + a wal_path defaults
+    #: to "<wal_path>.cost.json" once feedback is enabled, so the model sits
+    #: next to the WAL and Session.resume starts warm
+    cost_model_path: str | None = None
+    #: observed/estimated drift (mean |log obs/est|, see
+    #: repro.core.cost_model.observed_drift) above which the Session re-runs
+    #: rebalance on the remaining tasks mid-round; None disables re-planning.
+    #: log(2) ≈ 0.69 means "replan when runtimes are 2× off the profile"
+    replan_threshold: float | None = None
     #: fault-injection / speculation knobs forwarded to the executor pool
     pool_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -101,7 +111,7 @@ class SearchSpec:
                 raise ValueError(f"unknown profiler kind {kind!r}; known: {_PROFILER_KINDS}")
         elif self.profiler is not None and not hasattr(self.profiler, "profile"):
             raise TypeError("profiler must expose .profile(tasks, data)")
-        for name in ("max_seconds", "max_tasks"):
+        for name in ("max_seconds", "max_tasks", "replan_threshold"):
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive, got {v}")
@@ -143,6 +153,18 @@ class SearchSpec:
             if kind == "sampling":
                 kw.setdefault("seed", self.seed)
                 return SamplingProfiler(**kw)
+            if kind == "cost_model":
+                # persistent learned profiler; cold tasks fall back to the
+                # declared (or default sampling) profiler
+                from repro.core.cost_model import CostModel
+
+                fallback = kw.pop("fallback", None)
+                if isinstance(fallback, Mapping):
+                    fallback = self.replace(profiler=dict(fallback)).build_profiler()
+                elif fallback is None:
+                    fallback = SamplingProfiler(sampling_rate=0.03, seed=self.seed)
+                return CostModel.open(kw.pop("path", self.cost_model_path),
+                                      fallback=fallback, **kw)
             return AnalyticProfiler(**kw)
         return self.profiler
 

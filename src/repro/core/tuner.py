@@ -9,10 +9,9 @@ lightweight surrogate-based proposer as the pluggable examples.
 from __future__ import annotations
 
 import abc
-import dataclasses
 import math
 import random as _random
-from typing import Any, Mapping, Sequence
+from typing import Any, Sequence
 
 from repro.core.grid import SearchSpace, enumerate_tasks
 from repro.core.interface import TrainTask

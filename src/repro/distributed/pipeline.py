@@ -18,7 +18,6 @@ resident microbatch and swaps activations with its neighbour each tick.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -85,6 +85,8 @@ def run_tabular(args) -> int:
         max_seconds=args.max_seconds,
         max_tasks=args.max_tasks,
         target_metric=args.target_metric,
+        cost_model_path=args.cost_model,
+        replan_threshold=args.replan_threshold,
     )
     print(f"search space: {spec.n_grid_tasks} configurations over "
           f"{[s.estimator for s in spec.spaces]}")
@@ -113,9 +115,15 @@ def run_tabular(args) -> int:
             from repro.core import METRICS
             test_score = METRICS[args.metric](test.y, r.model.predict_proba(test.x))
     stopped = f" stop={session.stop_reason}" if session.stop_reason else ""
+    feedback = ""
+    if session.cost_model is not None:
+        feedback = (f" replans={session.stats.n_replans} "
+                    f"model_estimates={session.stats.n_model_estimates} "
+                    f"profiled={session.stats.n_profiled} "
+                    f"cost_model={session.cost_model.path or '<memory>'}")
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
           f"profiling_ratio={session.stats.profiling_ratio:.1%} "
-          f"failures={session.stats.n_failures}{stopped}")
+          f"failures={session.stats.n_failures}{stopped}{feedback}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
           f"test {args.metric}={test_score:.4f}")
     return 0
@@ -187,6 +195,14 @@ def main() -> int:
     p.add_argument("--wal", default=None, help="WAL path for restartable search")
     p.add_argument("--resume", action="store_true",
                    help="resume a search whose WAL is at --wal")
+    p.add_argument("--cost-model", default=None, metavar="PATH",
+                   help="persistent CostModel JSON: observed runtimes feed a "
+                        "learned profiler that replaces sampling once warm "
+                        "(defaults to <wal>.cost.json when --replan-threshold "
+                        "is set alongside --wal)")
+    p.add_argument("--replan-threshold", type=float, default=None, metavar="DRIFT",
+                   help="re-run rebalance mid-round when mean |log(observed/"
+                        "estimated)| exceeds this (0.69 ≈ runtimes 2x off)")
     p.add_argument("--max-seconds", type=float, default=None,
                    help="early-stop budget: wall-clock seconds")
     p.add_argument("--max-tasks", type=int, default=None,

@@ -16,7 +16,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import configs
 from repro.distributed import sharding as shd
-from repro.models import decode_step, init_decode_state, init_params, prefill, train_loss
+from repro.models import decode_step, init_decode_state, init_params, prefill
 from repro.models.transformer import ArchConfig
 from repro.train.optimizer import make_optimizer
 from repro.train.train_step import build_train_step, make_train_state_specs

@@ -17,9 +17,7 @@ MODEL_FLOPS / HLO_FLOPs catches remat recompute and dispatch overhead.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Any
 
 __all__ = ["HW_V5E", "CellReport", "analyze_compiled", "parse_collective_bytes", "model_flops"]
 

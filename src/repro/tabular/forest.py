@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interface import Estimator, TrainedModel, register_estimator
-from repro.tabular.gbdt import build_tree, predict_margin
+from repro.tabular.gbdt import build_tree
 
 __all__ = ["ForestEstimator", "ForestModel"]
 
