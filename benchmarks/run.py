@@ -23,7 +23,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import cost_model_bench, lm_bench, paper_figs
+from benchmarks import cost_model_bench, fusion_bench, lm_bench, paper_figs
 
 BENCHES = {
     "fig3": paper_figs.fig3_profiling_ratio,
@@ -33,13 +33,18 @@ BENCHES = {
     "fig7": paper_figs.fig7_auc_parity,
     "session_stream": paper_figs.session_streaming,
     "cost_model": cost_model_bench.mis_estimate_recovery,
+    "fusion": fusion_bench.full,
+    "histogram_sweep": fusion_bench.histogram_tile_sweep,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
 }
 
-#: the --smoke table: deterministic + fast, safe to gate CI on
+#: the --smoke table: deterministic (except the *.wallclock.* rows, which
+#: are excluded from the exact-compared baseline) + fast, safe to gate CI on
 SMOKE_BENCHES = {
     "cost_model": cost_model_bench.smoke,
+    "fusion": fusion_bench.smoke,
+    "histogram": fusion_bench.histogram_smoke,
 }
 
 

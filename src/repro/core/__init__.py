@@ -6,6 +6,13 @@ from repro.core.backend import ExecutorBackend
 from repro.core.cost_model import CostModel, observed_drift, param_bucket
 from repro.core.data_format import DenseMatrix, available_formats, convert
 from repro.core.executor import LocalExecutorPool, MeshSliceExecutorPool
+from repro.core.fusion import (
+    CompileCache,
+    FusedBatch,
+    compile_cache,
+    fuse_tasks,
+    split_for_balance,
+)
 from repro.core.grid import GridBuilder, SearchSpace, enumerate_tasks
 from repro.core.interface import (
     Estimator,

@@ -146,25 +146,43 @@ class CostModel:
         self._ratios: dict[str, _RatioStats] = {}             # obs/est per family
         self._n_observed = 0
 
+    @staticmethod
+    def _family_key(family: str, batched: bool) -> str:
+        """Batched (fused) execution gets its OWN family: amortized per-task
+        seconds inside a vmap batch follow a different law than solo runs
+        (compile amortized away, device kept busy), so the two populations
+        must not pollute each other's regression."""
+        return f"{family}#batched" if batched else family
+
     # -- write side --------------------------------------------------------
-    def observe(self, task: TrainTask, seconds: float, n_rows: int) -> None:
-        """Record one completed task. No-ops on junk (failed tasks report 0s)."""
+    def observe(self, task: TrainTask, seconds: float, n_rows: int,
+                *, batched: bool = False) -> None:
+        """Record one completed task. No-ops on junk (failed tasks report 0s).
+
+        ``batched=True`` records under the family's fused-execution law;
+        ``seconds`` is then the AMORTIZED share (batch total / batch size),
+        which is exactly what the scheduler wants back from ``estimate``.
+        """
         if seconds <= 0 or n_rows <= 0:
             return
+        key = self._family_key(task.estimator, batched)
         x, y = math.log(n_rows), math.log(seconds)
         with self._lock:
-            fam = self._buckets.setdefault(task.estimator, {})
+            fam = self._buckets.setdefault(key, {})
             fam.setdefault(param_bucket(task.params), _LogStats()).add(x, y)
-            self._families.setdefault(task.estimator, _LogStats()).add(x, y)
+            self._families.setdefault(key, _LogStats()).add(x, y)
             if task.cost is not None and task.cost > 0:
-                self._ratios.setdefault(task.estimator, _RatioStats()).add(
+                self._ratios.setdefault(key, _RatioStats()).add(
                     task.cost, seconds)
             self._n_observed += 1
 
     def observe_result(self, result, n_rows: int) -> None:
-        """``on_result``-shaped adapter: feed a TaskResult straight in."""
+        """``on_result``-shaped adapter: feed a TaskResult straight in. Fused
+        results carry ``batch_size > 1`` and amortized seconds, and land in
+        the batched law automatically."""
         if result.ok:
-            self.observe(result.task, result.train_seconds, n_rows)
+            self.observe(result.task, result.train_seconds, n_rows,
+                         batched=getattr(result, "batch_size", 1) > 1)
 
     # -- read side ---------------------------------------------------------
     @property
@@ -183,41 +201,56 @@ class CostModel:
                 den += stats.n
         return num / den if den else self.default_exponent
 
-    def predict(self, task: TrainTask, n_rows: int) -> float | None:
+    def predict(self, task: TrainTask, n_rows: int,
+                *, batched: bool = False) -> float | None:
         """Size-law prediction in seconds, or None with no relevant data.
 
         Resolution order: exact (family, bucket) stats, then pooled family
         stats. Monotone non-decreasing in ``n_rows`` by construction (slopes
-        are clamped to [0, 3]).
+        are clamped to [0, 3]). ``batched=True`` reads the fused-execution
+        law (amortized per-task seconds).
         """
         if n_rows <= 0:
             return None
+        key = self._family_key(task.estimator, batched)
         x = math.log(n_rows)
         with self._lock:
-            fam = self._buckets.get(task.estimator, {})
+            fam = self._buckets.get(key, {})
             stats = fam.get(param_bucket(task.params))
             if stats is not None and stats.n:
-                return math.exp(stats.predict(x, self._family_exponent(task.estimator)))
-            pooled = self._families.get(task.estimator)
+                return math.exp(stats.predict(x, self._family_exponent(key)))
+            pooled = self._families.get(key)
             if pooled is not None and pooled.n:
-                return math.exp(pooled.predict(x, self._family_exponent(task.estimator)))
+                return math.exp(pooled.predict(x, self._family_exponent(key)))
         return None
 
-    def estimate(self, task: TrainTask, n_rows: int) -> float | None:
+    def estimate(self, task: TrainTask, n_rows: int,
+                 *, batched: bool = False) -> float | None:
         """Best cost estimate for scheduling: bucket law, else the task's own
         prior estimate corrected by the family's observed/estimated ratio,
         else the pooled family law. Still monotone in ``n_rows`` (the ratio
-        branch is constant in size; the others are monotone laws)."""
+        branch is constant in size; the others are monotone laws).
+
+        With ``batched=True`` the fused law answers first; before any fused
+        batch of the family has been observed, the SEQUENTIAL estimate is
+        the conservative fallback (fusion assumed to buy nothing until it
+        has demonstrated otherwise — the ratio branch then learns the
+        amortized/sequential speedup from the very first fused batch).
+        """
+        key = self._family_key(task.estimator, batched)
         with self._lock:
-            fam = self._buckets.get(task.estimator, {})
+            fam = self._buckets.get(key, {})
             stats = fam.get(param_bucket(task.params))
             if stats is not None and stats.n and n_rows > 0:
                 return math.exp(stats.predict(
-                    math.log(n_rows), self._family_exponent(task.estimator)))
-            ratio = self._ratios.get(task.estimator)
+                    math.log(n_rows), self._family_exponent(key)))
+            ratio = self._ratios.get(key)
             if ratio is not None and ratio.n and task.cost is not None and task.cost > 0:
                 return task.cost * ratio.factor()
-        return self.predict(task, n_rows)
+        got = self.predict(task, n_rows, batched=batched)
+        if got is None and batched:
+            return self.estimate(task, n_rows, batched=False)
+        return got
 
     def predict_many(self, tasks: Sequence[TrainTask], n_rows: int) -> dict[int, float]:
         """task_id -> estimate for every task the model can serve."""

@@ -29,12 +29,40 @@ from typing import Callable, Iterator, Sequence
 
 from repro.core.data_format import DenseMatrix
 from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
+from repro.core.fusion import FusedBatch
 from repro.core.interface import TaskResult, TrainTask, get_estimator
 from repro.core.scheduler import Assignment
 
 __all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
 
 _DYNAMIC_POLICIES = ("dynamic", "lpt_dynamic")
+
+
+def _run_fused_unit(unit: FusedBatch, data, eid: int) -> list[TaskResult]:
+    """Train a fused batch as ONE device program and unbatch into per-member
+    results. Amortized accounting: each member's ``train_seconds`` is the
+    batch total divided by the members actually run, and ``batch_size``
+    marks the result as fused for the CostModel's batched law. A whole-batch
+    exception becomes a per-member error result (task-level failure
+    semantics — the executor survives)."""
+    members = list(unit.tasks)
+    est = get_estimator(unit.estimator)
+    try:
+        models, total = est.run_batched(data, [m.params for m in members])
+        per = total / len(members)
+        return [
+            TaskResult(task=m, model=mod, train_seconds=per, executor_id=eid,
+                       batch_size=len(members))
+            for m, mod in zip(members, models)
+        ]
+    except ExecutorFailure:
+        raise
+    except Exception as e:
+        return [
+            TaskResult(task=m, model=None, train_seconds=0.0, executor_id=eid,
+                       error=repr(e), batch_size=len(members))
+            for m in members
+        ]
 
 
 class LocalExecutorPool:
@@ -93,7 +121,49 @@ class LocalExecutorPool:
         in_flight: dict[int, tuple[int, float]] = {}  # task_id -> (executor, t0)
         speculated: set[int] = set()
 
-        def execute(eid: int, task: TrainTask) -> None:
+        def accept(res: TaskResult, eid: int) -> bool:
+            """First-completion-wins bookkeeping shared by all paths; the WAL
+            is written (successes only) before the result is surfaced."""
+            with results_lock:
+                if res.task.task_id in results:
+                    return False
+                results[res.task.task_id] = res
+                if res.ok:
+                    self.wal.record(
+                        WALRecord(task_id=res.task.task_id, key=res.task.key(),
+                                  seconds=res.train_seconds, executor_id=eid))
+            return True
+
+        def execute_fused(eid: int, unit: FusedBatch) -> None:
+            """One fused unit: train pending members as one program, unbatch
+            into per-member results that flow through the normal stream."""
+            with results_lock:
+                pend = {m.task_id for m in unit.tasks
+                        if not self.wal.is_done(m.task_id)
+                        and m.task_id not in results}
+                if not pend:
+                    return
+                in_flight[unit.task_id] = (eid, time.perf_counter())
+            sub = unit.restrict(pend)
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(eid, unit)  # may raise ExecutorFailure
+                batch_results = _run_fused_unit(sub, data, eid)
+            except ExecutorFailure:
+                with results_lock:
+                    in_flight.pop(unit.task_id, None)
+                raise
+            with results_lock:
+                in_flight.pop(unit.task_id, None)
+            for res in batch_results:
+                if accept(res, eid):
+                    self._emit(res)
+                    out.put(res)
+
+        def execute(eid: int, task) -> None:
+            if isinstance(task, FusedBatch):
+                execute_fused(eid, task)
+                return
             if self.wal.is_done(task.task_id):
                 return
             with results_lock:
@@ -112,22 +182,10 @@ class LocalExecutorPool:
                 raise
             except Exception as e:  # task-level failure: record, don't kill pool
                 res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
-            accepted = False
             with results_lock:
                 in_flight.pop(task.task_id, None)
-                if task.task_id not in results:  # first completion wins
-                    results[task.task_id] = res
-                    accepted = True
-                    if res.ok:  # failures stay out of the WAL so resume retries
-                        self.wal.record(
-                            WALRecord(
-                                task_id=task.task_id,
-                                key=task.key(),
-                                seconds=res.train_seconds,
-                                executor_id=eid,
-                            )
-                        )
-            if accepted:
+            # failures stay out of the WAL (accept) so resume retries them
+            if accept(res, eid):
                 self._emit(res)
                 out.put(res)
 
@@ -235,6 +293,17 @@ class LocalExecutorPool:
                     except _queue.Empty:
                         break
             for task in leftovers:
+                if isinstance(task, FusedBatch):
+                    pend = {m.task_id for m in task.tasks
+                            if not self.wal.is_done(m.task_id)
+                            and m.task_id not in results}
+                    if not pend:
+                        continue
+                    for res in _run_fused_unit(task.restrict(pend), data, -1):
+                        if accept(res, -1):
+                            self._emit(res)
+                            yield res
+                    continue
                 if not self.wal.is_done(task.task_id) and task.task_id not in results:
                     est = get_estimator(task.estimator)
                     try:
@@ -309,6 +378,13 @@ class MeshSliceExecutorPool:
     placement, ordering, failure re-queue and WAL bookkeeping — the same
     scheduling semantics as LocalExecutorPool, with slices instead of threads.
 
+    Fused units (:class:`repro.core.fusion.FusedBatch`) are run as one
+    program on their slice: the runner is called with the BATCH and must
+    return ``(payload_per_member, total_seconds)``; the pool unbatches into
+    per-member results with amortized seconds. Estimator-backed batches
+    (the tabular workload) need no special runner — pass none of this and
+    use :func:`_run_fused_unit` semantics via the local pool instead.
+
     Pass ``slices=[...]`` to supply pre-built (or stand-in) slice handles
     directly instead of partitioning a mesh — tests and custom partitioners
     use this to exercise the pool without real multi-device state.
@@ -346,6 +422,7 @@ class MeshSliceExecutorPool:
         #: lands, observer exceptions swallowed (CostModel feedback hook)
         self.on_result = on_result
         self._dead: set[int] = set()
+        self._stragglers: list[TaskResult] = []
 
     def _emit(self, res: TaskResult) -> TaskResult:
         if self.on_result is not None:
@@ -387,6 +464,67 @@ class MeshSliceExecutorPool:
         self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=eid))
         return TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
 
+    def _run_fused(self, eid: int, unit: FusedBatch, sl, data) -> list[TaskResult]:
+        """One fused unit as ONE placed program: the runner receives the
+        batch and returns (payload per member, total seconds); results are
+        unbatched with amortized per-member seconds. A batch-level exception
+        becomes per-member error results; ExecutorFailure propagates."""
+        members = [m for m in unit.tasks if not self.wal.is_done(m.task_id)]
+        if not members:
+            return []
+        sub = unit.restrict({m.task_id for m in members})
+        try:
+            if self.failure_hook is not None:
+                self.failure_hook(eid, unit)  # may raise ExecutorFailure
+            payloads, total = self.task_runner(sub, sl, data)
+        except ExecutorFailure:
+            raise
+        except Exception as e:
+            return [TaskResult(task=m, model=None, train_seconds=0.0,
+                               executor_id=eid, error=repr(e),
+                               batch_size=len(members)) for m in members]
+        per = total / len(members)
+        results = []
+        for m, payload in zip(members, payloads):
+            self.wal.record(WALRecord(task_id=m.task_id, key=m.key(),
+                                      seconds=per, executor_id=eid))
+            results.append(TaskResult(task=m, model=payload, train_seconds=per,
+                                      executor_id=eid, batch_size=len(members)))
+        return results
+
+    def _execute(self, eid: int, task, sl, data) -> list[TaskResult]:
+        """Run one scheduled unit (task or fused batch); every produced
+        result is emitted to ``on_result`` HERE, the moment it exists — so
+        even results a cancelled stream never surfaces feed the observers."""
+        if isinstance(task, FusedBatch):
+            results = self._run_fused(eid, task, sl, data)
+        elif self.wal.is_done(task.task_id):
+            results = []
+        else:
+            results = [self._run_one(eid, task, sl, data)]
+        for res in results:
+            self._emit(res)
+        return results
+
+    def _deliver(self, batch: Sequence[TaskResult]):
+        """Yield each result; if the consumer closes the stream mid-batch,
+        park the not-yet-surfaced remainder for :meth:`drain_stragglers` —
+        they are finished and WAL-journalled, and must not be lost."""
+        for j, res in enumerate(batch):
+            try:
+                yield res
+            except GeneratorExit:
+                self._stragglers.extend(batch[j + 1:])
+                raise
+
+    def drain_stragglers(self) -> list[TaskResult]:
+        """Results completed (and journalled) during an early ``submit``
+        cancellation — with fused batches a close can land mid-unbatching,
+        leaving finished members unseen. The Session replan loop collects
+        these; the buffer is cleared on read."""
+        got, self._stragglers = self._stragglers, []
+        return got
+
     def submit(self, assignment: Assignment, data) -> Iterator[TaskResult]:
         """Execute the plan slice by slice, yielding each result as it lands.
 
@@ -395,36 +533,42 @@ class MeshSliceExecutorPool:
         driver runs stranded tasks inline (executor_id=-1), matching
         LocalExecutorPool's recovery semantics.
         """
+        self._stragglers = []  # per-submit buffer (see drain_stragglers)
         queues = self._queues(assignment)
         alive = set(range(len(self.slices)))
         stranded: list[TrainTask] = []
         for eid, (q, sl) in enumerate(zip(queues, self.slices)):
             for i, task in enumerate(q):
-                if self.wal.is_done(task.task_id):
-                    continue
                 try:
-                    res = self._run_one(eid, task, sl, data)
+                    results = self._execute(eid, task, sl, data)
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
                     stranded.extend(q[i:])
                     break
-                yield self._emit(res)
+                yield from self._deliver(results)
         # failure re-queue: surviving slices absorb dead slices' work
         while stranded:
-            pending = [t for t in stranded if not self.wal.is_done(t.task_id)]
+            pending = [t for t in stranded
+                       if isinstance(t, FusedBatch) or not self.wal.is_done(t.task_id)]
             stranded = []
             if not pending:
                 break
             if not alive:
                 for task in pending:  # driver as executor of last resort
                     try:
-                        model, secs = self.task_runner(task, self.driver_slice, data)
-                        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
-                        res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
-                    except Exception as e:
-                        res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
-                    yield self._emit(res)
+                        results = self._execute(-1, task, self.driver_slice, data)
+                    except ExecutorFailure as e:
+                        # the driver has no failure semantics to escalate to:
+                        # record the loss as task-level errors
+                        members = task.tasks if isinstance(task, FusedBatch) else [task]
+                        results = [TaskResult(task=m, model=None, train_seconds=0.0,
+                                              executor_id=-1, error=repr(e))
+                                   for m in members
+                                   if not self.wal.is_done(m.task_id)]
+                        for res in results:
+                            self._emit(res)
+                    yield from self._deliver(results)
                 break
             for idx, task in enumerate(pending):
                 if not alive:  # last survivor died mid-re-queue
@@ -432,13 +576,13 @@ class MeshSliceExecutorPool:
                     break
                 eid = sorted(alive)[idx % len(alive)]
                 try:
-                    res = self._run_one(eid, task, self.slices[eid], data)
+                    results = self._execute(eid, task, self.slices[eid], data)
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
                     stranded.append(task)  # retry on the next survivor
                     continue
-                yield self._emit(res)
+                yield from self._deliver(results)
 
     def run(self, assignment: Assignment, data) -> list[TaskResult]:
         """Blocking convenience: drain :meth:`submit` into a list."""

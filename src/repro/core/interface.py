@@ -60,6 +60,11 @@ class TaskResult:
     train_seconds: float
     executor_id: int
     error: str | None = None
+    #: >1 when this task ran inside a fused batch (core/fusion.py);
+    #: ``train_seconds`` is then the AMORTIZED share (batch total / size), so
+    #: downstream consumers — the WAL, the CostModel observer — need no
+    #: fusion-specific handling
+    batch_size: int = 1
 
     @property
     def ok(self) -> bool:
@@ -98,6 +103,33 @@ class Estimator(abc.ABC):
     def default_params(self) -> dict[str, Any]:
         return {}
 
+    # ---- task fusion (core/fusion.py, DESIGN.md §3.2) -------------------
+    def fuse_signature(self, params: Mapping[str, Any]):
+        """Hashable group key for configs that can train as ONE fused batch
+        (vmap over hyperparameters), or ``None`` when this estimator (or this
+        config) cannot fuse. Configs sharing a signature may still differ in
+        structural params — ``train_batched`` pads those to the per-batch max.
+        """
+        return None
+
+    def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
+        """Coarse structural bucket within a fuse group. Fusion sorts a group
+        by bucket VALUE so each batch pads over near-equals — return
+        like-typed, totally-orderable tuples (ints, pow-2 rounded UP to match
+        the padding) — and the scheduler may split a fused batch at bucket
+        boundaries when rebalancing."""
+        return ()
+
+    def train_batched(self, data: Any, configs, *, cache=None) -> list[TrainedModel]:
+        """Train ``configs`` as one fused device program; one model per config.
+
+        Only meaningful for configs sharing :meth:`fuse_signature`; ``cache``
+        is a :class:`repro.core.fusion.CompileCache` (process-wide default
+        when None) keying the compiled batched program on the static-shape
+        signature, so later batches of the same shape skip compilation.
+        """
+        raise NotImplementedError(f"{self.name} does not support fused batches")
+
     # ---- executor-side entry point -------------------------------------
     def run(self, raw: DenseMatrix, params: Mapping[str, Any]) -> tuple[TrainedModel, float]:
         """Convert (uniform → native) then train; returns (model, seconds).
@@ -109,6 +141,15 @@ class Estimator(abc.ABC):
         t0 = time.perf_counter()
         model = self.train(converted, dict(params))
         return model, time.perf_counter() - t0
+
+    def run_batched(self, raw: DenseMatrix, params_list, *, cache=None) -> tuple[list[TrainedModel], float]:
+        """Fused-batch analogue of :meth:`run`: convert once, train the whole
+        config stack as one program; returns (models, total_seconds). Callers
+        amortize ``total_seconds`` over the batch for per-task accounting."""
+        converted = convert(raw, self.data_format)
+        t0 = time.perf_counter()
+        models = self.train_batched(converted, [dict(p) for p in params_list], cache=cache)
+        return models, time.perf_counter() - t0
 
 
 _REGISTRY: dict[str, Callable[[], Estimator]] = {}

@@ -116,7 +116,19 @@ def schedule_round_robin(tasks: Sequence[TrainTask], n_executors: int) -> Assign
     return Assignment(plan=plan, estimated_loads=loads, policy="round_robin")
 
 
-def schedule(tasks: Sequence[TrainTask], n_executors: int, policy: str = "lpt", seed: int = 0) -> Assignment:
+def schedule(tasks: Sequence[TrainTask], n_executors: int, policy: str = "lpt",
+             seed: int = 0, *, splitter=None) -> Assignment:
+    """Plan ``tasks`` — or fused units: anything with ``task_id``/``cost``/
+    ``with_cost`` schedules identically (``repro.core.fusion.FusedBatch``
+    duck-types this), so every policy below is batch-aware for free.
+
+    ``splitter(units, n_executors) -> units`` runs first when given —
+    typically :func:`repro.core.fusion.split_for_balance`, which cuts
+    bottleneck fused batches at bucket boundaries so a batch bigger than the
+    ideal per-executor load stops being the makespan floor.
+    """
+    if splitter is not None:
+        tasks = splitter(tasks, n_executors)
     if policy == "lpt":
         return schedule_lpt(tasks, n_executors)
     if policy == "random":
@@ -232,6 +244,7 @@ def replan(
     *,
     current: Assignment | None = None,
     policy: str = "lpt",
+    splitter=None,
 ) -> Assignment:
     """Mid-session re-plan: re-run :func:`rebalance` on the remaining tasks.
 
@@ -241,8 +254,14 @@ def replan(
     ``current`` (the residual of the active plan, via :func:`restrict`, with
     the SAME updated costs) is given, the cheaper of {rebalanced, current} is
     returned — so a replan NEVER increases the estimated makespan.
+
+    ``splitter`` (see :func:`schedule`) applies to the FRESH side only: a
+    replan may split a fused batch at bucket boundaries when that improves
+    the balance, while the current residual keeps its units intact — the
+    better of the two still wins, so splitting can only help.
     """
-    fresh = rebalance(remaining, n_executors, policy=policy)
+    fresh = rebalance(splitter(remaining, n_executors) if splitter is not None
+                      else remaining, n_executors, policy=policy)
     if current is not None and (
             plan_makespan_estimate(current) < plan_makespan_estimate(fresh)):
         return current

@@ -24,6 +24,11 @@ observe loop with a REAL lifecycle instead of a single blocking call:
   through the pools' ``on_result`` hook, warm families skip the profiler, and
   when observed runtimes drift past the threshold the remaining tasks are
   re-estimated and re-planned mid-round (DESIGN.md §3.1);
+* task fusion (``spec.fuse`` / ``spec.max_fuse``): same-family tasks pack
+  into vmap-fused batches (:mod:`repro.core.fusion`) that train as ONE
+  device program per batch; the scheduler plans over fused units (splitting
+  bottleneck batches at bucket boundaries) and the pools unbatch results,
+  so this streaming loop is untouched (DESIGN.md §3.2);
 * ``Session.run(spec, train, validate)`` is the one-shot convenience that
   the deprecated ``ModelSearcher`` shim (searcher.py) delegates to.
 """
@@ -37,6 +42,7 @@ from repro.core.cost_model import CostModel, observed_drift
 from repro.core.data_format import DenseMatrix
 from repro.core.executor import LocalExecutorPool
 from repro.core.fault import SearchWAL
+from repro.core.fusion import FusedBatch, compile_cache, fuse_tasks, split_for_balance
 from repro.core.interface import TaskResult
 from repro.core.results import METRICS, MultiModel
 from repro.core.scheduler import replan, restrict, schedule
@@ -67,10 +73,20 @@ class SearchStats:
         self.n_model_estimates = 0      # tasks costed by the CostModel (free)
         self.n_profiled = 0             # tasks that still needed the profiler
         self.policy = ""
+        # -- task fusion (DESIGN.md §3.2) --------------------------------
+        self.n_fused_batches = 0        # fused units planned across rounds
+        self.n_fused_tasks = 0          # tasks that rode inside those units
+        self.compile_cache_hits = 0     # this session's share of the
+        self.compile_cache_misses = 0   # process-wide CompileCache traffic
 
     @property
     def profiling_ratio(self) -> float:  # paper Fig. 3
         return self.profiling_seconds / self.total_seconds if self.total_seconds else 0.0
+
+    @property
+    def compile_cache_hit_rate(self) -> float:
+        total = self.compile_cache_hits + self.compile_cache_misses
+        return self.compile_cache_hits / total if total else 0.0
 
 
 class Session:
@@ -209,6 +225,40 @@ class Session:
                        if rs and t.cost else t)
         return out
 
+    def _fuse(self, costed, cm: CostModel | None, n_rows: int):
+        """Pack a costed batch into fused units (spec.fuse) and account them."""
+        units = fuse_tasks(costed, max_fuse=self.spec.max_fuse,
+                           cost_model=cm, n_rows=n_rows)
+        fused = [u for u in units if isinstance(u, FusedBatch)]
+        self.stats.n_fused_batches += len(fused)
+        self.stats.n_fused_tasks += sum(u.batch_size for u in fused)
+        return units
+
+    def _pending_units(self, assignment, pending, cm: CostModel | None, n_rows: int):
+        """The fused/plain units still outstanding in the ACTIVE plan, with
+        members re-costed from feedback (amortized law for fused members).
+        Unit membership — and therefore unit ids — is preserved, so
+        ``restrict(assignment, units)`` forms the comparable residual and the
+        replan's never-worse guarantee carries over to fused rounds."""
+        by_id = {t.task_id: t for t in pending}
+
+        def recost(m):
+            if cm is not None:
+                est = cm.estimate(m, n_rows, batched=True)
+                if est is not None and est > 0:
+                    return m.with_cost(est)
+            return by_id.get(m.task_id, m)
+
+        units = []
+        for u in assignment.all_tasks():
+            if isinstance(u, FusedBatch):
+                alive = u.restrict(set(by_id))
+                if alive is not None:
+                    units.append(alive.recost(recost))
+            elif u.task_id in by_id:
+                units.append(by_id[u.task_id])
+        return units
+
     # ------------------------------------------------------------------
     def results(
         self,
@@ -237,6 +287,8 @@ class Session:
         pool_observes = (self._install_observer(backend, cm, train.n_rows)
                          if cm is not None else False)
         metric_fn = METRICS[spec.metric]
+        cc = compile_cache()
+        cc_hits0, cc_misses0 = cc.counters()
         try:
             while True:
                 batch = tuner.propose()
@@ -253,9 +305,14 @@ class Session:
                     costed = list(batch)
                 else:
                     costed = self._cost_batch(batch, train, profiler, cm)
-                # 2. schedule (greedy job-shop / baselines)
-                assignment = schedule(costed, spec.n_executors,
-                                      policy=spec.policy, seed=spec.seed)
+                # 2. schedule (greedy job-shop / baselines) — with fusion on,
+                # the plan is over fused units; bottleneck batches split at
+                # bucket boundaries (fusion.split_for_balance)
+                units = (self._fuse(costed, cm, train.n_rows)
+                         if spec.fuse else costed)
+                assignment = schedule(
+                    units, spec.n_executors, policy=spec.policy, seed=spec.seed,
+                    splitter=split_for_balance if spec.fuse else None)
                 # 3. execute — stream results off the backend as they land.
                 # When observed runtimes drift past spec.replan_threshold,
                 # cancel the stream, re-estimate the remaining tasks from
@@ -330,9 +387,17 @@ class Session:
                     # feedback: re-cost the remainder, then rebalance — never
                     # accepting a plan worse than the current residual
                     pending = self._reestimate(pending, train, cm, round_results)
-                    assignment = replan(pending, spec.n_executors,
-                                        current=restrict(assignment, pending),
-                                        policy=spec.policy)
+                    if spec.fuse:
+                        pending_units = self._pending_units(
+                            assignment, pending, cm, train.n_rows)
+                        assignment = replan(
+                            pending_units, spec.n_executors,
+                            current=restrict(assignment, pending_units),
+                            policy=spec.policy, splitter=split_for_balance)
+                    else:
+                        assignment = replan(pending, spec.n_executors,
+                                            current=restrict(assignment, pending),
+                                            policy=spec.policy)
                     replans_left -= 1
                     self.stats.n_replans += 1
                 self.stats.execution_seconds += time.perf_counter() - t0
@@ -356,6 +421,9 @@ class Session:
             self.stats.total_seconds = time.perf_counter() - t_start
             self.stats.n_tasks = len(self._results)
             self.stats.n_failures = sum(1 for r in self._results if not r.ok)
+            hits, misses = cc.counters()   # this session's cache traffic
+            self.stats.compile_cache_hits = hits - cc_hits0
+            self.stats.compile_cache_misses = misses - cc_misses0
             self.finished = True
 
     def _budget_hit(self, t_start: float) -> str | None:

@@ -78,6 +78,15 @@ class SearchSpec:
     #: rebalance on the remaining tasks mid-round; None disables re-planning.
     #: log(2) ≈ 0.69 means "replan when runtimes are 2× off the profile"
     replan_threshold: float | None = None
+    # -- task fusion (core/fusion.py, DESIGN.md §3.2) --------------------
+    #: pack same-family tasks into vmap-fused batches that train as one
+    #: device program; the scheduler plans over the fused units and the
+    #: pools unbatch results, so streaming/WAL/budget semantics are unchanged
+    fuse: bool = False
+    #: largest fused batch (configs per program); bigger batches amortize
+    #: more dispatch/compile but are scheduled atomically, so very large
+    #: values can cost load balance on few executors
+    max_fuse: int = 16
     #: fault-injection / speculation knobs forwarded to the executor pool
     pool_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -117,6 +126,10 @@ class SearchSpec:
                 raise ValueError(f"{name} must be positive, got {v}")
         if self.max_tasks is not None:
             object.__setattr__(self, "max_tasks", int(self.max_tasks))
+        object.__setattr__(self, "fuse", bool(self.fuse))
+        object.__setattr__(self, "max_fuse", int(self.max_fuse))
+        if self.max_fuse < 2:
+            raise ValueError(f"max_fuse must be >= 2, got {self.max_fuse}")
 
     # -- construction helpers ------------------------------------------
     @classmethod

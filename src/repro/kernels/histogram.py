@@ -23,7 +23,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["histogram_tpu"]
+__all__ = ["histogram_tpu", "pick_tiles"]
+
+#: Swept tile defaults, keyed by power-of-two bin count: n_bins →
+#: (block_features, block_rows). Derived from the benchmark sweep over the
+#: smoke workload's (F, B) shapes (benchmarks/fusion_bench.py
+#: ``histogram_tile_sweep``): the winners keep the flattened minor dimension
+#: ``block_f · n_bins`` lane-aligned (a multiple of 128) at 512–1024 lanes —
+#: enough columns to feed the MXU per step without blowing the VMEM scratch
+#: (2 · n_nodes · block_f · n_bins · 4 B) — and amortize grid-step overhead
+#: with deep row blocks. Re-run the sweep on real TPU hardware before
+#: trusting absolute numbers; the CPU interpret-mode proxy ranks launch and
+#: grid overhead, not MXU throughput.
+_TILE_TABLE: dict[int, tuple[int, int]] = {
+    32: (16, 512),
+    64: (16, 512),
+    128: (8, 1024),
+    256: (4, 1024),
+}
+
+
+#: VMEM scratch budget for the two f32 accumulators (the core has ~16 MB
+#: total; leave room for the input blocks and double-buffering)
+_VMEM_SCRATCH_BUDGET = 4 << 20
+
+
+def pick_tiles(n_features: int, n_bins: int, n_rows: int,
+               n_nodes: int = 1) -> tuple[int, int]:
+    """(block_features, block_rows) for a histogram shape, from the swept
+    lookup table (nearest power-of-two bin count), clamped to the array AND
+    to the VMEM scratch budget: the accumulators take
+    ``2 · n_nodes · block_f · n_bins · 4`` bytes, so deep-tree levels
+    (large ``n_nodes``) halve ``block_f`` until they fit."""
+    key = min(_TILE_TABLE, key=lambda b: abs(b - n_bins))
+    block_f, block_r = _TILE_TABLE[key]
+    block_f = min(block_f, n_features)
+    while block_f > 1 and 2 * n_nodes * block_f * n_bins * 4 > _VMEM_SCRATCH_BUDGET:
+        block_f //= 2
+    return block_f, min(block_r, max(8, n_rows))
 
 
 def _hist_kernel(
@@ -76,8 +113,8 @@ def histogram_tpu(
     *,
     n_nodes: int,
     n_bins: int,
-    block_rows: int = 256,
-    block_features: int = 4,
+    block_rows: int | None = None,
+    block_features: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Per-(node, feature, bin) grad/hess sums; see ``histogram_ref``.
@@ -85,10 +122,13 @@ def histogram_tpu(
     bins: (R, F) int32 in [0, n_bins); grad/hess: (R,) f32; node: (R,) int32
     in [0, n_nodes). R and F are padded here to block multiples (pad rows get
     node = n_nodes, whose one-hot row is all-zero, so they contribute nothing).
+    Tile sizes default to the swept ``_TILE_TABLE`` via :func:`pick_tiles`;
+    pass them explicitly to override (the sweep bench does).
     """
     r, f = bins.shape
-    block_rows = min(block_rows, max(8, r))
-    block_features = min(block_features, f)
+    picked_f, picked_r = pick_tiles(f, n_bins, r, n_nodes)
+    block_rows = picked_r if block_rows is None else min(block_rows, max(8, r))
+    block_features = picked_f if block_features is None else min(block_features, f)
     pad_r = (-r) % block_rows
     pad_f = (-f) % block_features
     bins_p = jnp.pad(bins, ((0, pad_r), (0, pad_f)))

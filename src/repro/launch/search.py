@@ -87,6 +87,8 @@ def run_tabular(args) -> int:
         target_metric=args.target_metric,
         cost_model_path=args.cost_model,
         replan_threshold=args.replan_threshold,
+        fuse=args.fuse,
+        max_fuse=args.max_fuse,
     )
     print(f"search space: {spec.n_grid_tasks} configurations over "
           f"{[s.estimator for s in spec.spaces]}")
@@ -121,9 +123,16 @@ def run_tabular(args) -> int:
                     f"model_estimates={session.stats.n_model_estimates} "
                     f"profiled={session.stats.n_profiled} "
                     f"cost_model={session.cost_model.path or '<memory>'}")
+    fused = ""
+    if spec.fuse:
+        st = session.stats
+        fused = (f" fused_batches={st.n_fused_batches}"
+                 f" fused_tasks={st.n_fused_tasks}"
+                 f" compile_cache={st.compile_cache_hits}h/"
+                 f"{st.compile_cache_misses}m")
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
           f"profiling_ratio={session.stats.profiling_ratio:.1%} "
-          f"failures={session.stats.n_failures}{stopped}{feedback}")
+          f"failures={session.stats.n_failures}{stopped}{feedback}{fused}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
           f"test {args.metric}={test_score:.4f}")
     return 0
@@ -203,6 +212,11 @@ def main() -> int:
     p.add_argument("--replan-threshold", type=float, default=None, metavar="DRIFT",
                    help="re-run rebalance mid-round when mean |log(observed/"
                         "estimated)| exceeds this (0.69 ≈ runtimes 2x off)")
+    p.add_argument("--fuse", action="store_true",
+                   help="pack same-family configs into vmap-fused batches "
+                        "that train as one device program (DESIGN.md §3.2)")
+    p.add_argument("--max-fuse", type=int, default=16, metavar="N",
+                   help="largest fused batch (configs per program, default 16)")
     p.add_argument("--max-seconds", type=float, default=None,
                    help="early-stop budget: wall-clock seconds")
     p.add_argument("--max-tasks", type=int, default=None,

@@ -22,17 +22,20 @@ from repro.tabular.gbdt import build_tree
 __all__ = ["ForestEstimator", "ForestModel"]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
-)
-def _fit_forest(
-    bins, y, key, *, n_bins: int, n_trees: int, max_depth: int,
-    max_features: int, min_samples_leaf: float,
+def _fit_forest_core(
+    bins, y, key, min_samples_leaf, depth_limit,
+    *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
 ):
+    """Forest fit with traced ``min_samples_leaf``/``depth_limit`` so one
+    compile serves all configs sharing the padded maxima, and vmap over the
+    traced args fuses a config stack (``train_batched``). Per-tree keys are
+    ``fold_in(key, t)`` — unlike ``split(key, n)``, the first k keys do not
+    depend on the total count, so a tree-count-padded batch grows the SAME
+    trees the sequential run would."""
     r, f = bins.shape
 
-    def one_tree(_, key):
-        kb, kf = jax.random.split(key)
+    def one_tree(_, tree_key):
+        kb, kf = jax.random.split(tree_key)
         w = jax.random.poisson(kb, 1.0, (r,)).astype(jnp.float32)  # bootstrap
         perm = jax.random.permutation(kf, f)
         feat_mask = jnp.zeros((f,), bool).at[perm[:max_features]].set(True)
@@ -41,14 +44,26 @@ def _fit_forest(
         feat, split, leaf_g, leaf_h = build_tree(
             bins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
-            feat_mask=feat_mask,
+            feat_mask=feat_mask, depth_limit=depth_limit,
         )
         leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
         return None, (feat, split, leaf_value)
 
-    keys = jax.random.split(key, n_trees)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_trees))
     _, trees = jax.lax.scan(one_tree, None, keys)
     return trees
+
+
+_fit_forest = functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
+)(_fit_forest_core)
+
+
+def _build_batched_fit(n_bins: int, n_trees: int, max_depth: int, max_features: int):
+    core = functools.partial(
+        _fit_forest_core, n_bins=n_bins, n_trees=n_trees,
+        max_depth=max_depth, max_features=max_features)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
 class ForestModel(TrainedModel):
@@ -78,6 +93,15 @@ class ForestEstimator(Estimator):
     def default_params(self) -> dict[str, Any]:
         return {"n_estimators": 100, "max_depth": 8, "min_samples_leaf": 1.0, "seed": 0}
 
+    @staticmethod
+    def _thresholds(feat_np, split_np, edges_np):
+        in_range = split_np < edges_np.shape[1]
+        return np.where(
+            in_range,
+            edges_np[feat_np, np.minimum(split_np, edges_np.shape[1] - 1)],
+            np.float32(np.inf),
+        ).astype(np.float32)
+
     def train(self, data, params: Mapping[str, Any]) -> ForestModel:
         p = {**self.default_params(), **params}
         bins, edges = data["bins"], data["edges"]
@@ -86,19 +110,61 @@ class ForestEstimator(Estimator):
         max_depth = int(p["max_depth"])
         feat, split, leaves = _fit_forest(
             bins, data["y"], jax.random.key(int(p["seed"])),
+            jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
             n_bins=n_bins, n_trees=int(p["n_estimators"]), max_depth=max_depth,
             max_features=max(1, int(np.sqrt(f))),
-            min_samples_leaf=float(p["min_samples_leaf"]),
         )
-        edges_np = np.asarray(edges)               # (F, n_bins − 1)
         feat_np, split_np = np.asarray(feat), np.asarray(split)
-        in_range = split_np < edges_np.shape[1]
-        thresh = np.where(
-            in_range,
-            edges_np[feat_np, np.minimum(split_np, edges_np.shape[1] - 1)],
-            np.float32(np.inf),
-        ).astype(np.float32)
+        thresh = self._thresholds(feat_np, split_np, np.asarray(edges))
         return ForestModel(feat_np, thresh, leaves, max_depth)
+
+    # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
+    def fuse_signature(self, params: Mapping[str, Any]):
+        return ("forest",)
+
+    def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
+        from repro.core.fusion import pad_pow2
+
+        # round UP like train_batched's padding (see gbdt.fuse_bucket)
+        p = {**self.default_params(), **params}
+        return (pad_pow2(int(p["n_estimators"])), int(p["max_depth"]))
+
+    def train_batched(self, data, configs, *, cache=None) -> list[ForestModel]:
+        from repro.core import fusion
+
+        ps = [{**self.default_params(), **c} for c in configs]
+        ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
+        bins, edges = data["bins"], data["edges"]
+        n_bins = int(data["n_bins"])
+        f = bins.shape[1]
+        max_features = max(1, int(np.sqrt(f)))
+        pad_trees = fusion.pad_pow2(max(int(p["n_estimators"]) for p in ps))
+        pad_depth = max(int(p["max_depth"]) for p in ps)
+        cc = cache if cache is not None else fusion.compile_cache()
+        fit = cc.get(
+            ("forest", n_bins, pad_trees, pad_depth, max_features,
+             len(ps), tuple(bins.shape)),
+            lambda: _build_batched_fit(n_bins, pad_trees, pad_depth, max_features),
+        )
+        keys = jax.vmap(jax.random.key)(
+            jnp.asarray([int(p["seed"]) for p in ps], jnp.uint32))
+        feat, split, leaves = fit(
+            bins, data["y"], keys,
+            jnp.asarray([float(p["min_samples_leaf"]) for p in ps], jnp.float32),
+            jnp.asarray([int(p["max_depth"]) for p in ps], jnp.int32),
+        )
+        edges_np = np.asarray(edges)
+        feat_np, split_np = np.asarray(feat), np.asarray(split)
+        leaves_np = np.asarray(leaves)
+        models = []
+        for i, p in enumerate(ps[:n_real]):
+            n_i = int(p["n_estimators"])
+            thresh = self._thresholds(feat_np[i, :n_i], split_np[i, :n_i], edges_np)
+            # trees past n_estimators are dropped here; depth-padded levels
+            # keep sentinel splits, so routing matches the unpadded model
+            models.append(ForestModel(feat_np[i, :n_i], thresh,
+                                      leaves_np[i, :n_i], pad_depth))
+        return models
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:

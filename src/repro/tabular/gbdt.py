@@ -35,10 +35,12 @@ def build_tree(
     *,
     n_bins: int,
     max_depth: int,
-    lam: float,
-    gamma: float,
-    min_child_weight: float,
+    lam,
+    gamma,
+    min_child_weight,
     feat_mask: jax.Array | None = None,   # (F,) bool — forest feature subsets
+    depth_limit=None,            # traced int: levels >= this force sentinels
+    bin_limit=None,              # traced int: valid splits are < bin_limit - 1
 ):
     """Grow one level-wise tree; returns (feat, split_bin, leaf_g, leaf_h).
 
@@ -46,6 +48,12 @@ def build_tree(
     ``split_bin == n_bins - 1`` (no row has bin > B−1, so all go left).
     leaf_g/leaf_h: (2^D,) per-leaf grad/hess sums for the caller's leaf-value
     formula (GBDT: −η·G/(H+λ); forest: −G/H = mean target).
+
+    ``lam``/``gamma``/``min_child_weight`` may be traced 0-d arrays, and
+    ``depth_limit``/``bin_limit`` traced ints — this is how the fused-batch
+    path (``train_batched``) vmaps heterogeneous configs through ONE compile:
+    a config with a shallower tree forces sentinel splits past its depth, and
+    a config with coarser quantisation masks bins past its own bin count.
     """
     r, f = bins.shape
     node = jnp.zeros((r,), jnp.int32)        # level-local node of each row
@@ -66,7 +74,8 @@ def build_tree(
         if feat_mask is not None:
             ok &= feat_mask[None, :, None]
         # splitting at the last bin sends every row left — not a real split
-        ok &= jnp.arange(n_bins)[None, None, :] < n_bins - 1
+        last = n_bins - 1 if bin_limit is None else bin_limit - 1
+        ok &= jnp.arange(n_bins)[None, None, :] < last
         gain = jnp.where(ok, gain, -jnp.inf)
         flat = gain.reshape(n_nodes, f * n_bins)
         best = jnp.argmax(flat, axis=-1)                 # (N,)
@@ -74,6 +83,8 @@ def build_tree(
         feat = (best // n_bins).astype(jnp.int32)
         split = (best % n_bins).astype(jnp.int32)
         is_leaf = best_gain <= gamma
+        if depth_limit is not None:
+            is_leaf = is_leaf | (level >= depth_limit)
         feat = jnp.where(is_leaf, 0, feat)
         split = jnp.where(is_leaf, n_bins - 1, split)    # sentinel: all left
         feats.append(feat)
@@ -97,31 +108,55 @@ def predict_margin(bins, feat, split, leaf_value, max_depth: int):
     return leaf_value[local]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_bins", "rounds", "max_depth"),
-)
-def _fit_gbdt(
-    bins, y, base, *, n_bins: int, rounds: int, max_depth: int,
-    eta: float, lam: float, gamma: float, min_child_weight: float,
+def _fit_gbdt_core(
+    bins, y, base, factor, bin_limit, n_rounds, depth_limit,
+    eta, lam, gamma, min_child_weight, *, n_bins: int, rounds: int, max_depth: int,
 ):
-    r = bins.shape[0]
+    """One GBDT fit over PADDED maxima (rounds/max_depth/n_bins static).
 
-    def one_round(margin, _):
+    Scalar hyperparameters (eta, lambda, gamma, min_child_weight) and the
+    per-config structural LIMITS (factor, bin_limit, n_rounds, depth_limit)
+    are traced — so one compile serves every config sharing the maxima, and
+    ``jax.vmap`` over the traced args turns a whole config stack into one
+    fused program (``train_batched``). Masking keeps padded work inert:
+    rounds past ``n_rounds`` add zero-valued trees, levels past
+    ``depth_limit`` force sentinel splits, bins past ``bin_limit`` never win.
+    """
+    r = bins.shape[0]
+    cbins = bins // factor          # coarsen in-graph: factor is traced
+
+    def one_round(margin, r_idx):
         p = jax.nn.sigmoid(margin)
         g = p - y
         h = jnp.maximum(p * (1.0 - p), 1e-16)
         feat, split, leaf_g, leaf_h = build_tree(
-            bins, g, h, n_bins=n_bins, max_depth=max_depth,
+            cbins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=lam, gamma=gamma, min_child_weight=min_child_weight,
+            depth_limit=depth_limit, bin_limit=bin_limit,
         )
-        leaf_value = -eta * leaf_g / (leaf_h + lam)
-        margin = margin + predict_margin(bins, feat, split, leaf_value, max_depth)
+        # where (not multiply): an empty padded leaf is 0/(0+λ), which for
+        # λ=0 is NaN and would poison the margin through a plain mask
+        leaf_value = jnp.where(
+            r_idx < n_rounds, -eta * leaf_g / (leaf_h + lam), 0.0)
+        margin = margin + predict_margin(cbins, feat, split, leaf_value, max_depth)
         return margin, (feat, split, leaf_value)
 
     margin0 = jnp.full((r,), base, jnp.float32)
-    _, trees = jax.lax.scan(one_round, margin0, None, length=rounds)
+    _, trees = jax.lax.scan(one_round, margin0, jnp.arange(rounds))
     return trees  # (rounds, 2^D−1) ×2, (rounds, 2^D)
+
+
+_fit_gbdt = functools.partial(
+    jax.jit, static_argnames=("n_bins", "rounds", "max_depth")
+)(_fit_gbdt_core)
+
+
+def _build_batched_fit(n_bins: int, rounds: int, max_depth: int):
+    """Compile-cache builder: vmap the core over the per-config args (data,
+    labels and base margin are shared across the batch)."""
+    core = functools.partial(
+        _fit_gbdt_core, n_bins=n_bins, rounds=rounds, max_depth=max_depth)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, None) + (0,) * 8))
 
 
 class GBDTModel(TrainedModel):
@@ -160,39 +195,103 @@ class GBDTEstimator(Estimator):
             "lambda": 1.0, "gamma": 0.0, "min_child_weight": 1.0,
         }
 
-    def train(self, data, params: Mapping[str, Any]) -> GBDTModel:
-        p = {**self.default_params(), **params}
-        bins, edges, y = data["bins"], data["edges"], data["y"]
-        n_bins = int(data["n_bins"])
-        max_bin = int(p["max_bin"])
+    @staticmethod
+    def _coarsen(n_bins: int, max_bin: int) -> tuple[int, int]:
         # Coarsen the uniform 256-bin quantisation to max_bin levels:
         # coarse bin = fine bin // factor; coarse edge s = fine edge
         # (s+1)·factor − 1 (same "x > edge ⇔ bin > s" identity).
         factor = max(1, -(-n_bins // max_bin))
-        cbins = bins // factor
-        n_cbins = -(-n_bins // factor)
-        max_depth = int(p["max_depth"])
-        y_np = np.asarray(y)
-        prior = float(np.clip(y_np.mean(), 1e-6, 1 - 1e-6))
-        base = float(np.log(prior / (1 - prior)))
-        feat, split, leaves = _fit_gbdt(
-            cbins, y, base,
-            n_bins=n_cbins, rounds=int(p["round"]), max_depth=max_depth,
-            eta=float(p["eta"]), lam=float(p["lambda"]), gamma=float(p["gamma"]),
-            min_child_weight=float(p["min_child_weight"]),
-        )
+        return factor, -(-n_bins // factor)
+
+    @staticmethod
+    def _base_margin(y) -> float:
+        prior = float(np.clip(np.asarray(y).mean(), 1e-6, 1 - 1e-6))
+        return float(np.log(prior / (1 - prior)))
+
+    @staticmethod
+    def _thresholds(feat_np, split_np, edges_np, factor: int, n_cbins: int):
         # Map split bins to float thresholds: coarse split s → fine edge index
-        # (s+1)·factor − 1; sentinel (s = n_cbins−1) or out-of-range → +inf.
-        edges_np = np.asarray(edges)                    # (F, n_bins − 1)
-        feat_np, split_np = np.asarray(feat), np.asarray(split)
+        # (s+1)·factor − 1; sentinel (s ≥ n_cbins−1) or out-of-range → +inf.
         fine = (split_np + 1) * factor - 1
         in_range = (split_np < n_cbins - 1) & (fine < edges_np.shape[1])
-        thresh = np.where(
+        return np.where(
             in_range,
             edges_np[feat_np, np.minimum(fine, edges_np.shape[1] - 1)],
             np.float32(np.inf),
         ).astype(np.float32)
+
+    def train(self, data, params: Mapping[str, Any]) -> GBDTModel:
+        p = {**self.default_params(), **params}
+        bins, edges, y = data["bins"], data["edges"], data["y"]
+        factor, n_cbins = self._coarsen(int(data["n_bins"]), int(p["max_bin"]))
+        max_depth, rounds = int(p["max_depth"]), int(p["round"])
+        base = self._base_margin(y)
+        feat, split, leaves = _fit_gbdt(
+            bins, y, jnp.float32(base),
+            jnp.int32(factor), jnp.int32(n_cbins),
+            jnp.int32(rounds), jnp.int32(max_depth),
+            jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
+            jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
+            n_bins=n_cbins, rounds=rounds, max_depth=max_depth,
+        )
+        feat_np, split_np = np.asarray(feat), np.asarray(split)
+        thresh = self._thresholds(feat_np, split_np, np.asarray(edges), factor, n_cbins)
         return GBDTModel(feat_np, thresh, leaves, base, max_depth)
+
+    # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
+    def fuse_signature(self, params: Mapping[str, Any]):
+        return ("gbdt",)        # any GBDT config can pad into any batch
+
+    def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
+        from repro.core.fusion import pad_pow2
+
+        # pad_pow2 (round UP), matching train_batched's padding: every
+        # member of a bucket pads to the same shape, so same-bucket chunks
+        # share one compile signature and bucket-boundary splits are safe
+        p = {**self.default_params(), **params}
+        return (pad_pow2(int(p["round"])), int(p["max_depth"]), int(p["max_bin"]))
+
+    def train_batched(self, data, configs, *, cache=None) -> list[GBDTModel]:
+        from repro.core import fusion
+
+        ps = [{**self.default_params(), **c} for c in configs]
+        ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
+        bins, edges, y = data["bins"], data["edges"], data["y"]
+        n_bins = int(data["n_bins"])
+        coarse = [self._coarsen(n_bins, int(p["max_bin"])) for p in ps]
+        pad_bins = max(nc for _, nc in coarse)
+        pad_rounds = fusion.pad_pow2(max(int(p["round"]) for p in ps))
+        pad_depth = max(int(p["max_depth"]) for p in ps)
+        base = self._base_margin(y)
+        cc = cache if cache is not None else fusion.compile_cache()
+        fit = cc.get(
+            ("gbdt", pad_bins, pad_rounds, pad_depth, len(ps), tuple(bins.shape)),
+            lambda: _build_batched_fit(pad_bins, pad_rounds, pad_depth),
+        )
+        col = lambda vals, dt: jnp.asarray(np.asarray(vals, dtype=dt))  # noqa: E731
+        feat, split, leaves = fit(
+            bins, y, jnp.float32(base),
+            col([f for f, _ in coarse], np.int32),
+            col([nc for _, nc in coarse], np.int32),
+            col([int(p["round"]) for p in ps], np.int32),
+            col([int(p["max_depth"]) for p in ps], np.int32),
+            col([float(p["eta"]) for p in ps], np.float32),
+            col([float(p["lambda"]) for p in ps], np.float32),
+            col([float(p["gamma"]) for p in ps], np.float32),
+            col([float(p["min_child_weight"]) for p in ps], np.float32),
+        )
+        edges_np = np.asarray(edges)
+        feat_np, split_np = np.asarray(feat), np.asarray(split)
+        leaves_np = np.asarray(leaves)
+        models = []
+        for i, p in enumerate(ps[:n_real]):
+            rounds, (factor, n_cbins) = int(p["round"]), coarse[i]
+            fi, si = feat_np[i, :rounds], split_np[i, :rounds]
+            thresh = self._thresholds(fi, si, edges_np, factor, n_cbins)
+            # padded levels carry sentinel splits (+inf thresholds), so the
+            # depth-padded model routes identically to the unpadded one
+            models.append(GBDTModel(fi, thresh, leaves_np[i, :rounds], base, pad_depth))
+        return models
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:

@@ -18,8 +18,11 @@ from repro.core.interface import Estimator, TrainedModel, register_estimator
 __all__ = ["LogRegEstimator", "LogRegModel"]
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _fit(x, y, c, lr, steps: int):
+def _fit_logreg_core(x, y, c, lr, n_steps, *, steps: int):
+    """Adam on logistic loss over a PADDED step count: steps past the traced
+    ``n_steps`` freeze the whole carry, so one compile (and, vmapped, one
+    fused program — ``train_batched``) serves configs with different step
+    budgets while matching the unpadded run exactly."""
     n, d = x.shape
     w0 = jnp.zeros((d,), jnp.float32)
     b0 = jnp.zeros((), jnp.float32)
@@ -37,22 +40,34 @@ def _fit(x, y, c, lr, steps: int):
     def step(carry, i):
         (w, b), (mw, mb), (vw, vb) = carry
         gw, gb = grad_fn((w, b))
-        mw = beta1 * mw + (1 - beta1) * gw
-        mb = beta1 * mb + (1 - beta1) * gb
-        vw = beta2 * vw + (1 - beta2) * gw * gw
-        vb = beta2 * vb + (1 - beta2) * gb * gb
+        mw_n = beta1 * mw + (1 - beta1) * gw
+        mb_n = beta1 * mb + (1 - beta1) * gb
+        vw_n = beta2 * vw + (1 - beta2) * gw * gw
+        vb_n = beta2 * vb + (1 - beta2) * gb * gb
         t = i + 1.0
-        mw_h = mw / (1 - beta1**t)
-        mb_h = mb / (1 - beta1**t)
-        vw_h = vw / (1 - beta2**t)
-        vb_h = vb / (1 - beta2**t)
-        w = w - lr * mw_h / (jnp.sqrt(vw_h) + eps)
-        b = b - lr * mb_h / (jnp.sqrt(vb_h) + eps)
-        return ((w, b), (mw, mb), (vw, vb)), 0.0
+        mw_h = mw_n / (1 - beta1**t)
+        mb_h = mb_n / (1 - beta1**t)
+        vw_h = vw_n / (1 - beta2**t)
+        vb_h = vb_n / (1 - beta2**t)
+        w_n = w - lr * mw_h / (jnp.sqrt(vw_h) + eps)
+        b_n = b - lr * mb_h / (jnp.sqrt(vb_h) + eps)
+        new = ((w_n, b_n), (mw_n, mb_n), (vw_n, vb_n))
+        active = i < n_steps
+        out = jax.tree_util.tree_map(
+            lambda nv, ov: jnp.where(active, nv, ov), new, carry)
+        return out, 0.0
 
     init = ((w0, b0), (jnp.zeros_like(w0), b0), (jnp.zeros_like(w0), b0))
     (params, _, _), _ = jax.lax.scan(step, init, jnp.arange(steps, dtype=jnp.float32))
     return params
+
+
+_fit = functools.partial(jax.jit, static_argnames=("steps",))(_fit_logreg_core)
+
+
+def _build_batched_fit(steps: int):
+    core = functools.partial(_fit_logreg_core, steps=steps)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
 class LogRegModel(TrainedModel):
@@ -74,8 +89,42 @@ class LogRegEstimator(Estimator):
 
     def train(self, data, params: Mapping[str, Any]) -> LogRegModel:
         p = {**self.default_params(), **params}
-        w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]), jnp.float32(p["lr"]), int(p["steps"]))
+        steps = int(p["steps"])
+        w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]), jnp.float32(p["lr"]),
+                    jnp.float32(steps), steps=steps)
         return LogRegModel(np.asarray(w), float(b))
+
+    # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
+    def fuse_signature(self, params: Mapping[str, Any]):
+        return ("logreg",)
+
+    def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
+        from repro.core.fusion import pad_pow2
+
+        # round UP like train_batched's padding (see gbdt.fuse_bucket)
+        p = {**self.default_params(), **params}
+        return (pad_pow2(int(p["steps"])),)
+
+    def train_batched(self, data, configs, *, cache=None) -> list[LogRegModel]:
+        from repro.core import fusion
+
+        ps = [{**self.default_params(), **c} for c in configs]
+        ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
+        x = data["x"]
+        pad_steps = fusion.pad_pow2(max(int(p["steps"]) for p in ps))
+        cc = cache if cache is not None else fusion.compile_cache()
+        fit = cc.get(
+            ("logreg", pad_steps, len(ps), tuple(x.shape)),
+            lambda: _build_batched_fit(pad_steps),
+        )
+        w, b = fit(
+            x, data["y"],
+            jnp.asarray([float(p["c"]) for p in ps], jnp.float32),
+            jnp.asarray([float(p["lr"]) for p in ps], jnp.float32),
+            jnp.asarray([float(int(p["steps"])) for p in ps], jnp.float32),
+        )
+        w_np, b_np = np.asarray(w), np.asarray(b)
+        return [LogRegModel(w_np[i], float(b_np[i])) for i in range(n_real)]
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:

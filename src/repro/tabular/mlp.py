@@ -36,8 +36,13 @@ def _forward(params, x):
     return h[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("dims", "steps", "batch_size"))
-def _fit(x, y, key, lr, dims: tuple[int, ...], steps: int, batch_size: int):
+def _fit_mlp_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...], steps: int,
+                  batch_size: int):
+    """Minibatch Adam over a PADDED step count: past the traced ``n_steps``
+    the whole carry (params, optimizer state, PRNG key) freezes, so a
+    step-padded run matches the unpadded one exactly, and one compile per
+    (architecture, padded steps, batch size) serves the whole learning-rate
+    × step-budget grid — vmapped into one fused program by ``train_batched``."""
     n = x.shape[0]
     params = _init_params(key, dims)
 
@@ -54,7 +59,7 @@ def _fit(x, y, key, lr, dims: tuple[int, ...], steps: int, batch_size: int):
 
     def step(carry, i):
         params, (m, v), key = carry
-        key, k = jax.random.split(key)
+        new_key, k = jax.random.split(key)
         idx = jax.random.randint(k, (batch_size,), 0, n)
         grads = jax.grad(loss_fn)(params, x[idx], y[idx])
         t = i + 1.0
@@ -69,10 +74,25 @@ def _fit(x, y, key, lr, dims: tuple[int, ...], steps: int, batch_size: int):
             new_params.append((w, b))
             new_m.append((mw, mb))
             new_v.append((vw, vb))
-        return (new_params, (new_m, new_v), key), 0.0
+        new = (new_params, (new_m, new_v), new_key)
+        active = i < n_steps
+        out = jax.tree_util.tree_map(
+            lambda nv, ov: jnp.where(active, nv, ov), new, carry)
+        return out, 0.0
 
     (params, _, _), _ = jax.lax.scan(step, (params, opt_state, key), jnp.arange(steps, dtype=jnp.float32))
     return params
+
+
+_fit = functools.partial(
+    jax.jit, static_argnames=("dims", "steps", "batch_size")
+)(_fit_mlp_core)
+
+
+def _build_batched_fit(dims: tuple[int, ...], steps: int, batch_size: int):
+    core = functools.partial(
+        _fit_mlp_core, dims=dims, steps=steps, batch_size=batch_size)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
 class MLPModel(TrainedModel):
@@ -96,17 +116,63 @@ class MLPEstimator(Estimator):
     def default_params(self) -> dict[str, Any]:
         return {"network": "64_64", "learning_rate": 0.003, "steps": 300, "batch_size": 128, "seed": 0}
 
+    @staticmethod
+    def _dims(p: Mapping[str, Any], n_features: int) -> tuple[int, ...]:
+        hidden = tuple(int(h) for h in str(p["network"]).split("_"))
+        return (n_features,) + hidden + (1,)
+
     def train(self, data, params: Mapping[str, Any]) -> MLPModel:
         p = {**self.default_params(), **params}
         x, y = data["x"], data["y"]
-        hidden = tuple(int(h) for h in str(p["network"]).split("_"))
-        dims = (int(x.shape[1]),) + hidden + (1,)
+        dims = self._dims(p, int(x.shape[1]))
         bs = int(min(p["batch_size"], x.shape[0]))
+        steps = int(p["steps"])
         params_out = _fit(
             x, y, jax.random.key(int(p["seed"])), jnp.float32(p["learning_rate"]),
-            dims, int(p["steps"]), bs,
+            jnp.float32(steps), dims=dims, steps=steps, batch_size=bs,
         )
         return MLPModel(params_out)
+
+    # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
+    def fuse_signature(self, params: Mapping[str, Any]):
+        # the architecture and minibatch shape fix the program's shapes; the
+        # step budget pads, lr/seed trace
+        p = {**self.default_params(), **params}
+        return ("mlp", str(p["network"]), int(p["batch_size"]))
+
+    def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
+        from repro.core.fusion import pad_pow2
+
+        # round UP like train_batched's padding (see gbdt.fuse_bucket)
+        p = {**self.default_params(), **params}
+        return (pad_pow2(int(p["steps"])),)
+
+    def train_batched(self, data, configs, *, cache=None) -> list[MLPModel]:
+        from repro.core import fusion
+
+        ps = [{**self.default_params(), **c} for c in configs]
+        ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
+        x, y = data["x"], data["y"]
+        dims = self._dims(ps[0], int(x.shape[1]))
+        bs = int(min(ps[0]["batch_size"], x.shape[0]))
+        if any(self._dims(p, int(x.shape[1])) != dims
+               or int(min(p["batch_size"], x.shape[0])) != bs for p in ps):
+            raise ValueError("mlp fused batch mixes architectures/batch sizes")
+        pad_steps = fusion.pad_pow2(max(int(p["steps"]) for p in ps))
+        cc = cache if cache is not None else fusion.compile_cache()
+        fit = cc.get(
+            ("mlp", dims, pad_steps, bs, len(ps), tuple(x.shape)),
+            lambda: _build_batched_fit(dims, pad_steps, bs),
+        )
+        keys = jax.vmap(jax.random.key)(
+            jnp.asarray([int(p["seed"]) for p in ps], jnp.uint32))
+        params_out = fit(
+            x, y, keys,
+            jnp.asarray([float(p["learning_rate"]) for p in ps], jnp.float32),
+            jnp.asarray([float(int(p["steps"])) for p in ps], jnp.float32),
+        )
+        flat = [(np.asarray(w), np.asarray(b)) for w, b in params_out]
+        return [MLPModel([(w[i], b[i]) for w, b in flat]) for i in range(n_real)]
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:

@@ -179,3 +179,20 @@ def test_histogram_conservation(rng):
     np.testing.assert_allclose(total_g, float(g.sum()) * np.ones(f), rtol=1e-4)
     total_h = np.asarray(hist[..., 1].sum(axis=(0, 2)))
     np.testing.assert_allclose(total_h, r * np.ones(f), rtol=1e-5)
+
+
+def test_histogram_tile_table_respects_vmem_budget():
+    """pick_tiles shrinks block_features as n_nodes grows: the two f32 VMEM
+    accumulators (2·N·bf·B·4 bytes) must stay inside the scratch budget at
+    every tree level, not just the shallow ones the sweep measured."""
+    from repro.kernels.histogram import _VMEM_SCRATCH_BUDGET, pick_tiles
+
+    for n_bins in (32, 64, 128, 256):
+        for n_nodes in (1, 8, 64, 512, 2048):
+            bf, br = pick_tiles(120, n_bins, 4800, n_nodes=n_nodes)
+            assert bf >= 1 and br >= 8
+            assert (bf == 1
+                    or 2 * n_nodes * bf * n_bins * 4 <= _VMEM_SCRATCH_BUDGET)
+    # deep level really does shrink vs the table default
+    assert pick_tiles(120, 64, 4800, n_nodes=2048)[0] < \
+        pick_tiles(120, 64, 4800, n_nodes=8)[0]

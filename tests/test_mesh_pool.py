@@ -1,10 +1,12 @@
 """MeshSliceExecutorPool scheduling semantics, tested WITHOUT devices:
 stand-in slice handles + a recording task_runner exercise WAL resume,
-per-task error capture, dynamic load balancing, and failure re-queue."""
+per-task error capture, dynamic load balancing, failure re-queue, and
+fused-batch unbatching/straggler recovery."""
 import pytest
 
 from repro.core import (
     ExecutorFailure,
+    FusedBatch,
     MeshSliceExecutorPool,
     SearchWAL,
     TrainTask,
@@ -161,3 +163,92 @@ def test_streaming_yields_before_completion():
     assert first.ok
     rest = list(stream)
     assert len(rest) == 3
+
+
+# --------------------------------------------------------------------------
+# Fused batches: one program per unit, unbatched results, stragglers.
+# --------------------------------------------------------------------------
+
+class BatchAwareRunner(RecordingRunner):
+    """Runner that also accepts FusedBatch units (one call per unit)."""
+
+    def __call__(self, task, slice_mesh, data):
+        if isinstance(task, FusedBatch):
+            if (slice_mesh, task.task_id) in self.die_on:
+                self.die_on.discard((slice_mesh, task.task_id))
+                raise ExecutorFailure(f"{slice_mesh} died")
+            self.calls.append((task.task_id, slice_mesh))
+            return [f"model-{m.task_id}" for m in task.tasks], 0.04 * task.batch_size
+        return super().__call__(task, slice_mesh, data)
+
+
+def mk_fused(costs, start=0):
+    tasks = [TrainTask(task_id=start + i, estimator="stub", params={"i": i}, cost=c)
+             for i, c in enumerate(costs)]
+    return FusedBatch(tasks=tuple(tasks), signature=("stub", ()),
+                      buckets=(0,) * len(tasks), cost=float(sum(costs)))
+
+
+def test_fused_unit_unbatches_with_amortized_seconds(tmp_path):
+    wal = SearchWAL(str(tmp_path / "wal.jsonl"))
+    unit = mk_fused([1.0] * 4)
+    runner = BatchAwareRunner()
+    pool = MeshSliceExecutorPool(task_runner=runner, slices=["s0"], wal=wal)
+    results = pool.run(schedule([unit], 1, policy="lpt"), data=None)
+    assert sorted(r.task.task_id for r in results) == [0, 1, 2, 3]
+    assert len(runner.calls) == 1            # ONE program for the whole unit
+    assert all(r.batch_size == 4 for r in results)
+    assert all(r.train_seconds == pytest.approx(0.04) for r in results)
+    assert all(wal.is_done(t) for t in range(4))
+    # resubmitting skips every journalled member without running anything
+    again = MeshSliceExecutorPool(task_runner=BatchAwareRunner(),
+                                  slices=["s0"], wal=SearchWAL(wal.path))
+    assert again.run(schedule([unit], 1, policy="lpt"), data=None) == []
+
+
+def test_fused_batch_error_becomes_per_member_errors():
+    class ExplodingRunner(BatchAwareRunner):
+        def __call__(self, task, slice_mesh, data):
+            raise ValueError("batch is poisoned")
+
+    pool = MeshSliceExecutorPool(task_runner=ExplodingRunner(), slices=["s0"])
+    results = pool.run(schedule([mk_fused([1.0] * 3)], 1, policy="lpt"), data=None)
+    assert len(results) == 3
+    assert all(not r.ok and "poisoned" in r.error for r in results)
+    assert pool.dead_executors == set()      # a bad batch never kills the slice
+
+
+def test_fused_stragglers_survive_mid_stream_cancel(tmp_path):
+    """Fault parity with LocalExecutorPool.drain_stragglers: a replanning
+    driver that cancels the stream mid-unbatch must be able to collect the
+    finished members it never saw — they are journalled, and losing their
+    models would silently waste trained work."""
+    wal = SearchWAL(str(tmp_path / "wal.jsonl"))
+    unit = mk_fused([1.0] * 5)
+    pool = MeshSliceExecutorPool(task_runner=BatchAwareRunner(),
+                                 slices=["s0"], wal=wal)
+    stream = pool.submit(schedule([unit], 1, policy="lpt"), data=None)
+    seen = [next(stream), next(stream)]
+    stream.close()                           # replan-style cancellation
+    stragglers = pool.drain_stragglers()
+    assert len(stragglers) == 3
+    assert {r.task.task_id for r in seen} | {r.task.task_id for r in stragglers} \
+        == {0, 1, 2, 3, 4}
+    assert all(r.ok for r in stragglers)
+    assert all(wal.is_done(t) for t in range(5))
+    assert pool.drain_stragglers() == []     # buffer clears on read
+
+
+def test_fused_unit_requeues_to_survivor_on_slice_death(tmp_path):
+    """A slice dying ON a fused unit strands the whole unit; the survivor
+    re-runs it as one program."""
+    unit = mk_fused([1.0] * 3)
+    single = TrainTask(task_id=99, estimator="stub", params={}, cost=1.0)
+    runner = BatchAwareRunner(die_on={("s0", unit.task_id)})
+    pool = MeshSliceExecutorPool(task_runner=runner, slices=["s0", "s1"],
+                                 wal=SearchWAL(str(tmp_path / "wal.jsonl")))
+    results = pool.run(schedule([unit, single], 2, policy="lpt"), data=None)
+    assert sorted(r.task.task_id for r in results) == [0, 1, 2, 99]
+    assert all(r.ok for r in results)
+    assert pool.dead_executors == {0}
+    assert all(s == "s1" for _, s in runner.calls)   # survivor did everything
