@@ -23,7 +23,13 @@ import sys
 import time
 import traceback
 
-from benchmarks import cost_model_bench, fusion_bench, lm_bench, paper_figs
+from benchmarks import (
+    cost_model_bench,
+    fusion_bench,
+    lm_bench,
+    paper_figs,
+    prepared_data_bench,
+)
 
 BENCHES = {
     "fig3": paper_figs.fig3_profiling_ratio,
@@ -34,6 +40,7 @@ BENCHES = {
     "session_stream": paper_figs.session_streaming,
     "cost_model": cost_model_bench.mis_estimate_recovery,
     "fusion": fusion_bench.full,
+    "prepared_data": prepared_data_bench.full,
     "histogram_sweep": fusion_bench.histogram_tile_sweep,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
@@ -44,6 +51,7 @@ BENCHES = {
 SMOKE_BENCHES = {
     "cost_model": cost_model_bench.smoke,
     "fusion": fusion_bench.smoke,
+    "prepared_data": prepared_data_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
 }
 

@@ -51,6 +51,14 @@ scores = multi_model.validate_all(validate_df, metric="auc")
 
 print(f"searched {len(scores)} configurations "
       f"(profiling {session.stats.profiling_ratio:.1%} of total time)")
+# Prepared-data plane (DESIGN.md §3.3): each (dataset, format, params)
+# variant converts ONCE per process — misses = actual conversions, hits =
+# tasks that trained on the device-resident prepared copy for free.
+st = session.stats
+print(f"prepared-data cache: {st.prepared_cache_misses} conversions, "
+      f"{st.prepared_cache_hits} reuses, "
+      f"{st.convert_seconds_total:.2f}s converting "
+      f"({st.prepared_cache_hit_rate:.0%} hit rate)")
 for m in scores[:5]:
     print(f"  auc={m.score:.4f}  {m.task.key()}")
 print(f"best: {scores[0].task.key()}")

@@ -4,7 +4,17 @@ Public API re-exports; see DESIGN.md §1 for the paper mapping.
 """
 from repro.core.backend import ExecutorBackend
 from repro.core.cost_model import CostModel, observed_drift, param_bucket
-from repro.core.data_format import DenseMatrix, available_formats, convert
+from repro.core.data_format import (
+    DenseMatrix,
+    PreparedDataCache,
+    available_formats,
+    convert,
+    format_key,
+    prepare_cached,
+    prepared_data_cache,
+    register_converter,
+    unregister_converter,
+)
 from repro.core.executor import LocalExecutorPool, MeshSliceExecutorPool
 from repro.core.fusion import (
     CompileCache,
@@ -22,12 +32,15 @@ from repro.core.interface import (
     estimator_names,
     get_estimator,
     register_estimator,
+    run_prepared,
+    run_prepared_batched,
     unregister_estimator,
 )
 from repro.core.profiler import AnalyticProfiler, ProfileReport, SamplingProfiler, attach_costs
 from repro.core.results import METRICS, ModelScore, MultiModel, accuracy, auc, logloss
 from repro.core.scheduler import (
     Assignment,
+    charge_first_of_group,
     lpt_lower_bound,
     plan_makespan_estimate,
     rebalance,

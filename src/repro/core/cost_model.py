@@ -144,6 +144,12 @@ class CostModel:
         self._buckets: dict[str, dict[str, _LogStats]] = {}   # family -> bucket
         self._families: dict[str, _LogStats] = {}             # pooled per family
         self._ratios: dict[str, _RatioStats] = {}             # obs/est per family
+        #: per-FORMAT conversion law (DESIGN.md §3.3): seconds ≈ a·rows^b of
+        #: the uniform→native conversion, keyed by data_format.format_key —
+        #: a separate population from training time, so the scheduler can
+        #: charge the FIRST task of a cold format group with conversion
+        #: included and the rest without
+        self._converts: dict[str, _LogStats] = {}
         self._n_observed = 0
 
     @staticmethod
@@ -156,12 +162,20 @@ class CostModel:
 
     # -- write side --------------------------------------------------------
     def observe(self, task: TrainTask, seconds: float, n_rows: int,
-                *, batched: bool = False) -> None:
+                *, batched: bool = False,
+                ratio_seconds: float | None = None) -> None:
         """Record one completed task. No-ops on junk (failed tasks report 0s).
 
         ``batched=True`` records under the family's fused-execution law;
         ``seconds`` is then the AMORTIZED share (batch total / batch size),
         which is exactly what the scheduler wants back from ``estimate``.
+
+        ``ratio_seconds`` is what the obs/est ratio compares against
+        ``task.cost`` (default: ``seconds``). The observer passes
+        train + convert here: a conversion-charged task's cost includes the
+        conversion estimate, so comparing it against training time alone
+        would bias the family's ratio low — while the size LAW must stay on
+        pure training seconds.
         """
         if seconds <= 0 or n_rows <= 0:
             return
@@ -173,16 +187,54 @@ class CostModel:
             self._families.setdefault(key, _LogStats()).add(x, y)
             if task.cost is not None and task.cost > 0:
                 self._ratios.setdefault(key, _RatioStats()).add(
-                    task.cost, seconds)
+                    task.cost,
+                    ratio_seconds if ratio_seconds is not None else seconds)
             self._n_observed += 1
+
+    def observe_convert(self, fmt_key: str, seconds: float, n_rows: int) -> None:
+        """Record one actual uniform→native conversion (a prepared-data
+        cache BUILD — hits cost nothing and must not be observed)."""
+        if seconds <= 0 or n_rows <= 0:
+            return
+        with self._lock:
+            self._converts.setdefault(fmt_key, _LogStats()).add(
+                math.log(n_rows), math.log(seconds))
+
+    def predict_convert(self, fmt_key: str, n_rows: int) -> float | None:
+        """Conversion-seconds estimate for a format at a data size, or None
+        before the format has ever been observed converting."""
+        if n_rows <= 0:
+            return None
+        with self._lock:
+            stats = self._converts.get(fmt_key)
+            if stats is None or not stats.n:
+                return None
+            return math.exp(stats.predict(math.log(n_rows),
+                                          self.default_exponent))
 
     def observe_result(self, result, n_rows: int) -> None:
         """``on_result``-shaped adapter: feed a TaskResult straight in. Fused
         results carry ``batch_size > 1`` and amortized seconds, and land in
-        the batched law automatically."""
-        if result.ok:
-            self.observe(result.task, result.train_seconds, n_rows,
-                         batched=getattr(result, "batch_size", 1) > 1)
+        the batched law automatically. A result that BUILT a prepared-data
+        entry carries the FULL build as ``convert_seconds`` (the pools
+        attach it to exactly one result per build) and feeds the per-format
+        conversion law once — train and convert populations never mix."""
+        if not result.ok:
+            return
+        batch_size = getattr(result, "batch_size", 1)
+        conv = getattr(result, "convert_seconds", 0.0)
+        self.observe(result.task, result.train_seconds, n_rows,
+                     batched=batch_size > 1,
+                     ratio_seconds=result.train_seconds + conv)
+        if conv > 0:
+            from repro.core.interface import format_law_key, get_estimator
+
+            try:
+                est = get_estimator(result.task.estimator)
+            except KeyError:
+                return
+            self.observe_convert(
+                format_law_key(est, result.task.params), conv, n_rows)
 
     # -- read side ---------------------------------------------------------
     @property
@@ -300,6 +352,10 @@ class CostModel:
                     }
                     for family, buckets in self._buckets.items()
                 },
+                "converts": {
+                    fmt_key: dataclasses.asdict(stats)
+                    for fmt_key, stats in self._converts.items()
+                },
             }
 
     def save(self, path: str | None = None) -> str:
@@ -330,6 +386,12 @@ class CostModel:
                 bucket: _LogStats(**stats)
                 for bucket, stats in entry.get("buckets", {}).items()
             }
+        # optional section: files written before the §3.3 conversion law
+        # simply have no "converts" and load with a cold one
+        cm._converts = {
+            fmt_key: _LogStats(**stats)
+            for fmt_key, stats in d.get("converts", {}).items()
+        }
         cm._n_observed = int(d.get("n_observed", 0))
         return cm
 

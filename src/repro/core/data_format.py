@@ -1,9 +1,21 @@
-"""Unified data format (paper §III-B).
+"""Unified data format and the prepared-data plane (paper §III-B).
 
 The paper's common interface takes data in ONE uniform format — a row-oriented
 dense matrix — and each ML implementation converts it into its own preferred
 layout *on the executor, immediately prior to training*. This module implements
-that format plus the per-backend converters.
+that format, the per-backend converters, and the PREPARED-DATA PLANE
+(DESIGN.md §3.3) that makes conversion a once-per-process cost:
+
+* converters are PARAMETERIZED — ``convert(data, fmt, **params)`` — so one
+  registered converter serves a family of native layouts (``quantized_bins``
+  at ``max_bins=64`` vs ``256`` are distinct conversions);
+* :meth:`DenseMatrix.fingerprint` is a content hash, so equal-content copies
+  of a dataset share prepared results;
+* :class:`PreparedDataCache` keys the converted (device-resident) payload on
+  ``(fingerprint, format, params, placement)`` with hit/miss/bytes accounting
+  mirroring :class:`repro.core.fusion.CompileCache`, and de-duplicates
+  concurrent first conversions so a format is prepared EXACTLY once per
+  process (per placement) no matter how many executor threads race for it.
 
 Converters registered here are looked up by name from ``Estimator.data_format``
 so that adding a new implementation (paper Fig.4's 55-144 LOC claim) never
@@ -12,7 +24,10 @@ touches the Driver.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import hashlib
+import threading
+import time
+from typing import Any, Callable, Hashable, Mapping
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,8 +35,14 @@ import numpy as np
 __all__ = [
     "DenseMatrix",
     "register_converter",
+    "unregister_converter",
     "convert",
     "available_formats",
+    "format_key",
+    "PreparedDataCache",
+    "prepared_data_cache",
+    "prepare_cached",
+    "payload_nbytes",
 ]
 
 
@@ -48,6 +69,23 @@ class DenseMatrix:
             )
         object.__setattr__(self, "x", x)
         object.__setattr__(self, "y", y)
+
+    def fingerprint(self) -> str:
+        """Content hash: equal-content copies hash equal, any change in the
+        values, shapes or feature names changes it. Memoized per instance
+        (the arrays are frozen with the dataclass), so repeated cache lookups
+        cost a dict read, not a re-hash."""
+        cached = self.__dict__.get("_fingerprint")
+        if cached is not None:
+            return cached
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr((self.x.shape, str(self.x.dtype), self.y.shape,
+                       str(self.y.dtype), self.feature_names)).encode())
+        h.update(self.x.tobytes())
+        h.update(self.y.tobytes())
+        fp = h.hexdigest()
+        object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     @property
     def n_rows(self) -> int:
@@ -93,12 +131,21 @@ class DenseMatrix:
 # Per-implementation converters (executed executor-side, post scheduling).
 # --------------------------------------------------------------------------
 
-_CONVERTERS: dict[str, Callable[[DenseMatrix], object]] = {}
+_CONVERTERS: dict[str, Callable[..., object]] = {}
 
 
 def register_converter(name: str):
+    """Register ``fn`` as the converter for format ``name``.
+
+    Re-registering the SAME function under the same name is an idempotent
+    no-op (hot-reload tooling and test modules re-import freely); binding a
+    DIFFERENT function to a taken name is still an error — silently
+    shadowing a format would change every estimator that declares it.
+    """
+
     def deco(fn):
-        if name in _CONVERTERS:
+        existing = _CONVERTERS.get(name)
+        if existing is not None and existing is not fn:
             raise ValueError(f"converter {name!r} already registered")
         _CONVERTERS[name] = fn
         return fn
@@ -106,18 +153,185 @@ def register_converter(name: str):
     return deco
 
 
-def convert(data: DenseMatrix, fmt: str):
+def unregister_converter(name: str) -> None:
+    """Remove a registered converter (parity with ``unregister_estimator``,
+    so tests and hot-reload tooling stop leaking registry state)."""
+    _CONVERTERS.pop(name, None)
+
+
+def convert(data: DenseMatrix, fmt: str, **params):
+    """Uniform → native conversion. ``params`` are converter kwargs (e.g.
+    ``quantized_bins(max_bins=64)``) — the parameterized half of a prepared-
+    data cache key (see :func:`format_key`)."""
     try:
         fn = _CONVERTERS[fmt]
     except KeyError:
         raise KeyError(
             f"unknown data format {fmt!r}; known: {sorted(_CONVERTERS)}"
         ) from None
-    return fn(data)
+    return fn(data, **params)
 
 
 def available_formats() -> tuple[str, ...]:
     return tuple(sorted(_CONVERTERS))
+
+
+def format_key(fmt: str, params: Mapping[str, Any] | None = None) -> str:
+    """Canonical string for (converter name, frozen kwargs).
+
+    This is the format half of a :class:`PreparedDataCache` key AND the
+    family key of the CostModel's per-format conversion law — sorted items,
+    so two dicts with the same content produce one key.
+    """
+    if not params:
+        return fmt
+    items = ",".join(f"{k}={params[k]!r}" for k in sorted(params))
+    return f"{fmt}({items})"
+
+
+# --------------------------------------------------------------------------
+# Prepared-data cache (DESIGN.md §3.3).
+# --------------------------------------------------------------------------
+
+def payload_nbytes(obj) -> int:
+    """Best-effort byte size of a converted payload: sum of ``.nbytes`` over
+    array leaves in (possibly nested) dict/tuple/list containers."""
+    if isinstance(obj, Mapping):
+        return sum(payload_nbytes(v) for v in obj.values())
+    if isinstance(obj, (tuple, list)):
+        return sum(payload_nbytes(v) for v in obj)
+    return int(getattr(obj, "nbytes", 0) or 0)
+
+
+class _PreparedEntry:
+    __slots__ = ("ready", "value", "seconds", "nbytes", "error")
+
+    def __init__(self):
+        self.ready = threading.Event()
+        self.value = None
+        self.seconds = 0.0
+        self.nbytes = 0
+        self.error: BaseException | None = None
+
+
+class PreparedDataCache:
+    """Process-wide cache of prepared (converted, device-resident) datasets.
+
+    Keys are ``(data fingerprint, format_key, placement)``; values are
+    whatever the converter returned (typically a dict of device arrays).
+    Mirrors :class:`repro.core.fusion.CompileCache` hit/miss accounting and
+    adds a bytes gauge, and unlike it DE-DUPLICATES in-flight builds: when N
+    executor threads race for a cold format, one converts and the other
+    N−1 block on the entry — the conversion runs EXACTLY once per key.
+
+    ``get`` returns ``(value, seconds, built)``: ``seconds`` is the build
+    time for the thread that converted and 0.0 for everyone else (waiters'
+    blocked time is a startup transient, not a conversion), ``built`` tells
+    observers (the CostModel conversion law) which measurement to learn from.
+    """
+
+    def __init__(self):
+        self._entries: dict[Hashable, _PreparedEntry] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self._bytes = 0
+
+    def get(self, key: Hashable, builder: Callable[[], object],
+            ) -> tuple[object, float, bool]:
+        with self._lock:
+            entry = self._entries.get(key)
+            owner = entry is None
+            if owner:
+                entry = self._entries[key] = _PreparedEntry()
+                self.misses += 1       # misses = builds attempted
+        if owner:
+            t0 = time.perf_counter()
+            try:
+                entry.value = builder()       # convert outside the lock
+            except BaseException as e:
+                entry.error = e
+                with self._lock:              # failed builds don't poison the key
+                    self._entries.pop(key, None)
+                entry.ready.set()
+                raise
+            entry.seconds = time.perf_counter() - t0
+            entry.nbytes = payload_nbytes(entry.value)
+            with self._lock:
+                self._bytes += entry.nbytes
+            entry.ready.set()
+            return entry.value, entry.seconds, True
+        entry.ready.wait()
+        if entry.error is not None:
+            # the build we waited on failed; retry (we may become the owner).
+            # Nothing was counted for THIS caller yet, so the retry's own
+            # hit-or-miss is the only accounting it leaves behind.
+            return self.get(key, builder)
+        with self._lock:
+            self.hits += 1             # hits = served from a completed build
+        return entry.value, 0.0, False
+
+    def contains(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def counters(self) -> tuple[int, int]:
+        with self._lock:
+            return self.hits, self.misses
+
+    @property
+    def n_entries(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def bytes_cached(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    @property
+    def hit_rate(self) -> float:
+        hits, misses = self.counters()
+        total = hits + misses
+        return hits / total if total else 0.0
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+            self._bytes = 0
+
+
+_GLOBAL_PREPARED = PreparedDataCache()
+
+
+def prepared_data_cache() -> PreparedDataCache:
+    """The process-wide cache shared by every executor pool (and, through
+    ``SearchStats.prepared_cache_*``, read by every Session)."""
+    return _GLOBAL_PREPARED
+
+
+def prepare_key(data: DenseMatrix, fmt: str,
+                params: Mapping[str, Any] | None = None,
+                placement: Hashable = None) -> tuple:
+    """The full cache key for one prepared variant. ``placement`` keys
+    device residency: None = the process default device (thread pools share
+    it); mesh pools pass a per-slice token so each slice holds its own
+    resident copy (on a real pod the builder device_puts onto the slice —
+    on this CPU container slices are degenerate but the keying is the same)."""
+    return (data.fingerprint(), format_key(fmt, params), placement)
+
+
+def prepare_cached(data: DenseMatrix, fmt: str,
+                   params: Mapping[str, Any] | None = None, *,
+                   cache: PreparedDataCache | None = None,
+                   placement: Hashable = None) -> tuple[object, float, bool]:
+    """Convert through the prepared-data cache; returns
+    ``(prepared, convert_seconds, built)`` — see :meth:`PreparedDataCache.get`."""
+    cache = cache if cache is not None else prepared_data_cache()
+    key = prepare_key(data, fmt, params, placement)
+    return cache.get(key, lambda: convert(data, fmt, **dict(params or {})))
 
 
 @register_converter("dense_rows")
@@ -138,8 +352,13 @@ def _quantized_bins(data: DenseMatrix, max_bins: int = 256):
 
     Per feature: quantile-based bin edges, values mapped to uint8 bin ids.
     This is the format conversion the paper describes happening just before
-    training on the executor.
+    training on the executor. ``max_bins`` is a CONVERTER PARAMETER
+    (``Estimator.format_params``): gbdt prepares at its ``max_bin``
+    hyperparameter directly, so each (dataset, max_bins) pair is one
+    prepared-data cache entry instead of a per-task re-quantization.
     """
+    if max_bins < 2:
+        raise ValueError(f"max_bins must be >= 2, got {max_bins}")
     x = data.x
     n_rows, n_feat = x.shape
     n_bins = min(max_bins, max(2, n_rows))
@@ -158,18 +377,24 @@ def _quantized_bins(data: DenseMatrix, max_bins: int = 256):
 
 @register_converter("sparse_csr")
 def _sparse_csr(data: DenseMatrix):
-    """CSR-ish triplet format for sparse-leaning implementations.
+    """Compressed Sparse Row format for sparse-leaning implementations.
+
+    CSR invariants: row ``r``'s nonzeros are exactly
+    ``values[indptr[r]:indptr[r+1]]`` with ascending column indices, and
+    ``indptr`` is consistent with that ordering. ``np.nonzero`` documents
+    row-major (C-style) index order, which IS the CSR canonical order — the
+    dense↔CSR round-trip test pins the invariant.
 
     The paper notes the common format *should* adapt to data sparsity but its
     framework ships dense-only; we provide the converter the paper lists as
     future work to demonstrate the interface supports it.
     """
     x = data.x
-    rows, cols = np.nonzero(x)
+    rows, cols = np.nonzero(x)           # row-major order: CSR-canonical
     values = x[rows, cols]
-    indptr = np.zeros(x.shape[0] + 1, dtype=np.int32)
-    np.add.at(indptr, rows + 1, 1)
-    indptr = np.cumsum(indptr, dtype=np.int32)
+    counts = np.bincount(rows, minlength=x.shape[0])
+    indptr = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(counts)]).astype(np.int32)
     return {
         "values": jnp.asarray(values),
         "col_idx": jnp.asarray(cols.astype(np.int32)),

@@ -17,20 +17,31 @@ complete:
   semantics: WAL de-dup/resume, per-task error capture, dynamic load-balanced
   queues, and ExecutorFailure re-queue onto surviving slices.
 
-The uniform→native data-format conversion happens HERE (executor-side), via
-``Estimator.run`` — never in the Driver (paper §III-B).
+The uniform→native data-format conversion happens HERE (executor-side) —
+never in the Driver (paper §III-B) — and is resolved through the process-wide
+:class:`~repro.core.data_format.PreparedDataCache` (DESIGN.md §3.3): each
+(dataset fingerprint, format, converter params, placement) converts once per
+process; every result reports the conversion seconds it actually paid as
+``TaskResult.convert_seconds`` (0.0 on a cache hit).
 """
 from __future__ import annotations
 
+import itertools
 import queue as _queue
 import threading
 import time
 from typing import Callable, Iterator, Sequence
 
-from repro.core.data_format import DenseMatrix
+from repro.core.data_format import DenseMatrix, PreparedDataCache, prepared_data_cache
 from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
-from repro.core.fusion import FusedBatch
-from repro.core.interface import TaskResult, TrainTask, get_estimator
+from repro.core.fusion import FusedBatch, charge_carrier
+from repro.core.interface import (
+    TaskResult,
+    TrainTask,
+    get_estimator,
+    run_prepared,
+    run_prepared_batched,
+)
 from repro.core.scheduler import Assignment
 
 __all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
@@ -38,22 +49,31 @@ __all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
 _DYNAMIC_POLICIES = ("dynamic", "lpt_dynamic")
 
 
-def _run_fused_unit(unit: FusedBatch, data, eid: int) -> list[TaskResult]:
+def _run_fused_unit(unit: FusedBatch, data, eid: int,
+                    cache: PreparedDataCache | None = None,
+                    placement=None) -> list[TaskResult]:
     """Train a fused batch as ONE device program and unbatch into per-member
     results. Amortized accounting: each member's ``train_seconds`` is the
     batch total divided by the members actually run, and ``batch_size``
-    marks the result as fused for the CostModel's batched law. A whole-batch
-    exception becomes a per-member error result (task-level failure
-    semantics — the executor survives)."""
+    marks the result as fused for the CostModel's batched law. When the
+    batch BUILT the prepared-data entry, the full ``convert_seconds`` goes
+    to the charge-carrier member (fusion.charge_carrier: max cost, lowest
+    id) — one build, one observation, on the member the planner charged. A
+    whole-batch exception becomes a per-member error result (task-level
+    failure semantics — the executor survives)."""
     members = list(unit.tasks)
     est = get_estimator(unit.estimator)
     try:
-        models, total = est.run_batched(data, [m.params for m in members])
+        models, total, conv = run_prepared_batched(
+            est, data, [m.params for m in members],
+            cache=cache, placement=placement)
         per = total / len(members)
+        carrier = charge_carrier(members) if conv > 0 else -1
         return [
             TaskResult(task=m, model=mod, train_seconds=per, executor_id=eid,
-                       batch_size=len(members))
-            for m, mod in zip(members, models)
+                       batch_size=len(members),
+                       convert_seconds=conv if j == carrier else 0.0)
+            for j, (m, mod) in enumerate(zip(members, models))
         ]
     except ExecutorFailure:
         raise
@@ -75,11 +95,17 @@ class LocalExecutorPool:
         failure_hook: Callable[[int, TrainTask], None] | None = None,
         speculation_factor: float | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
+        prepared_cache: PreparedDataCache | None = None,
     ):
         self._n_executors = n_executors
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook  # tests inject ExecutorFailure here
         self.speculation_factor = speculation_factor
+        #: prepared-data cache the workers resolve conversion through; worker
+        #: threads share one device, so placement is the process default
+        #: (None) and the default cache is the process-wide one
+        self.prepared_cache = (prepared_cache if prepared_cache is not None
+                               else prepared_data_cache())
         #: called with every accepted TaskResult the moment it lands, on the
         #: worker thread — this is how the feedback CostModel observes
         #: runtimes (session.py chains onto it). Exceptions are swallowed:
@@ -98,6 +124,12 @@ class LocalExecutorPool:
     @property
     def n_executors(self) -> int:
         return self._n_executors
+
+    def prepare_placements(self) -> list:
+        """Placement tokens this pool converts under (conversion-aware
+        costing probes these to tell cold formats from resident ones):
+        worker threads share the process default device."""
+        return [None]
 
     # ------------------------------------------------------------------
     def submit(self, assignment: Assignment, data: DenseMatrix) -> Iterator[TaskResult]:
@@ -131,7 +163,8 @@ class LocalExecutorPool:
                 if res.ok:
                     self.wal.record(
                         WALRecord(task_id=res.task.task_id, key=res.task.key(),
-                                  seconds=res.train_seconds, executor_id=eid))
+                                  seconds=res.train_seconds, executor_id=eid,
+                                  convert_seconds=res.convert_seconds))
             return True
 
         def execute_fused(eid: int, unit: FusedBatch) -> None:
@@ -148,7 +181,8 @@ class LocalExecutorPool:
             try:
                 if self.failure_hook is not None:
                     self.failure_hook(eid, unit)  # may raise ExecutorFailure
-                batch_results = _run_fused_unit(sub, data, eid)
+                batch_results = _run_fused_unit(sub, data, eid,
+                                                cache=self.prepared_cache)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(unit.task_id, None)
@@ -174,8 +208,10 @@ class LocalExecutorPool:
                 if self.failure_hook is not None:
                     self.failure_hook(eid, task)  # may raise ExecutorFailure
                 est = get_estimator(task.estimator)
-                model, secs = est.run(data, task.params)
-                res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
+                model, secs, conv = run_prepared(est, data, task.params,
+                                                 cache=self.prepared_cache)
+                res = TaskResult(task=task, model=model, train_seconds=secs,
+                                 executor_id=eid, convert_seconds=conv)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(task.task_id, None)
@@ -299,7 +335,8 @@ class LocalExecutorPool:
                             and m.task_id not in results}
                     if not pend:
                         continue
-                    for res in _run_fused_unit(task.restrict(pend), data, -1):
+                    for res in _run_fused_unit(task.restrict(pend), data, -1,
+                                               cache=self.prepared_cache):
                         if accept(res, -1):
                             self._emit(res)
                             yield res
@@ -307,9 +344,13 @@ class LocalExecutorPool:
                 if not self.wal.is_done(task.task_id) and task.task_id not in results:
                     est = get_estimator(task.estimator)
                     try:
-                        model, secs = est.run(data, task.params)
-                        res = TaskResult(task=task, model=model, train_seconds=secs, executor_id=-1)
-                        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=-1))
+                        model, secs, conv = run_prepared(
+                            est, data, task.params, cache=self.prepared_cache)
+                        res = TaskResult(task=task, model=model, train_seconds=secs,
+                                         executor_id=-1, convert_seconds=conv)
+                        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(),
+                                                  seconds=secs, executor_id=-1,
+                                                  convert_seconds=conv))
                     except Exception as e:
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
                     results[task.task_id] = res
@@ -348,6 +389,11 @@ class LocalExecutorPool:
 # Mesh-slice executors (TPU-native adaptation).
 # --------------------------------------------------------------------------
 
+#: process-unique pool ids for prepared-data placement tokens — id(slice)
+#: would be recyclable after a pool is garbage-collected while its entries
+#: outlive it in the process-wide cache, producing false residency hits
+_POOL_IDS = itertools.count()
+
 def make_slices(mesh, n_slices: int, axis: str = "data"):
     """Partition ``mesh`` into ``n_slices`` submeshes along ``axis``.
 
@@ -378,12 +424,20 @@ class MeshSliceExecutorPool:
     placement, ordering, failure re-queue and WAL bookkeeping — the same
     scheduling semantics as LocalExecutorPool, with slices instead of threads.
 
+    With ``task_runner=None`` the pool runs ESTIMATOR-backed tasks itself
+    (the tabular workload on mesh slices): conversion resolves through the
+    prepared-data cache with a PER-SLICE placement token, so each slice
+    prepares a (dataset, format, params) variant once and every later task
+    placed on that slice reuses the slice-resident copy — the §3.3 plane's
+    mesh half. (On a real pod the placement token is where a device_put onto
+    the slice keys; on this CPU container slices are degenerate but the
+    keying/reuse logic is identical.)
+
     Fused units (:class:`repro.core.fusion.FusedBatch`) are run as one
-    program on their slice: the runner is called with the BATCH and must
+    program on their slice: a custom runner is called with the BATCH and must
     return ``(payload_per_member, total_seconds)``; the pool unbatches into
-    per-member results with amortized seconds. Estimator-backed batches
-    (the tabular workload) need no special runner — pass none of this and
-    use :func:`_run_fused_unit` semantics via the local pool instead.
+    per-member results with amortized seconds. The estimator-backed default
+    handles batches via ``Estimator.train_batched`` directly.
 
     Pass ``slices=[...]`` to supply pre-built (or stand-in) slice handles
     directly instead of partitioning a mesh — tests and custom partitioners
@@ -402,6 +456,7 @@ class MeshSliceExecutorPool:
         slices: Sequence[object] | None = None,
         driver_slice: object | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
+        prepared_cache: PreparedDataCache | None = None,
     ):
         if slices is not None:
             self.slices = list(slices)
@@ -409,9 +464,15 @@ class MeshSliceExecutorPool:
             if mesh is None or n_slices is None:
                 raise ValueError("provide either a mesh + n_slices or explicit slices=")
             self.slices = make_slices(mesh, n_slices, axis=slice_axis)
-        if task_runner is None:
-            raise ValueError("task_runner is required")
+        #: None = the estimator-backed default (prepared-data plane, §3.3)
         self.task_runner = task_runner
+        #: defaults to a PER-POOL cache, unlike the thread pool's process-wide
+        #: one: placement tokens make cross-pool sharing impossible anyway,
+        #: and a pool-owned cache lets the slices' device-resident copies be
+        #: reclaimed with the pool instead of pinning the global cache forever
+        self.prepared_cache = (prepared_cache if prepared_cache is not None
+                               else PreparedDataCache())
+        self._pool_id = next(_POOL_IDS)
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook
         # where stranded tasks run when every slice is lost; defaults to
@@ -450,19 +511,49 @@ class MeshSliceExecutorPool:
             return queues
         return [list(q) for q in assignment.plan]
 
+    def _placement(self, sl):
+        """Per-slice cache token: (process-unique pool id, slice index), so
+        tasks on one slice share its resident prepared data, different
+        slices each hold their own copy, and — when a caller INJECTS a
+        shared ``prepared_cache`` across pools — a later pool can never
+        collide with a dead pool's entries (an ``id()``-based token could
+        be recycled). The driver fallback reuses its handle's entry when it
+        is one of the slices — by default it IS slice 0."""
+        for i, s in enumerate(self.slices):
+            if s is sl:
+                return ("slice", self._pool_id, i)
+        return ("slice", self._pool_id, -1)   # external driver_slice handle
+
+    def prepare_placements(self) -> list:
+        """Placement tokens this pool converts under: one per slice for the
+        estimator-backed default runner; a custom ``task_runner`` owns its
+        own data handling, so the pool reports none (and the Session then
+        skips conversion charging entirely)."""
+        if self.task_runner is not None:
+            return []
+        return [self._placement(sl) for sl in self.slices]
+
     def _run_one(self, eid: int, task: TrainTask, sl, data) -> TaskResult:
         """One placed task; task-level errors become TaskResult.error,
         ExecutorFailure propagates (the slice is lost)."""
+        conv = 0.0
         try:
             if self.failure_hook is not None:
                 self.failure_hook(eid, task)  # may raise ExecutorFailure
-            model, secs = self.task_runner(task, sl, data)
+            if self.task_runner is not None:
+                model, secs = self.task_runner(task, sl, data)
+            else:
+                model, secs, conv = run_prepared(
+                    get_estimator(task.estimator), data, task.params,
+                    cache=self.prepared_cache, placement=self._placement(sl))
         except ExecutorFailure:
             raise
         except Exception as e:
             return TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
-        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs, executor_id=eid))
-        return TaskResult(task=task, model=model, train_seconds=secs, executor_id=eid)
+        self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs,
+                                  executor_id=eid, convert_seconds=conv))
+        return TaskResult(task=task, model=model, train_seconds=secs,
+                          executor_id=eid, convert_seconds=conv)
 
     def _run_fused(self, eid: int, unit: FusedBatch, sl, data) -> list[TaskResult]:
         """One fused unit as ONE placed program: the runner receives the
@@ -473,10 +564,17 @@ class MeshSliceExecutorPool:
         if not members:
             return []
         sub = unit.restrict({m.task_id for m in members})
+        conv = 0.0
         try:
             if self.failure_hook is not None:
                 self.failure_hook(eid, unit)  # may raise ExecutorFailure
-            payloads, total = self.task_runner(sub, sl, data)
+            if self.task_runner is not None:
+                payloads, total = self.task_runner(sub, sl, data)
+            else:
+                payloads, total, conv = run_prepared_batched(
+                    get_estimator(sub.estimator), data,
+                    [m.params for m in members],
+                    cache=self.prepared_cache, placement=self._placement(sl))
         except ExecutorFailure:
             raise
         except Exception as e:
@@ -484,12 +582,16 @@ class MeshSliceExecutorPool:
                                executor_id=eid, error=repr(e),
                                batch_size=len(members)) for m in members]
         per = total / len(members)
+        carrier = charge_carrier(members) if conv > 0 else -1
         results = []
-        for m, payload in zip(members, payloads):
+        for j, (m, payload) in enumerate(zip(members, payloads)):
+            conv_j = conv if j == carrier else 0.0
             self.wal.record(WALRecord(task_id=m.task_id, key=m.key(),
-                                      seconds=per, executor_id=eid))
+                                      seconds=per, executor_id=eid,
+                                      convert_seconds=conv_j))
             results.append(TaskResult(task=m, model=payload, train_seconds=per,
-                                      executor_id=eid, batch_size=len(members)))
+                                      executor_id=eid, batch_size=len(members),
+                                      convert_seconds=conv_j))
         return results
 
     def _execute(self, eid: int, task, sl, data) -> list[TaskResult]:

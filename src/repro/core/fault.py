@@ -37,6 +37,11 @@ class WALRecord:
     seconds: float
     executor_id: int
     score: float | None = None
+    #: uniform→native conversion seconds the task paid (0.0 on a prepared-
+    #: data cache hit) — journalled so post-hoc analysis sees the cost the
+    #: old pre-§3.3 accounting silently dropped. Defaults keep old WALs
+    #: parseable.
+    convert_seconds: float = 0.0
 
 
 class SearchWAL:

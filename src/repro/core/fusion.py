@@ -39,6 +39,7 @@ from repro.core.interface import TrainTask, get_estimator
 __all__ = [
     "FusedBatch",
     "CompileCache",
+    "charge_carrier",
     "compile_cache",
     "fuse_tasks",
     "pad_pow2",
@@ -148,6 +149,21 @@ class FusedBatch:
         tasks = tuple(fn(t) for t in self.tasks)
         return dataclasses.replace(self, tasks=tasks, cost=_sum_costs(tasks))
 
+    def charge_member(self, extra: float) -> "FusedBatch":
+        """Add a one-time cost (conversion-aware costing, §3.3) to the
+        MAX-cost member (ties: lowest task_id). Charging a member — not the
+        batch — survives every cost-resumming operation (``restrict``,
+        ``split_at_buckets``), so a conversion charge is not silently
+        dropped when the scheduler splits the bottleneck batch; and it is
+        the same member the executors attach the actual build's
+        ``convert_seconds`` to, keeping the drift window's estimated and
+        observed sides aligned."""
+        i = charge_carrier(self.tasks)
+        tasks = list(self.tasks)
+        tasks[i] = tasks[i].with_cost((tasks[i].cost or 0.0) + extra)
+        tasks = tuple(tasks)
+        return dataclasses.replace(self, tasks=tasks, cost=_sum_costs(tasks))
+
     def split_at_buckets(self) -> "list[FusedBatch]":
         """Split into one batch per distinct structural bucket (batch-aware
         rebalancing). A single-bucket batch returns ``[self]`` — bucket
@@ -173,6 +189,15 @@ class FusedBatch:
 def _sum_costs(tasks: Sequence[TrainTask]) -> float | None:
     known = [t.cost for t in tasks if t.cost is not None]
     return sum(known) if known else None
+
+
+def charge_carrier(tasks: Sequence[TrainTask]) -> int:
+    """Index of the member that carries one-time (conversion) charges and,
+    on the executor side, reports the actual build's ``convert_seconds``:
+    max cost, ties broken by lowest task_id — deterministic, so the planner
+    and the pools agree on who pays."""
+    return max(range(len(tasks)),
+               key=lambda i: ((tasks[i].cost or 0.0), -tasks[i].task_id))
 
 
 # --------------------------------------------------------------------------
@@ -255,12 +280,16 @@ def fuse_tasks(
 ) -> list:
     """Pack tasks into fused units; unfusable tasks pass through unchanged.
 
-    Tasks are grouped by ``(estimator, Estimator.fuse_signature)``, sorted
-    inside each group by structural ``fuse_bucket`` (so a batch pads over
-    near-equal shapes, keeping masked waste small) then by ``task_id`` (so
-    chunking is deterministic and re-fusing the same pending set yields the
-    same units), and chunked into batches of at most ``max_fuse``. A chunk
-    of one is returned as the bare task — fusing a singleton buys nothing.
+    Tasks are grouped by ``(estimator, Estimator.fuse_signature, resolved
+    format_params)`` — the last guards the prepared-data plane (§3.3): a
+    fused batch converts its data ONCE, so members must agree on the
+    converter kwargs even when an estimator's ``fuse_signature`` forgets to
+    capture a format-bearing hyperparameter. Groups are sorted inside by
+    structural ``fuse_bucket`` (so a batch pads over near-equal shapes,
+    keeping masked waste small) then by ``task_id`` (so chunking is
+    deterministic and re-fusing the same pending set yields the same units),
+    and chunked into batches of at most ``max_fuse``. A chunk of one is
+    returned as the bare task — fusing a singleton buys nothing.
 
     Returns a mixed list of ``TrainTask`` and :class:`FusedBatch` that any
     ``scheduler.schedule*`` policy accepts directly.
@@ -270,13 +299,16 @@ def fuse_tasks(
     groups: dict[tuple, list[tuple[TrainTask, Hashable]]] = {}
     passthrough: list[tuple[int, TrainTask]] = []
     order: dict[tuple, int] = {}
+    from repro.core.data_format import format_key
+
     for i, t in enumerate(tasks):
         est = get_estimator(t.estimator)
         sig = est.fuse_signature(t.params)
         if sig is None:
             passthrough.append((i, t))
             continue
-        key = (t.estimator, sig)
+        key = (t.estimator, sig,
+               format_key(est.data_format, est.format_params(dict(t.params))))
         order.setdefault(key, i)
         groups.setdefault(key, []).append((t, est.fuse_bucket(t.params)))
     units: list[tuple[int, object]] = list(passthrough)

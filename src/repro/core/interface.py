@@ -8,17 +8,36 @@ never modified (the paper's key extensibility claim).
 ``Estimator.train`` receives data ALREADY converted to the implementation's
 declared ``data_format`` — conversion runs executor-side (see executor.py),
 matching the paper's design where the format gap is resolved on the Executors.
+
+The prepared-data plane (DESIGN.md §3.3) splits the old monolithic
+``Estimator.run`` into ``prepare(raw, params) -> prepared`` +
+``train(prepared, params)``: estimators declare ``data_format`` AND
+``format_params(params)`` (converter kwargs derived from hyperparameters,
+e.g. gbdt's ``max_bin``), and the executors resolve ``prepare`` through the
+process-wide :class:`~repro.core.data_format.PreparedDataCache` via
+:func:`run_prepared` / :func:`run_prepared_batched` — so each
+(dataset fingerprint, format, converter params, placement) combination
+converts ONCE per process and every task after the first trains on the
+device-resident prepared result. ``run``/``run_batched`` remain as the
+uncached convenience path; a third-party subclass that overrides them keeps
+working (the executors detect the override and fall back, bypassing the
+cache — see the migration notes in DESIGN.md §3.3).
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
 import time
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Hashable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.data_format import DenseMatrix, convert
+from repro.core.data_format import (
+    DenseMatrix,
+    convert,
+    prepare_key,
+    prepared_data_cache,
+)
 
 __all__ = [
     "Estimator",
@@ -29,6 +48,10 @@ __all__ = [
     "unregister_estimator",
     "get_estimator",
     "estimator_names",
+    "format_law_key",
+    "prepared_cache_key",
+    "run_prepared",
+    "run_prepared_batched",
 ]
 
 
@@ -65,6 +88,11 @@ class TaskResult:
     #: downstream consumers — the WAL, the CostModel observer — need no
     #: fusion-specific handling
     batch_size: int = 1
+    #: uniform→native conversion seconds this task actually paid. Non-zero
+    #: only for the task that BUILT a prepared-data cache entry (fused: the
+    #: amortized share); cache hits report 0.0. ``train_seconds`` never
+    #: includes it — the two costs feed separate CostModel laws.
+    convert_seconds: float = 0.0
 
     @property
     def ok(self) -> bool:
@@ -88,6 +116,8 @@ class Estimator(abc.ABC):
     Subclasses declare:
       * ``name`` — registry key, referenced from search spaces,
       * ``data_format`` — which uniform-format converter to apply executor-side,
+      * ``format_params(params)`` — converter kwargs derived from the
+        hyperparameters (optional; defaults to none),
       * ``train(converted_data, params)`` — returns a TrainedModel.
     """
 
@@ -102,6 +132,27 @@ class Estimator(abc.ABC):
 
     def default_params(self) -> dict[str, Any]:
         return {}
+
+    # ---- prepared-data plane (DESIGN.md §3.3) ---------------------------
+    def format_params(self, params: Mapping[str, Any]) -> dict[str, Any]:
+        """Converter kwargs this config needs (e.g. gbdt returns
+        ``{"max_bins": params["max_bin"]}``). Together with ``data_format``
+        and the data fingerprint this forms the prepared-data cache key, so
+        two configs returning equal kwargs SHARE one prepared dataset.
+
+        Contract for fusion: any hyperparameter that changes the result must
+        also be captured by :meth:`fuse_signature` — a fused batch converts
+        once, so all its members must agree on the format (``fuse_tasks``
+        additionally groups on the resolved kwargs as a guard).
+        """
+        return {}
+
+    def prepare(self, raw: DenseMatrix, params: Mapping[str, Any] | None = None):
+        """Uniform → native conversion for one config (UNCACHED — the
+        executors route this through the process-wide PreparedDataCache via
+        :func:`run_prepared`; call it directly only for one-off conversions)."""
+        return convert(raw, self.data_format,
+                       **self.format_params(dict(params or {})))
 
     # ---- task fusion (core/fusion.py, DESIGN.md §3.2) -------------------
     def fuse_signature(self, params: Mapping[str, Any]):
@@ -134,10 +185,14 @@ class Estimator(abc.ABC):
     def run(self, raw: DenseMatrix, params: Mapping[str, Any]) -> tuple[TrainedModel, float]:
         """Convert (uniform → native) then train; returns (model, seconds).
 
-        This is the paper's executor pipeline: the format gap is resolved here,
-        immediately prior to training, never in the Driver.
+        This is the paper's executor pipeline: the format gap is resolved
+        here, immediately prior to training, never in the Driver. ``seconds``
+        is TRAINING time only — conversion is accounted separately
+        (``TaskResult.convert_seconds``) by the cached executor path,
+        :func:`run_prepared`, which the pools use instead of this method
+        unless a subclass overrides it.
         """
-        converted = convert(raw, self.data_format)
+        converted = self.prepare(raw, params)
         t0 = time.perf_counter()
         model = self.train(converted, dict(params))
         return model, time.perf_counter() - t0
@@ -145,11 +200,135 @@ class Estimator(abc.ABC):
     def run_batched(self, raw: DenseMatrix, params_list, *, cache=None) -> tuple[list[TrainedModel], float]:
         """Fused-batch analogue of :meth:`run`: convert once, train the whole
         config stack as one program; returns (models, total_seconds). Callers
-        amortize ``total_seconds`` over the batch for per-task accounting."""
-        converted = convert(raw, self.data_format)
+        amortize ``total_seconds`` over the batch for per-task accounting.
+        The batch converts ONCE, so members must agree on ``format_params``
+        (``fuse_tasks`` guarantees this for executor batches; a direct call
+        with mixed formats raises rather than silently training some
+        members on another config's data layout)."""
+        _batch_format_params(self, params_list)
+        converted = self.prepare(raw, params_list[0] if params_list else None)
         t0 = time.perf_counter()
         models = self.train_batched(converted, [dict(p) for p in params_list], cache=cache)
         return models, time.perf_counter() - t0
+
+
+# --------------------------------------------------------------------------
+# Cached executor paths (the prepared-data plane, DESIGN.md §3.3).
+# --------------------------------------------------------------------------
+
+def _batch_format_params(est: Estimator, params_list) -> dict[str, Any]:
+    """The (validated-uniform) format params of a batch: every member must
+    resolve to the same converter kwargs, because the batch converts once."""
+    if not params_list:
+        return {}
+    fps = [est.format_params(dict(p)) for p in params_list]
+    for fp in fps[1:]:
+        if fp != fps[0]:
+            raise ValueError(
+                f"{est.name or type(est).__name__}: batched configs must be "
+                f"format-uniform (a batch converts once), got format_params "
+                f"{fps[0]!r} vs {fp!r}")
+    return fps[0]
+
+
+def format_law_key(est: Estimator, params: Mapping[str, Any]) -> str:
+    """Family key of the CostModel's per-format conversion law: the format
+    key, discriminated by estimator name when :meth:`Estimator.prepare` is
+    overridden — a custom prepare is its own recipe and must not pool its
+    timings with (or serve estimates to) other users of the same declared
+    format. Mirrors the discriminator of :func:`prepared_cache_key`."""
+    from repro.core.data_format import format_key
+
+    key = format_key(est.data_format, est.format_params(dict(params)))
+    if type(est).prepare is not Estimator.prepare:
+        key += f"@{est.name or type(est).__qualname__}"
+    return key
+
+
+def prepared_cache_key(est: Estimator, raw: DenseMatrix,
+                       params: Mapping[str, Any],
+                       placement: Hashable = None) -> tuple:
+    """The PreparedDataCache key this estimator's config resolves to.
+
+    Standard estimators key purely on (fingerprint, format_key, placement),
+    so implementations sharing a format (logreg/mlp on ``dense_rows``) share
+    entries. An estimator that OVERRIDES :meth:`Estimator.prepare` gets its
+    registry name appended as a discriminator — its prepared payload is its
+    own recipe, and must not collide with (or be served to) other users of
+    the same declared format.
+    """
+    key = prepare_key(raw, est.data_format,
+                      est.format_params(dict(params)), placement)
+    if type(est).prepare is not Estimator.prepare:
+        key += (est.name or type(est).__qualname__,)
+    return key
+
+
+def _prepare_for(est: Estimator, raw: DenseMatrix, params: Mapping[str, Any],
+                 cache, placement: Hashable) -> tuple[object, float]:
+    """Resolve ``est.prepare`` through the cache; returns
+    ``(prepared, convert_seconds)`` — builds go through :meth:`Estimator.
+    prepare` itself, so ``prepare`` overrides are honored on the executor
+    path (keyed per-estimator via :func:`prepared_cache_key`)."""
+    cache = cache if cache is not None else prepared_data_cache()
+    prepared, seconds, _ = cache.get(
+        prepared_cache_key(est, raw, params, placement),
+        lambda: est.prepare(raw, params))
+    return prepared, seconds
+
+
+def run_prepared(
+    est: Estimator,
+    raw: DenseMatrix,
+    params: Mapping[str, Any],
+    *,
+    cache=None,
+    placement: Hashable = None,
+) -> tuple[TrainedModel, float, float]:
+    """Cache-resolved ``run``: returns ``(model, train_seconds,
+    convert_seconds)``. Conversion goes through the process-wide
+    :class:`~repro.core.data_format.PreparedDataCache` (or ``cache``), keyed
+    by :func:`prepared_cache_key` — ``convert_seconds`` is non-zero only
+    when THIS call built the entry.
+
+    A subclass that overrides :meth:`Estimator.run` (pre-§3.3 third-party
+    code) takes its own path, uncached, with conversion unseparable from
+    training (reported as 0.0) — see DESIGN.md §3.3 migration notes.
+    """
+    if type(est).run is not Estimator.run:
+        model, secs = est.run(raw, params)
+        return model, secs, 0.0
+    prepared, convert_seconds = _prepare_for(est, raw, params, cache, placement)
+    t0 = time.perf_counter()
+    model = est.train(prepared, dict(params))
+    return model, time.perf_counter() - t0, convert_seconds
+
+
+def run_prepared_batched(
+    est: Estimator,
+    raw: DenseMatrix,
+    params_list: Sequence[Mapping[str, Any]],
+    *,
+    cache=None,
+    placement: Hashable = None,
+    compile_cache=None,
+) -> tuple[list[TrainedModel], float, float]:
+    """Cache-resolved ``run_batched``: returns ``(models, total_train_seconds,
+    convert_seconds)``. One conversion serves the whole batch — and, because
+    the cache key is identical, the SEQUENTIAL path of the same format: a
+    fused batch and a solo task of one (dataset, format, params) share one
+    prepared entry. Falls back to a subclass's own ``run_batched`` override
+    exactly like :func:`run_prepared` does for ``run``."""
+    if type(est).run_batched is not Estimator.run_batched:
+        models, secs = est.run_batched(raw, params_list, cache=compile_cache)
+        return models, secs, 0.0
+    _batch_format_params(est, params_list)   # mixed formats fail loud
+    first = dict(params_list[0]) if params_list else {}
+    prepared, convert_seconds = _prepare_for(est, raw, first, cache, placement)
+    t0 = time.perf_counter()
+    models = est.train_batched(prepared, [dict(p) for p in params_list],
+                               cache=compile_cache)
+    return models, time.perf_counter() - t0, convert_seconds
 
 
 _REGISTRY: dict[str, Callable[[], Estimator]] = {}

@@ -77,16 +77,23 @@ class SamplingProfiler:
         rate = min(rate, 1.0)
         sample = data.sample(rate, seed=self.seed)
         costs: dict[int, float] = {}
-        # Group by estimator so the uniform->native conversion is paid once
-        # per implementation, mirroring executor-side conversion.
-        by_est: dict[str, list[TrainTask]] = {}
-        for t in tasks:
-            by_est.setdefault(t.estimator, []).append(t)
-        for est_name, group in by_est.items():
-            est = get_estimator(est_name)
-            from repro.core.data_format import convert
+        # Group by (estimator, resolved format params) so the uniform->native
+        # conversion is paid once per PREPARED VARIANT, mirroring the
+        # executor-side prepared-data plane (§3.3) — e.g. gbdt tasks at
+        # max_bin=64 and 256 profile against their own quantization. Sample
+        # conversions stay out of the PreparedDataCache: the sample is a
+        # different fingerprint and caching throwaway profiling data would
+        # pollute the bytes gauge.
+        from repro.core.data_format import format_key
 
-            converted = convert(sample, est.data_format)
+        by_fmt: dict[tuple, list[TrainTask]] = {}
+        for t in tasks:
+            est = get_estimator(t.estimator)
+            fkey = format_key(est.data_format, est.format_params(dict(t.params)))
+            by_fmt.setdefault((t.estimator, fkey), []).append(t)
+        for (est_name, _fkey), group in by_fmt.items():
+            est = get_estimator(est_name)
+            converted = est.prepare(sample, group[0].params)
             for t in group:
                 s0 = time.perf_counter()
                 est.train(converted, dict(t.params))

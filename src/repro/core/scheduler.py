@@ -30,6 +30,7 @@ from repro.core.interface import TrainTask
 
 __all__ = [
     "Assignment",
+    "charge_first_of_group",
     "schedule",
     "schedule_lpt",
     "schedule_random",
@@ -71,6 +72,49 @@ def _costs(tasks: Sequence[TrainTask]) -> list[float]:
     known = [t.cost for t in tasks if t.cost is not None]
     default = (sum(known) / len(known)) if known else 1.0
     return [t.cost if t.cost is not None else default for t in tasks]
+
+
+def charge_first_of_group(units: Sequence, group_key, extra_cost,
+                          apply=None) -> list:
+    """Conversion-aware costing (DESIGN.md §3.3): add a ONE-TIME per-group
+    cost to the unit of each group that will execute first.
+
+    ``group_key(unit) -> Hashable | None`` assigns units to groups (None =
+    no charge; the Session keys on the prepared-data cache key and returns
+    None for formats already resident, so only COLD formats are charged);
+    ``extra_cost(key) -> float | None`` is the one-time cost (None = unknown,
+    group left uncharged). Within a group the charge lands on the MAX-cost
+    unit (ties: lowest task_id) — LPT places highest-cost first, so that is
+    the unit that pays the conversion while the rest arrive warm.
+    ``apply(unit, extra) -> unit`` performs the re-cost (default:
+    ``with_cost(cost + extra)``; the Session passes a FusedBatch-aware
+    variant that charges a MEMBER, so the charge survives bucket splits).
+    Order is preserved.
+
+    Before this, LPT and ``split_for_balance`` mis-ranked cold formats: a
+    format's first task runs conversion + training but was costed as
+    training only, so plans under-estimated exactly one task per format
+    group and ``plan_makespan_estimate`` (which sums unit costs) was blind
+    to conversion.
+    """
+    if apply is None:
+        def apply(u, extra):
+            return u.with_cost((u.cost or 0.0) + extra)
+    best: dict = {}                       # key -> (cost, -task_id, index)
+    for i, u in enumerate(units):
+        key = group_key(u)
+        if key is None:
+            continue
+        rank = (u.cost or 0.0, -getattr(u, "task_id", i))
+        if key not in best or rank > best[key][:2]:
+            best[key] = (*rank, i)
+    charged = {}
+    for key, (_, _, i) in best.items():
+        extra = extra_cost(key)
+        if extra is not None and extra > 0:
+            charged[i] = extra
+    return [apply(u, charged[i]) if i in charged else u
+            for i, u in enumerate(units)]
 
 
 def schedule_lpt(tasks: Sequence[TrainTask], n_executors: int) -> Assignment:
@@ -211,6 +255,11 @@ def plan_makespan_estimate(assignment: Assignment) -> float:
     plans are evaluated by list-scheduling their queue longest-first — their
     ``estimated_loads`` pile everything on queue 0 and would be meaningless
     as a makespan.
+
+    Conversion cost is included exactly when the units were costed through
+    :func:`charge_first_of_group` (the Session does this for cold format
+    groups before planning and before each replan) — the estimate always
+    reads the units' own costs, so one-time conversion charges flow into it.
     """
     tasks = assignment.all_tasks()
     if not tasks:

@@ -29,6 +29,12 @@ observe loop with a REAL lifecycle instead of a single blocking call:
   device program per batch; the scheduler plans over fused units (splitting
   bottleneck batches at bucket boundaries) and the pools unbatch results,
   so this streaming loop is untouched (DESIGN.md §3.2);
+* the prepared-data plane (DESIGN.md §3.3): executors resolve uniform→native
+  conversion through the process-wide PreparedDataCache, the CostModel
+  learns a per-format conversion law from ``TaskResult.convert_seconds``,
+  cold format groups have that one-time cost charged to their first unit
+  before planning, and ``SearchStats.prepared_cache_hits/misses`` /
+  ``convert_seconds_total`` surface the traffic;
 * ``Session.run(spec, train, validate)`` is the one-shot convenience that
   the deprecated ``ModelSearcher`` shim (searcher.py) delegates to.
 """
@@ -39,13 +45,18 @@ from typing import Callable, Iterator, Mapping
 
 from repro.core.backend import ExecutorBackend
 from repro.core.cost_model import CostModel, observed_drift
-from repro.core.data_format import DenseMatrix
+from repro.core.data_format import DenseMatrix, prepared_data_cache
 from repro.core.executor import LocalExecutorPool
 from repro.core.fault import SearchWAL
 from repro.core.fusion import FusedBatch, compile_cache, fuse_tasks, split_for_balance
-from repro.core.interface import TaskResult
+from repro.core.interface import (
+    TaskResult,
+    format_law_key,
+    get_estimator,
+    prepared_cache_key,
+)
 from repro.core.results import METRICS, MultiModel
-from repro.core.scheduler import replan, restrict, schedule
+from repro.core.scheduler import charge_first_of_group, replan, restrict, schedule
 from repro.core.spec import SearchSpec
 
 __all__ = ["Session", "SearchStats"]
@@ -78,6 +89,13 @@ class SearchStats:
         self.n_fused_tasks = 0          # tasks that rode inside those units
         self.compile_cache_hits = 0     # this session's share of the
         self.compile_cache_misses = 0   # process-wide CompileCache traffic
+        # -- prepared-data plane (DESIGN.md §3.3) ------------------------
+        self.prepared_cache_hits = 0    # this session's share of the process-
+        self.prepared_cache_misses = 0  # wide PreparedDataCache traffic
+        #: conversion seconds actually paid (sum of TaskResult.convert_seconds
+        #: over this session's results) — on a warm cache this is ~0 while
+        #: the same search used to re-convert every task
+        self.convert_seconds_total = 0.0
 
     @property
     def profiling_ratio(self) -> float:  # paper Fig. 3
@@ -87,6 +105,11 @@ class SearchStats:
     def compile_cache_hit_rate(self) -> float:
         total = self.compile_cache_hits + self.compile_cache_misses
         return self.compile_cache_hits / total if total else 0.0
+
+    @property
+    def prepared_cache_hit_rate(self) -> float:
+        total = self.prepared_cache_hits + self.prepared_cache_misses
+        return self.prepared_cache_hits / total if total else 0.0
 
 
 class Session:
@@ -225,6 +248,57 @@ class Session:
                        if rs and t.cost else t)
         return out
 
+    @staticmethod
+    def _apply_charge(u, extra: float):
+        """Charge hook for charge_first_of_group: a FusedBatch is charged on
+        a MEMBER (fusion.charge_member) so bucket splits / restricts — which
+        re-sum member costs — keep the conversion in the plan."""
+        if isinstance(u, FusedBatch):
+            return u.charge_member(extra)
+        return u.with_cost((u.cost or 0.0) + extra)
+
+    def _charge_conversion(self, units, cm: CostModel | None,
+                           train: DenseMatrix):
+        """Conversion-aware costing (DESIGN.md §3.3): for every format group
+        whose prepared-data entry is NOT resident under every placement the
+        backend converts at (thread pools: the default device; mesh pools:
+        one token per slice), add the CostModel's learned conversion
+        estimate to the one unit that will run first
+        (scheduler.charge_first_of_group — ONE charge even when several
+        slices must each build, since the builds run in parallel on
+        different executors). Warm formats, unknown (never-observed)
+        conversions, and backends that own their data handling (custom mesh
+        task_runner: no placements) are left uncharged."""
+        if cm is None:
+            return list(units)
+        backend = self.backend
+        pc = getattr(backend, "prepared_cache", None) or prepared_data_cache()
+        placements_fn = getattr(backend, "prepare_placements", None)
+        placements = placements_fn() if placements_fn is not None else [None]
+        if not placements:
+            return list(units)
+
+        def cache_key(u):
+            first = u.tasks[0] if isinstance(u, FusedBatch) else u
+            try:
+                est = get_estimator(first.estimator)
+            except KeyError:
+                return None              # foreign tasks (LM runner workloads)
+            keys = [prepared_cache_key(est, train, first.params, p)
+                    for p in placements]
+            if all(pc.contains(k) for k in keys):
+                return None              # resident everywhere it will run
+            # group identity = the conversion law's family key (format key +
+            # prepare-override discriminator; the fingerprint is constant
+            # within a round) — two custom-prepare estimators sharing a
+            # declared format stay separate groups, each charged
+            return format_law_key(est, first.params)
+
+        return charge_first_of_group(
+            units, cache_key,
+            lambda key: cm.predict_convert(key, train.n_rows),
+            apply=self._apply_charge)
+
     def _fuse(self, costed, cm: CostModel | None, n_rows: int):
         """Pack a costed batch into fused units (spec.fuse) and account them."""
         units = fuse_tasks(costed, max_fuse=self.spec.max_fuse,
@@ -289,6 +363,8 @@ class Session:
         metric_fn = METRICS[spec.metric]
         cc = compile_cache()
         cc_hits0, cc_misses0 = cc.counters()
+        pc = getattr(backend, "prepared_cache", None) or prepared_data_cache()
+        pc_hits0, pc_misses0 = pc.counters()
         try:
             while True:
                 batch = tuner.propose()
@@ -307,9 +383,12 @@ class Session:
                     costed = self._cost_batch(batch, train, profiler, cm)
                 # 2. schedule (greedy job-shop / baselines) — with fusion on,
                 # the plan is over fused units; bottleneck batches split at
-                # bucket boundaries (fusion.split_for_balance)
+                # bucket boundaries (fusion.split_for_balance). Cold format
+                # groups get their one-time conversion charged to their
+                # first unit (§3.3), so LPT stops mis-ranking them.
                 units = (self._fuse(costed, cm, train.n_rows)
                          if spec.fuse else costed)
+                units = self._charge_conversion(units, cm, train)
                 assignment = schedule(
                     units, spec.n_executors, policy=spec.policy, seed=spec.seed,
                     splitter=split_for_balance if spec.fuse else None)
@@ -336,6 +415,8 @@ class Session:
                     round_results.append(res)
                     self._results.append(res)
                     done_ids.add(res.task.task_id)
+                    self.stats.convert_seconds_total += getattr(
+                        res, "convert_seconds", 0.0)
                     if cm is not None and not pool_observes:
                         cm.observe_result(res, train.n_rows)
                     if on_result is not None:
@@ -359,7 +440,13 @@ class Session:
                             if self.stop_reason:
                                 break
                             if res.ok and res.task.cost and res.train_seconds > 0:
-                                window.append((res.task.cost, res.train_seconds))
+                                # observed side includes the conversion the
+                                # task actually paid: a cold format whose
+                                # conversion dominates now REGISTERS as
+                                # drift instead of silently vanishing
+                                window.append((res.task.cost,
+                                               res.train_seconds
+                                               + res.convert_seconds))
                             if (spec.replan_threshold is not None
                                     and replans_left > 0
                                     and len(window) >= _MIN_REPLAN_WINDOW
@@ -390,11 +477,14 @@ class Session:
                     if spec.fuse:
                         pending_units = self._pending_units(
                             assignment, pending, cm, train.n_rows)
+                        pending_units = self._charge_conversion(
+                            pending_units, cm, train)
                         assignment = replan(
                             pending_units, spec.n_executors,
                             current=restrict(assignment, pending_units),
                             policy=spec.policy, splitter=split_for_balance)
                     else:
+                        pending = self._charge_conversion(pending, cm, train)
                         assignment = replan(pending, spec.n_executors,
                                             current=restrict(assignment, pending),
                                             policy=spec.policy)
@@ -424,6 +514,9 @@ class Session:
             hits, misses = cc.counters()   # this session's cache traffic
             self.stats.compile_cache_hits = hits - cc_hits0
             self.stats.compile_cache_misses = misses - cc_misses0
+            pc_hits, pc_misses = pc.counters()
+            self.stats.prepared_cache_hits = pc_hits - pc_hits0
+            self.stats.prepared_cache_misses = pc_misses - pc_misses0
             self.finished = True
 
     def _budget_hit(self, t_start: float) -> str | None:

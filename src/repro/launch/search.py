@@ -123,16 +123,19 @@ def run_tabular(args) -> int:
                     f"model_estimates={session.stats.n_model_estimates} "
                     f"profiled={session.stats.n_profiled} "
                     f"cost_model={session.cost_model.path or '<memory>'}")
+    st = session.stats
     fused = ""
     if spec.fuse:
-        st = session.stats
         fused = (f" fused_batches={st.n_fused_batches}"
                  f" fused_tasks={st.n_fused_tasks}"
                  f" compile_cache={st.compile_cache_hits}h/"
                  f"{st.compile_cache_misses}m")
+    prepared = (f" prepared_cache={st.prepared_cache_hits}h/"
+                f"{st.prepared_cache_misses}m"
+                f" convert={st.convert_seconds_total:.2f}s")
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
-          f"profiling_ratio={session.stats.profiling_ratio:.1%} "
-          f"failures={session.stats.n_failures}{stopped}{feedback}{fused}")
+          f"profiling_ratio={st.profiling_ratio:.1%} "
+          f"failures={st.n_failures}{stopped}{feedback}{fused}{prepared}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
           f"test {args.metric}={test_score:.4f}")
     return 0

@@ -195,9 +195,21 @@ class GBDTEstimator(Estimator):
             "lambda": 1.0, "gamma": 0.0, "min_child_weight": 1.0,
         }
 
+    def format_params(self, params: Mapping[str, Any]) -> dict[str, Any]:
+        """``max_bin`` is a CONVERTER parameter (§3.3): quantization happens
+        at the config's own granularity, so each (dataset, max_bin) pair is
+        one prepared-data cache entry shared by every config using it —
+        instead of the old fixed-256 conversion re-run per task and
+        re-coarsened in-graph. ``_coarsen`` still handles data prepared at
+        any finer granularity (factor > 1), e.g. the uniform 256-bin default
+        used when callers convert without format params."""
+        p = {**self.default_params(), **params}
+        return {"max_bins": int(p["max_bin"])}
+
     @staticmethod
     def _coarsen(n_bins: int, max_bin: int) -> tuple[int, int]:
-        # Coarsen the uniform 256-bin quantisation to max_bin levels:
+        # Coarsen an n_bins-level quantisation to max_bin levels (identity
+        # when the data was prepared at max_bin already, the §3.3 default):
         # coarse bin = fine bin // factor; coarse edge s = fine edge
         # (s+1)·factor − 1 (same "x > edge ⇔ bin > s" identity).
         factor = max(1, -(-n_bins // max_bin))
@@ -240,7 +252,11 @@ class GBDTEstimator(Estimator):
 
     # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
     def fuse_signature(self, params: Mapping[str, Any]):
-        return ("gbdt",)        # any GBDT config can pad into any batch
+        # max_bin is in the signature because it is a FORMAT parameter
+        # (format_params): a fused batch converts once, so members must
+        # share a prepared-data variant; rounds/depth still pad and mask.
+        p = {**self.default_params(), **params}
+        return ("gbdt", int(p["max_bin"]))
 
     def fuse_bucket(self, params: Mapping[str, Any]) -> tuple:
         from repro.core.fusion import pad_pow2
@@ -248,8 +264,9 @@ class GBDTEstimator(Estimator):
         # pad_pow2 (round UP), matching train_batched's padding: every
         # member of a bucket pads to the same shape, so same-bucket chunks
         # share one compile signature and bucket-boundary splits are safe
+        # (max_bin lives in fuse_signature now, so it is constant per group)
         p = {**self.default_params(), **params}
-        return (pad_pow2(int(p["round"])), int(p["max_depth"]), int(p["max_bin"]))
+        return (pad_pow2(int(p["round"])), int(p["max_depth"]))
 
     def train_batched(self, data, configs, *, cache=None) -> list[GBDTModel]:
         from repro.core import fusion

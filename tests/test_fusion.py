@@ -314,8 +314,11 @@ def test_fuse_bucket_matches_padding():
     assert est.fuse_bucket({"steps": 150}) == (256,)    # not nearest (128)
     assert est.fuse_bucket({"steps": 129}) == est.fuse_bucket({"steps": 256})
     gb = get_estimator("gbdt")
+    # max_bin is a FORMAT parameter (§3.3): it moved from the bucket into
+    # fuse_signature, so batches never mix prepared-data variants
     assert gb.fuse_bucket({"round": 33, "max_depth": 4, "max_bin": 32}) == \
-        (64, 4, 32)
+        (64, 4)
+    assert gb.fuse_signature({"max_bin": 32}) != gb.fuse_signature({"max_bin": 64})
 
 
 def test_fused_batch_recost_keeps_buckets():

@@ -40,8 +40,10 @@ class RecordingRunner:
 def test_requires_mesh_or_slices():
     with pytest.raises(ValueError):
         MeshSliceExecutorPool(task_runner=RecordingRunner())
-    with pytest.raises(ValueError):
-        MeshSliceExecutorPool(slices=["s0"])
+    # task_runner is OPTIONAL since §3.3: slices alone build the
+    # estimator-backed default pool (per-slice prepared-data placement)
+    pool = MeshSliceExecutorPool(slices=["s0"])
+    assert pool.task_runner is None and pool.n_executors == 1
 
 
 def test_wal_resume_skips_done_tasks(tmp_path):
