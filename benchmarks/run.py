@@ -25,11 +25,16 @@ import traceback
 
 from benchmarks import (
     cost_model_bench,
+    eval_bench,
     fusion_bench,
     lm_bench,
     paper_figs,
     prepared_data_bench,
 )
+
+#: bump when row names/semantics change incompatibly, so BENCH_<sha>.json
+#: artifacts from different PRs are only ever compared within one schema
+SCHEMA_VERSION = 1
 
 BENCHES = {
     "fig3": paper_figs.fig3_profiling_ratio,
@@ -41,6 +46,7 @@ BENCHES = {
     "cost_model": cost_model_bench.mis_estimate_recovery,
     "fusion": fusion_bench.full,
     "prepared_data": prepared_data_bench.full,
+    "eval_plane": eval_bench.full,
     "histogram_sweep": fusion_bench.histogram_tile_sweep,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
@@ -52,6 +58,7 @@ SMOKE_BENCHES = {
     "cost_model": cost_model_bench.smoke,
     "fusion": fusion_bench.smoke,
     "prepared_data": prepared_data_bench.smoke,
+    "eval_plane": eval_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
 }
 
@@ -118,7 +125,8 @@ def main() -> int:
             f.write("\n".join(lines) + "\n")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"smoke": args.smoke, "benches": names, "rows": results},
+            json.dump({"schema_version": SCHEMA_VERSION, "smoke": args.smoke,
+                       "benches": names, "rows": results},
                       f, indent=1, sort_keys=True)
             f.write("\n")
     if failed:
@@ -126,7 +134,14 @@ def main() -> int:
         return 1
     if args.baseline:
         with open(args.baseline) as f:
-            baseline_rows = json.load(f)["rows"]
+            baseline = json.load(f)
+        base_schema = baseline.get("schema_version", SCHEMA_VERSION)
+        if base_schema != SCHEMA_VERSION:
+            print(f"BASELINE SCHEMA MISMATCH: baseline v{base_schema} vs "
+                  f"this run v{SCHEMA_VERSION} — regenerate with "
+                  "scripts/bench_baseline.py", file=sys.stderr)
+            return 1
+        baseline_rows = baseline["rows"]
         problems = compare_to_baseline(results, baseline_rows,
                                        args.regress_tolerance,
                                        full_run=args.only is None)

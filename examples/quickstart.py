@@ -42,10 +42,16 @@ validate_df, _, _ = validate_df.standardize(mu, sd)
 
 session = Session(spec)
 done = 0
-for result in session.results(train_df):      # streams as tasks complete
+# passing the validation split turns on the fused validation plane
+# (DESIGN.md §3.4): each executor scores the models it trained — jitted
+# batched inference against a cached device-resident eval split — so every
+# streamed result already carries its auc as result.score
+for result in session.results(train_df, validate_df):
     done += 1
     if done % 10 == 0:
-        print(f"  ... {done}/{spec.n_grid_tasks} tasks done")
+        print(f"  ... {done}/{spec.n_grid_tasks} tasks done "
+              f"(latest {result.task.estimator} auc="
+              f"{-1.0 if result.score is None else result.score:.4f})")
 multi_model = session.multi_model()
 scores = multi_model.validate_all(validate_df, metric="auc")
 
@@ -59,6 +65,11 @@ print(f"prepared-data cache: {st.prepared_cache_misses} conversions, "
       f"{st.prepared_cache_hits} reuses, "
       f"{st.convert_seconds_total:.2f}s converting "
       f"({st.prepared_cache_hit_rate:.0%} hit rate)")
+# Fused validation plane (§3.4): scoring happened executor-side, where each
+# model trained — the driver never re-predicted to rank the stream.
+print(f"validation plane: {st.eval_seconds_total:.2f}s scoring executor-side, "
+      f"predict compile cache {st.predict_compile_cache_misses} builds / "
+      f"{st.predict_compile_cache_hits} reuses")
 for m in scores[:5]:
     print(f"  auc={m.score:.4f}  {m.task.key()}")
 print(f"best: {scores[0].task.key()}")

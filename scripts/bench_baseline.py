@@ -46,7 +46,10 @@ def main() -> int:
     p.add_argument("--check", action="store_true",
                    help="exit 1 if the committed baseline differs; write nothing")
     args = p.parse_args()
-    payload = {"smoke": True, "rows": smoke_rows()}
+    from benchmarks.run import SCHEMA_VERSION
+
+    payload = {"schema_version": SCHEMA_VERSION, "smoke": True,
+               "rows": smoke_rows()}
     if args.check:
         try:
             with open(BASELINE) as f:

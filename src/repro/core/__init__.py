@@ -15,6 +15,12 @@ from repro.core.data_format import (
     register_converter,
     unregister_converter,
 )
+from repro.core.evaluation import (
+    EvalPlan,
+    evaluate_models,
+    predict_compile_cache,
+    stable_sigmoid,
+)
 from repro.core.executor import LocalExecutorPool, MeshSliceExecutorPool
 from repro.core.fusion import (
     CompileCache,
@@ -41,6 +47,7 @@ from repro.core.results import METRICS, ModelScore, MultiModel, accuracy, auc, l
 from repro.core.scheduler import (
     Assignment,
     charge_first_of_group,
+    charge_units,
     lpt_lower_bound,
     plan_makespan_estimate,
     rebalance,

@@ -27,6 +27,13 @@ Contract (both shipped implementations obey it; new backends must too):
 * closing the iterator early (``generator.close()`` / breaking out of a
   ``for`` loop) is a clean cancellation: the backend stops dispatching new
   tasks and releases its workers.
+
+Optional capability — executor-side scoring (DESIGN.md §3.4): a backend MAY
+accept ``submit(assignment, data, validate=EvalPlan(...))`` and score each
+model where it trained, attaching ``TaskResult.score``/``eval_seconds``.
+The Session detects the keyword by signature; backends without it keep the
+driver-side scoring fallback, so the two-argument protocol above stays the
+minimum contract.
 """
 from __future__ import annotations
 

@@ -150,6 +150,17 @@ class CostModel:
         #: charge the FIRST task of a cold format group with conversion
         #: included and the rest without
         self._converts: dict[str, _LogStats] = {}
+        #: per-family eval law (DESIGN.md §3.4): seconds ≈ a·eval_rows^b of
+        #: executor-side scoring — a third population (never mixed with
+        #: training or conversion), sized on the EVAL split's rows.
+        #: Bucket-resolved like the training law (scoring a 90-round
+        #: depth-6 tree stack costs ~4× a 30-round depth-4 one; a "128_128"
+        #: MLP forward ~4× a "64_64"), pooled per family as the fallback.
+        #: Fed with the amortized per-member share for fused batches, which
+        #: is exactly what `charge_units` wants back when it adds eval to
+        #: every planned unit.
+        self._eval_buckets: dict[str, dict[str, _LogStats]] = {}
+        self._evals: dict[str, _LogStats] = {}                # pooled
         self._n_observed = 0
 
     @staticmethod
@@ -212,20 +223,69 @@ class CostModel:
             return math.exp(stats.predict(math.log(n_rows),
                                           self.default_exponent))
 
-    def observe_result(self, result, n_rows: int) -> None:
+    def observe_eval(self, task: "TrainTask | str", seconds: float,
+                     n_rows: int) -> None:
+        """Record one executor-side scoring (§3.4; ``n_rows`` = EVAL split
+        rows — a different axis than the training laws'). Pass the
+        TrainTask for bucket resolution; a bare family string feeds only
+        the pooled law."""
+        if seconds <= 0 or n_rows <= 0:
+            return
+        if isinstance(task, str):
+            family, bucket = task, None
+        else:
+            family, bucket = task.estimator, param_bucket(task.params)
+        x, y = math.log(n_rows), math.log(seconds)
+        with self._lock:
+            if bucket is not None:
+                self._eval_buckets.setdefault(family, {}).setdefault(
+                    bucket, _LogStats()).add(x, y)
+            self._evals.setdefault(family, _LogStats()).add(x, y)
+
+    def predict_eval(self, task: "TrainTask | str", n_rows: int) -> float | None:
+        """Per-task eval-seconds estimate at an eval-split size, or None
+        before the family has ever been observed scoring. Resolution
+        mirrors the training law: exact (family, bucket) stats when a
+        TrainTask is given, else the pooled family law."""
+        if n_rows <= 0:
+            return None
+        if isinstance(task, str):
+            family, bucket = task, None
+        else:
+            family, bucket = task.estimator, param_bucket(task.params)
+        x = math.log(n_rows)
+        with self._lock:
+            if bucket is not None:
+                stats = self._eval_buckets.get(family, {}).get(bucket)
+                if stats is not None and stats.n:
+                    return math.exp(stats.predict(x, self.default_exponent))
+            stats = self._evals.get(family)
+            if stats is None or not stats.n:
+                return None
+            return math.exp(stats.predict(x, self.default_exponent))
+
+    def observe_result(self, result, n_rows: int, eval_rows: int = 0) -> None:
         """``on_result``-shaped adapter: feed a TaskResult straight in. Fused
         results carry ``batch_size > 1`` and amortized seconds, and land in
         the batched law automatically. A result that BUILT a prepared-data
         entry carries the FULL build as ``convert_seconds`` (the pools
         attach it to exactly one result per build) and feeds the per-format
-        conversion law once — train and convert populations never mix."""
+        conversion law once — train and convert populations never mix. A
+        result scored executor-side carries ``eval_seconds`` and (given
+        ``eval_rows``, the validation split's size) feeds the per-family
+        eval law; the obs/est ratio compares the task's planned cost against
+        train + convert + eval, since eval-charged units plan with eval
+        included."""
         if not result.ok:
             return
         batch_size = getattr(result, "batch_size", 1)
         conv = getattr(result, "convert_seconds", 0.0)
+        eval_s = getattr(result, "eval_seconds", 0.0)
         self.observe(result.task, result.train_seconds, n_rows,
                      batched=batch_size > 1,
-                     ratio_seconds=result.train_seconds + conv)
+                     ratio_seconds=result.train_seconds + conv + eval_s)
+        if eval_s > 0 and eval_rows > 0:
+            self.observe_eval(result.task, eval_s, eval_rows)
         if conv > 0:
             from repro.core.interface import format_law_key, get_estimator
 
@@ -356,6 +416,17 @@ class CostModel:
                     fmt_key: dataclasses.asdict(stats)
                     for fmt_key, stats in self._converts.items()
                 },
+                "evals": {
+                    family: {
+                        "pooled": dataclasses.asdict(stats),
+                        "buckets": {
+                            bucket: dataclasses.asdict(bstats)
+                            for bucket, bstats in
+                            self._eval_buckets.get(family, {}).items()
+                        },
+                    }
+                    for family, stats in self._evals.items()
+                },
             }
 
     def save(self, path: str | None = None) -> str:
@@ -386,12 +457,18 @@ class CostModel:
                 bucket: _LogStats(**stats)
                 for bucket, stats in entry.get("buckets", {}).items()
             }
-        # optional section: files written before the §3.3 conversion law
-        # simply have no "converts" and load with a cold one
+        # optional sections: files written before the §3.3 conversion law /
+        # §3.4 eval law simply lack the key and load with a cold one
         cm._converts = {
             fmt_key: _LogStats(**stats)
             for fmt_key, stats in d.get("converts", {}).items()
         }
+        for family, entry in d.get("evals", {}).items():
+            cm._evals[family] = _LogStats(**entry["pooled"])
+            cm._eval_buckets[family] = {
+                bucket: _LogStats(**stats)
+                for bucket, stats in entry.get("buckets", {}).items()
+            }
         cm._n_observed = int(d.get("n_observed", 0))
         return cm
 

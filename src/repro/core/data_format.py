@@ -375,6 +375,18 @@ def _quantized_bins(data: DenseMatrix, max_bins: int = 256):
     }
 
 
+@register_converter("eval_dense")
+def _eval_dense(data: DenseMatrix):
+    """Device-resident features for the executor-side validation plane
+    (DESIGN.md §3.4) — every shipped family's jitted predictor routes raw
+    rows. Labels deliberately stay OUT of the entry: the metric is a cheap
+    numpy reduction against host-side ``y``, so device-putting labels per
+    placement would only inflate ``bytes_cached``. A separate format (not
+    ``dense_rows``) so eval residency is visible in the cache accounting
+    and an eval split never masquerades as training data."""
+    return {"x": jnp.asarray(data.x)}
+
+
 @register_converter("sparse_csr")
 def _sparse_csr(data: DenseMatrix):
     """Compressed Sparse Row format for sparse-leaning implementations.

@@ -23,6 +23,12 @@ never in the Driver (paper §III-B) — and is resolved through the process-wide
 (dataset fingerprint, format, converter params, placement) converts once per
 process; every result reports the conversion seconds it actually paid as
 ``TaskResult.convert_seconds`` (0.0 on a cache hit).
+
+Validation happens here too (DESIGN.md §3.4): ``submit(assignment, data,
+validate=EvalPlan(...))`` makes each executor score the models it trained —
+jitted batched inference against eval data resolved through the same
+prepared-data cache — so results stream back already ranked-able
+(``TaskResult.score``/``eval_seconds``) and the driver never re-predicts.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import time
 from typing import Callable, Iterator, Sequence
 
 from repro.core.data_format import DenseMatrix, PreparedDataCache, prepared_data_cache
+from repro.core.evaluation import EvalPlan, evaluate_models
 from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
 from repro.core.fusion import FusedBatch, charge_carrier
 from repro.core.interface import (
@@ -51,16 +58,20 @@ _DYNAMIC_POLICIES = ("dynamic", "lpt_dynamic")
 
 def _run_fused_unit(unit: FusedBatch, data, eid: int,
                     cache: PreparedDataCache | None = None,
-                    placement=None) -> list[TaskResult]:
+                    placement=None,
+                    validate: EvalPlan | None = None) -> list[TaskResult]:
     """Train a fused batch as ONE device program and unbatch into per-member
     results. Amortized accounting: each member's ``train_seconds`` is the
     batch total divided by the members actually run, and ``batch_size``
     marks the result as fused for the CostModel's batched law. When the
     batch BUILT the prepared-data entry, the full ``convert_seconds`` goes
     to the charge-carrier member (fusion.charge_carrier: max cost, lowest
-    id) — one build, one observation, on the member the planner charged. A
-    whole-batch exception becomes a per-member error result (task-level
-    failure semantics — the executor survives)."""
+    id) — one build, one observation, on the member the planner charged.
+    With ``validate`` set, the whole model stack is scored HERE (§3.4) as
+    one vmapped predict program — members stream back with ``score`` and
+    the amortized ``eval_seconds`` attached. A whole-batch exception
+    becomes a per-member error result (task-level failure semantics — the
+    executor survives)."""
     members = list(unit.tasks)
     est = get_estimator(unit.estimator)
     try:
@@ -69,10 +80,17 @@ def _run_fused_unit(unit: FusedBatch, data, eid: int,
             cache=cache, placement=placement)
         per = total / len(members)
         carrier = charge_carrier(members) if conv > 0 else -1
+        scores: list = [None] * len(members)
+        eval_per = 0.0
+        if validate is not None:
+            scores, eval_per = evaluate_models(
+                est, models, validate, prepared_cache=cache,
+                placement=placement)
         return [
             TaskResult(task=m, model=mod, train_seconds=per, executor_id=eid,
                        batch_size=len(members),
-                       convert_seconds=conv if j == carrier else 0.0)
+                       convert_seconds=conv if j == carrier else 0.0,
+                       score=scores[j], eval_seconds=eval_per)
             for j, (m, mod) in enumerate(zip(members, models))
         ]
     except ExecutorFailure:
@@ -83,6 +101,22 @@ def _run_fused_unit(unit: FusedBatch, data, eid: int,
                        error=repr(e), batch_size=len(members))
             for m in members
         ]
+
+
+def _score_solo(est, model, validate: EvalPlan | None,
+                cache: PreparedDataCache | None,
+                placement=None) -> tuple[float | None, float]:
+    """Executor-side scoring of one task's model (§3.4); returns
+    ``(score, eval_seconds)`` — ``(None, 0.0)`` when scoring is off. The
+    shared solo half of what ``_run_fused_unit`` does for a whole batch;
+    every solo path (workers, driver-inline leftovers, mesh slices) goes
+    through here so the semantics cannot diverge."""
+    if validate is None:
+        return None, 0.0
+    scores, eval_s = evaluate_models(est, [model], validate,
+                                     prepared_cache=cache,
+                                     placement=placement)
+    return scores[0], eval_s
 
 
 class LocalExecutorPool:
@@ -132,8 +166,14 @@ class LocalExecutorPool:
         return [None]
 
     # ------------------------------------------------------------------
-    def submit(self, assignment: Assignment, data: DenseMatrix) -> Iterator[TaskResult]:
+    def submit(self, assignment: Assignment, data: DenseMatrix,
+               validate: EvalPlan | None = None) -> Iterator[TaskResult]:
         """Execute a static or dynamic plan, yielding results as they land.
+
+        ``validate`` (an :class:`~repro.core.evaluation.EvalPlan`) turns on
+        executor-side scoring (§3.4): each model is evaluated by the worker
+        that trained it — eval data resolved once through the prepared-data
+        cache — and results carry ``score``/``eval_seconds``.
 
         Closing the iterator early cancels cleanly: workers stop pulling new
         tasks after their current one and the pool joins them.
@@ -164,7 +204,9 @@ class LocalExecutorPool:
                     self.wal.record(
                         WALRecord(task_id=res.task.task_id, key=res.task.key(),
                                   seconds=res.train_seconds, executor_id=eid,
-                                  convert_seconds=res.convert_seconds))
+                                  score=res.score,
+                                  convert_seconds=res.convert_seconds,
+                                  eval_seconds=res.eval_seconds))
             return True
 
         def execute_fused(eid: int, unit: FusedBatch) -> None:
@@ -182,7 +224,8 @@ class LocalExecutorPool:
                 if self.failure_hook is not None:
                     self.failure_hook(eid, unit)  # may raise ExecutorFailure
                 batch_results = _run_fused_unit(sub, data, eid,
-                                                cache=self.prepared_cache)
+                                                cache=self.prepared_cache,
+                                                validate=validate)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(unit.task_id, None)
@@ -210,8 +253,11 @@ class LocalExecutorPool:
                 est = get_estimator(task.estimator)
                 model, secs, conv = run_prepared(est, data, task.params,
                                                  cache=self.prepared_cache)
+                score, eval_s = _score_solo(est, model, validate,
+                                            self.prepared_cache)
                 res = TaskResult(task=task, model=model, train_seconds=secs,
-                                 executor_id=eid, convert_seconds=conv)
+                                 executor_id=eid, convert_seconds=conv,
+                                 score=score, eval_seconds=eval_s)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(task.task_id, None)
@@ -336,7 +382,8 @@ class LocalExecutorPool:
                     if not pend:
                         continue
                     for res in _run_fused_unit(task.restrict(pend), data, -1,
-                                               cache=self.prepared_cache):
+                                               cache=self.prepared_cache,
+                                               validate=validate):
                         if accept(res, -1):
                             self._emit(res)
                             yield res
@@ -346,11 +393,15 @@ class LocalExecutorPool:
                     try:
                         model, secs, conv = run_prepared(
                             est, data, task.params, cache=self.prepared_cache)
+                        score, eval_s = _score_solo(est, model, validate,
+                                                    self.prepared_cache)
                         res = TaskResult(task=task, model=model, train_seconds=secs,
-                                         executor_id=-1, convert_seconds=conv)
+                                         executor_id=-1, convert_seconds=conv,
+                                         score=score, eval_seconds=eval_s)
                         self.wal.record(WALRecord(task_id=task.task_id, key=task.key(),
                                                   seconds=secs, executor_id=-1,
-                                                  convert_seconds=conv))
+                                                  score=score, convert_seconds=conv,
+                                                  eval_seconds=eval_s))
                     except Exception as e:
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
                     results[task.task_id] = res
@@ -376,9 +427,10 @@ class LocalExecutorPool:
         got, self._stragglers = self._stragglers, []
         return got
 
-    def run(self, assignment: Assignment, data: DenseMatrix) -> list[TaskResult]:
+    def run(self, assignment: Assignment, data: DenseMatrix,
+            validate: EvalPlan | None = None) -> list[TaskResult]:
         """Blocking convenience: drain :meth:`submit` into a list."""
-        return list(self.submit(assignment, data))
+        return list(self.submit(assignment, data, validate))
 
     @property
     def dead_executors(self) -> set[int]:
@@ -533,48 +585,70 @@ class MeshSliceExecutorPool:
             return []
         return [self._placement(sl) for sl in self.slices]
 
-    def _run_one(self, eid: int, task: TrainTask, sl, data) -> TaskResult:
+    def _run_one(self, eid: int, task: TrainTask, sl, data,
+                 validate: EvalPlan | None = None) -> TaskResult:
         """One placed task; task-level errors become TaskResult.error,
-        ExecutorFailure propagates (the slice is lost)."""
+        ExecutorFailure propagates (the slice is lost). The estimator-backed
+        default scores the model ON ITS SLICE (§3.4) — eval data resolves
+        through the prepared cache under the slice's placement token, so
+        each slice holds its own resident eval copy; a custom
+        ``task_runner`` owns its payloads, so scoring is skipped."""
         conv = 0.0
+        score, eval_s = None, 0.0
         try:
             if self.failure_hook is not None:
                 self.failure_hook(eid, task)  # may raise ExecutorFailure
             if self.task_runner is not None:
                 model, secs = self.task_runner(task, sl, data)
             else:
+                est = get_estimator(task.estimator)
                 model, secs, conv = run_prepared(
-                    get_estimator(task.estimator), data, task.params,
+                    est, data, task.params,
                     cache=self.prepared_cache, placement=self._placement(sl))
+                score, eval_s = _score_solo(est, model, validate,
+                                            self.prepared_cache,
+                                            placement=self._placement(sl))
         except ExecutorFailure:
             raise
         except Exception as e:
             return TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
         self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs,
-                                  executor_id=eid, convert_seconds=conv))
+                                  executor_id=eid, score=score,
+                                  convert_seconds=conv, eval_seconds=eval_s))
         return TaskResult(task=task, model=model, train_seconds=secs,
-                          executor_id=eid, convert_seconds=conv)
+                          executor_id=eid, convert_seconds=conv,
+                          score=score, eval_seconds=eval_s)
 
-    def _run_fused(self, eid: int, unit: FusedBatch, sl, data) -> list[TaskResult]:
+    def _run_fused(self, eid: int, unit: FusedBatch, sl, data,
+                   validate: EvalPlan | None = None) -> list[TaskResult]:
         """One fused unit as ONE placed program: the runner receives the
         batch and returns (payload per member, total seconds); results are
-        unbatched with amortized per-member seconds. A batch-level exception
-        becomes per-member error results; ExecutorFailure propagates."""
+        unbatched with amortized per-member seconds. The estimator-backed
+        default also scores the whole model stack on its slice (one vmapped
+        predict program, §3.4). A batch-level exception becomes per-member
+        error results; ExecutorFailure propagates."""
         members = [m for m in unit.tasks if not self.wal.is_done(m.task_id)]
         if not members:
             return []
         sub = unit.restrict({m.task_id for m in members})
         conv = 0.0
+        scores: list = [None] * len(members)
+        eval_per = 0.0
         try:
             if self.failure_hook is not None:
                 self.failure_hook(eid, unit)  # may raise ExecutorFailure
             if self.task_runner is not None:
                 payloads, total = self.task_runner(sub, sl, data)
             else:
+                est = get_estimator(sub.estimator)
                 payloads, total, conv = run_prepared_batched(
-                    get_estimator(sub.estimator), data,
-                    [m.params for m in members],
+                    est, data, [m.params for m in members],
                     cache=self.prepared_cache, placement=self._placement(sl))
+                if validate is not None:
+                    scores, eval_per = evaluate_models(
+                        est, payloads, validate,
+                        prepared_cache=self.prepared_cache,
+                        placement=self._placement(sl))
         except ExecutorFailure:
             raise
         except Exception as e:
@@ -588,22 +662,25 @@ class MeshSliceExecutorPool:
             conv_j = conv if j == carrier else 0.0
             self.wal.record(WALRecord(task_id=m.task_id, key=m.key(),
                                       seconds=per, executor_id=eid,
-                                      convert_seconds=conv_j))
+                                      score=scores[j], convert_seconds=conv_j,
+                                      eval_seconds=eval_per))
             results.append(TaskResult(task=m, model=payload, train_seconds=per,
                                       executor_id=eid, batch_size=len(members),
-                                      convert_seconds=conv_j))
+                                      convert_seconds=conv_j,
+                                      score=scores[j], eval_seconds=eval_per))
         return results
 
-    def _execute(self, eid: int, task, sl, data) -> list[TaskResult]:
+    def _execute(self, eid: int, task, sl, data,
+                 validate: EvalPlan | None = None) -> list[TaskResult]:
         """Run one scheduled unit (task or fused batch); every produced
         result is emitted to ``on_result`` HERE, the moment it exists — so
         even results a cancelled stream never surfaces feed the observers."""
         if isinstance(task, FusedBatch):
-            results = self._run_fused(eid, task, sl, data)
+            results = self._run_fused(eid, task, sl, data, validate)
         elif self.wal.is_done(task.task_id):
             results = []
         else:
-            results = [self._run_one(eid, task, sl, data)]
+            results = [self._run_one(eid, task, sl, data, validate)]
         for res in results:
             self._emit(res)
         return results
@@ -627,8 +704,15 @@ class MeshSliceExecutorPool:
         got, self._stragglers = self._stragglers, []
         return got
 
-    def submit(self, assignment: Assignment, data) -> Iterator[TaskResult]:
+    def submit(self, assignment: Assignment, data,
+               validate: EvalPlan | None = None) -> Iterator[TaskResult]:
         """Execute the plan slice by slice, yielding each result as it lands.
+
+        ``validate`` turns on slice-side scoring (§3.4) for the estimator-
+        backed default runner: each slice evaluates the models it trained
+        against its own resident copy of the eval data (per-placement cache
+        entries). A custom ``task_runner`` owns its payloads — scoring is
+        skipped and results stream exactly as before.
 
         A slice lost to :class:`ExecutorFailure` has its remaining queue
         re-distributed over the surviving slices; with no survivors the
@@ -642,7 +726,7 @@ class MeshSliceExecutorPool:
         for eid, (q, sl) in enumerate(zip(queues, self.slices)):
             for i, task in enumerate(q):
                 try:
-                    results = self._execute(eid, task, sl, data)
+                    results = self._execute(eid, task, sl, data, validate)
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
@@ -659,7 +743,8 @@ class MeshSliceExecutorPool:
             if not alive:
                 for task in pending:  # driver as executor of last resort
                     try:
-                        results = self._execute(-1, task, self.driver_slice, data)
+                        results = self._execute(-1, task, self.driver_slice,
+                                                data, validate)
                     except ExecutorFailure as e:
                         # the driver has no failure semantics to escalate to:
                         # record the loss as task-level errors
@@ -678,7 +763,8 @@ class MeshSliceExecutorPool:
                     break
                 eid = sorted(alive)[idx % len(alive)]
                 try:
-                    results = self._execute(eid, task, self.slices[eid], data)
+                    results = self._execute(eid, task, self.slices[eid], data,
+                                            validate)
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
@@ -686,9 +772,10 @@ class MeshSliceExecutorPool:
                     continue
                 yield from self._deliver(results)
 
-    def run(self, assignment: Assignment, data) -> list[TaskResult]:
+    def run(self, assignment: Assignment, data,
+            validate: EvalPlan | None = None) -> list[TaskResult]:
         """Blocking convenience: drain :meth:`submit` into a list."""
-        return list(self.submit(assignment, data))
+        return list(self.submit(assignment, data, validate))
 
     @property
     def dead_executors(self) -> set[int]:

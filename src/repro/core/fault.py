@@ -36,12 +36,18 @@ class WALRecord:
     key: str
     seconds: float
     executor_id: int
+    #: validation metric computed executor-side (§3.4); None before the
+    #: validation plane, or when the submit carried no EvalPlan
     score: float | None = None
     #: uniform→native conversion seconds the task paid (0.0 on a prepared-
     #: data cache hit) — journalled so post-hoc analysis sees the cost the
     #: old pre-§3.3 accounting silently dropped. Defaults keep old WALs
     #: parseable.
     convert_seconds: float = 0.0
+    #: executor-side scoring seconds (amortized share for fused members) —
+    #: the §3.4 analogue of ``convert_seconds``; defaults keep old WALs
+    #: parseable.
+    eval_seconds: float = 0.0
 
 
 class SearchWAL:

@@ -143,11 +143,19 @@ class FusedBatch:
             prior_costs=tuple(self._prior_of(i) for i in kept),
             cost=_sum_costs(tasks))
 
-    def recost(self, fn) -> "FusedBatch":
+    def recost(self, fn, prior_fn=None) -> "FusedBatch":
         """Member-wise re-estimate (``fn(task) -> task``), buckets kept and
-        the batch cost re-summed — the replan path's refresh."""
+        the batch cost re-summed — the replan path's refresh. ``prior_fn``
+        (``task -> cost | None``) rebuilds ``prior_costs`` alongside;
+        without it the stored priors are kept, which is only correct when
+        they are still fresh — a caller that re-applies per-member charges
+        after recosting (the Session's eval charge) MUST pass it, or each
+        replan would compound another charge into the priors."""
         tasks = tuple(fn(t) for t in self.tasks)
-        return dataclasses.replace(self, tasks=tasks, cost=_sum_costs(tasks))
+        priors = (tuple(prior_fn(t) for t in self.tasks)
+                  if prior_fn is not None else self.prior_costs)
+        return dataclasses.replace(self, tasks=tasks, prior_costs=priors,
+                                   cost=_sum_costs(tasks))
 
     def charge_member(self, extra: float) -> "FusedBatch":
         """Add a one-time cost (conversion-aware costing, §3.3) to the
@@ -163,6 +171,25 @@ class FusedBatch:
         tasks[i] = tasks[i].with_cost((tasks[i].cost or 0.0) + extra)
         tasks = tuple(tasks)
         return dataclasses.replace(self, tasks=tasks, cost=_sum_costs(tasks))
+
+    def charge_each(self, extra_fn) -> "FusedBatch":
+        """Add a RECURRING per-member cost (eval-aware costing, §3.4) to
+        every member AND its pre-amortization prior — unlike the one-time
+        :meth:`charge_member` conversion charge, every member pays its own
+        eval, and updating ``prior_costs`` too means a stranded singleton's
+        restored solo cost still includes scoring. Members without a cost
+        estimate are skipped (a charge on top of nothing would masquerade
+        as a full estimate). ``extra_fn(task) -> float | None``."""
+        extras = [extra_fn(t) or 0.0 for t in self.tasks]
+        tasks = tuple(
+            t.with_cost(t.cost + e) if t.cost is not None and e > 0 else t
+            for t, e in zip(self.tasks, extras))
+        priors = tuple(
+            (p + e) if p is not None and e > 0 else p
+            for p, e in zip((self._prior_of(i) for i in range(len(self.tasks))),
+                            extras))
+        return dataclasses.replace(self, tasks=tasks, prior_costs=priors,
+                                   cost=_sum_costs(tasks))
 
     def split_at_buckets(self) -> "list[FusedBatch]":
         """Split into one batch per distinct structural bucket (batch-aware

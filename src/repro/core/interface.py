@@ -93,6 +93,16 @@ class TaskResult:
     #: amortized share); cache hits report 0.0. ``train_seconds`` never
     #: includes it — the two costs feed separate CostModel laws.
     convert_seconds: float = 0.0
+    #: validation-metric value computed EXECUTOR-SIDE (DESIGN.md §3.4) when
+    #: the submit carried an EvalPlan; None when scoring was off (no
+    #: validation data / foreign backend) or failed. The Session streams
+    #: this straight through, so ranked results need no driver predict.
+    score: float | None = None
+    #: seconds this task's executor spent scoring it (fused: the amortized
+    #: share of the batch's one predict program; includes the one-time eval
+    #: data conversion for the task that built the entry). Feeds the
+    #: CostModel's per-family eval law — never part of ``train_seconds``.
+    eval_seconds: float = 0.0
 
     @property
     def ok(self) -> bool:
@@ -108,6 +118,29 @@ class TrainedModel(abc.ABC):
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         return (self.predict_proba(x) >= 0.5).astype(np.float32)
+
+    # ---- fused validation plane (DESIGN.md §3.4) ------------------------
+    def predict_proba_jax(self, x, *, cache=None) -> np.ndarray:
+        """Device-side scoring path: P(y=1) for device-resident features
+        (the executors pass the prepared eval entry's ``x``). The shipped
+        families override this with a jitted program compiled through
+        ``cache`` (a :class:`~repro.core.fusion.CompileCache`, default the
+        process-wide predict cache); this fallback keeps third-party models
+        scoreable executor-side — off the driver, just not jitted."""
+        del cache
+        return np.asarray(self.predict_proba(np.asarray(x)))
+
+    @classmethod
+    def predict_proba_batched(cls, models: Sequence["TrainedModel"], x, *,
+                              cache=None) -> np.ndarray:
+        """Score a stacked model batch; returns (batch, rows) probabilities.
+
+        A fused unit's models share padded shapes by construction
+        (``train_batched``), so family overrides vmap the whole stack
+        through ONE compiled program; this fallback scores model by model.
+        """
+        return np.stack([np.asarray(m.predict_proba_jax(x, cache=cache))
+                         for m in models])
 
 
 class Estimator(abc.ABC):
@@ -125,6 +158,13 @@ class Estimator(abc.ABC):
     name: str = ""
     #: converter name from repro.core.data_format
     data_format: str = "dense_rows"
+    #: converter the executor-side validation plane (§3.4) resolves the EVAL
+    #: split through — one PreparedDataCache entry per (fingerprint, format,
+    #: placement), shared by every family declaring the same format. The
+    #: shipped families' jitted predictors all route raw device rows, so the
+    #: default ``eval_dense`` (features only; labels stay host-side for the
+    #: numpy metric) serves all four.
+    eval_format: str = "eval_dense"
 
     @abc.abstractmethod
     def train(self, data: Any, params: Mapping[str, Any]) -> TrainedModel:

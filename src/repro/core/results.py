@@ -3,6 +3,12 @@
 Holds every trained model keyed by task, evaluates them all under a chosen
 metric on validation data, and selects the best — the final stage of the
 paper's Fig. 1 example (``multiModel.validateAll(validateDF, ...)``).
+
+Since the fused validation plane (DESIGN.md §3.4) this is the DRIVER-side
+convenience: streamed results already carry executor-computed scores
+(``TaskResult.score``), so ``validate_all`` is for ad-hoc re-ranking on
+other splits/metrics — memoized per (model, data fingerprint) so repeated
+calls re-predict nothing.
 """
 from __future__ import annotations
 
@@ -65,28 +71,56 @@ class ModelScore:
     score: float
     train_seconds: float
     executor_id: int
+    #: per-task cost breakdown (§3.3/§3.4): conversion and executor-side
+    #: scoring seconds the task actually paid, and the fused batch size it
+    #: rode in (1 = solo) — so launchers can print the full story per task
+    convert_seconds: float = 0.0
+    eval_seconds: float = 0.0
+    batch_size: int = 1
 
 
 class MultiModel:
-    """All models produced by one search, with validation utilities."""
+    """All models produced by one search, with validation utilities.
+
+    ``validate_all``/``best`` memoize per (data fingerprint, metric) — and
+    predictions per (model, data fingerprint) across metrics — so repeated
+    ranking calls (launchers print top-k, then best, then a test-split
+    score) re-predict nothing.
+    """
 
     def __init__(self, results: list[TaskResult]):
         self.results = [r for r in results if r.ok]
         self.failures = [r for r in results if not r.ok]
+        self._proba_cache: dict[tuple[int, str], np.ndarray] = {}
+        self._rank_cache: dict[tuple[str, str], list[ModelScore]] = {}
 
     def __len__(self) -> int:
         return len(self.results)
 
+    def _proba(self, r: TaskResult, data: DenseMatrix, fp: str) -> np.ndarray:
+        key = (r.task.task_id, fp)
+        if key not in self._proba_cache:
+            self._proba_cache[key] = r.model.predict_proba(data.x)
+        return self._proba_cache[key]
+
     def validate_all(self, data: DenseMatrix, metric: str = "auc") -> list[ModelScore]:
         fn = METRICS[metric]
+        fp = data.fingerprint()
+        cached = self._rank_cache.get((fp, metric))
+        if cached is not None:
+            return list(cached)
         scores = []
         for r in self.results:
-            s = fn(data.y, r.model.predict_proba(data.x))
-            scores.append(
-                ModelScore(task=r.task, score=s, train_seconds=r.train_seconds, executor_id=r.executor_id)
-            )
+            s = fn(data.y, self._proba(r, data, fp))
+            scores.append(ModelScore(
+                task=r.task, score=s, train_seconds=r.train_seconds,
+                executor_id=r.executor_id,
+                convert_seconds=getattr(r, "convert_seconds", 0.0),
+                eval_seconds=getattr(r, "eval_seconds", 0.0),
+                batch_size=getattr(r, "batch_size", 1)))
         scores.sort(key=lambda m: -m.score)
-        return scores
+        self._rank_cache[(fp, metric)] = scores
+        return list(scores)
 
     def best(self, data: DenseMatrix, metric: str = "auc") -> ModelScore:
         ranked = self.validate_all(data, metric)

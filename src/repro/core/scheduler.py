@@ -31,6 +31,7 @@ from repro.core.interface import TrainTask
 __all__ = [
     "Assignment",
     "charge_first_of_group",
+    "charge_units",
     "schedule",
     "schedule_lpt",
     "schedule_random",
@@ -115,6 +116,35 @@ def charge_first_of_group(units: Sequence, group_key, extra_cost,
             charged[i] = extra
     return [apply(u, charged[i]) if i in charged else u
             for i, u in enumerate(units)]
+
+
+def charge_units(units: Sequence, extra_cost, apply=None) -> list:
+    """Eval-aware costing (DESIGN.md §3.4): add a RECURRING per-unit cost.
+
+    The §3.4 sibling of :func:`charge_first_of_group` (which is one-time per
+    group): every unit pays — executor-side scoring runs once per task, so
+    a plan that ignores it under-costs every unit by its eval time and LPT
+    mis-ranks exactly the families whose models are slow to score.
+
+    ``extra_cost(unit) -> float | None`` (None/0 = leave the unit alone; the
+    Session answers with the CostModel's learned ``predict_eval``, which is
+    None until the family has been observed scoring). ``apply(unit, extra)
+    -> unit`` performs the re-cost — default ``with_cost(cost + extra)``,
+    skipped for units with no estimate at all (an eval charge on top of
+    nothing would masquerade as a full profile); the Session passes a
+    FusedBatch-aware variant that charges every MEMBER
+    (``fusion.FusedBatch.charge_each``), so bucket splits and restricts
+    keep each piece's share. Order is preserved.
+    """
+    if apply is None:
+        def apply(u, extra):
+            return (u.with_cost((u.cost or 0.0) + extra)
+                    if u.cost is not None else u)
+    out = []
+    for u in units:
+        extra = extra_cost(u)
+        out.append(apply(u, extra) if extra is not None and extra > 0 else u)
+    return out
 
 
 def schedule_lpt(tasks: Sequence[TrainTask], n_executors: int) -> Assignment:

@@ -35,17 +35,27 @@ observe loop with a REAL lifecycle instead of a single blocking call:
   cold format groups have that one-time cost charged to their first unit
   before planning, and ``SearchStats.prepared_cache_hits/misses`` /
   ``convert_seconds_total`` surface the traffic;
+* the fused validation plane (DESIGN.md §3.4): when ``validate`` is given
+  and the backend's ``submit`` accepts an EvalPlan, each executor SCORES
+  the models it trained (jitted batched inference, eval data resolved per
+  placement through the PreparedDataCache), results stream with
+  ``TaskResult.score`` attached — ``target_metric`` and dynamic-tuner
+  feedback stop re-predicting on the driver — the CostModel learns a
+  per-family eval law from ``eval_seconds``, and every planned unit
+  carries its eval estimate (``scheduler.charge_units``);
 * ``Session.run(spec, train, validate)`` is the one-shot convenience that
   the deprecated ``ModelSearcher`` shim (searcher.py) delegates to.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Callable, Iterator, Mapping
 
 from repro.core.backend import ExecutorBackend
 from repro.core.cost_model import CostModel, observed_drift
 from repro.core.data_format import DenseMatrix, prepared_data_cache
+from repro.core.evaluation import EvalPlan, predict_compile_cache
 from repro.core.executor import LocalExecutorPool
 from repro.core.fault import SearchWAL
 from repro.core.fusion import FusedBatch, compile_cache, fuse_tasks, split_for_balance
@@ -56,7 +66,13 @@ from repro.core.interface import (
     prepared_cache_key,
 )
 from repro.core.results import METRICS, MultiModel
-from repro.core.scheduler import charge_first_of_group, replan, restrict, schedule
+from repro.core.scheduler import (
+    charge_first_of_group,
+    charge_units,
+    replan,
+    restrict,
+    schedule,
+)
 from repro.core.spec import SearchSpec
 
 __all__ = ["Session", "SearchStats"]
@@ -96,6 +112,13 @@ class SearchStats:
         #: over this session's results) — on a warm cache this is ~0 while
         #: the same search used to re-convert every task
         self.convert_seconds_total = 0.0
+        # -- fused validation plane (DESIGN.md §3.4) ---------------------
+        #: executor-side scoring seconds actually paid (sum of
+        #: TaskResult.eval_seconds) — the time the old driver-side
+        #: validateAll loop spent serially and invisibly
+        self.eval_seconds_total = 0.0
+        self.predict_compile_cache_hits = 0    # this session's share of the
+        self.predict_compile_cache_misses = 0  # predict CompileCache traffic
 
     @property
     def profiling_ratio(self) -> float:  # paper Fig. 3
@@ -110,6 +133,11 @@ class SearchStats:
     def prepared_cache_hit_rate(self) -> float:
         total = self.prepared_cache_hits + self.prepared_cache_misses
         return self.prepared_cache_hits / total if total else 0.0
+
+    @property
+    def predict_compile_cache_hit_rate(self) -> float:
+        total = self.predict_compile_cache_hits + self.predict_compile_cache_misses
+        return self.predict_compile_cache_hits / total if total else 0.0
 
 
 class Session:
@@ -183,11 +211,14 @@ class Session:
         self.cost_model = CostModel.open(path)
         return self.cost_model
 
-    def _install_observer(self, backend, cm: CostModel, n_rows: int) -> bool:
+    def _install_observer(self, backend, cm: CostModel, n_rows: int,
+                          eval_rows: int = 0) -> bool:
         """Chain the cost-model observer onto the pool's ``on_result`` hook
         so EVERY completion updates the model the moment it lands — including
         results a cancelled stream never surfaces. Returns False for foreign
         backends without the hook; the caller then observes inline.
+        ``eval_rows`` (the validation split's size) routes executor-side
+        ``eval_seconds`` into the per-family eval law (§3.4).
 
         A hook installed by an earlier Session on a reused backend is
         REPLACED, not chained onto — otherwise the dead session's model
@@ -200,7 +231,7 @@ class Session:
                 prev = prev._chained_prev      # drop the stale session's hook
 
             def _observe(res: TaskResult, _prev=prev) -> None:
-                cm.observe_result(res, n_rows)
+                cm.observe_result(res, n_rows, eval_rows)
                 if _prev is not None:
                     _prev(res)
 
@@ -299,6 +330,38 @@ class Session:
             lambda key: cm.predict_convert(key, train.n_rows),
             apply=self._apply_charge)
 
+    def _charge_eval(self, units, cm: CostModel | None,
+                     eval_plan: EvalPlan | None):
+        """Eval-aware costing (DESIGN.md §3.4): when the backend will score
+        executor-side, every unit's planned cost carries the CostModel's
+        learned per-family eval estimate (``predict_eval`` at the EVAL
+        split's size; None until a family has been observed scoring —
+        scheduler.charge_units leaves those unchanged). Fused batches are
+        charged per MEMBER so bucket splits keep each piece's share."""
+        if cm is None or eval_plan is None:
+            return list(units)
+        n_eval = eval_plan.data.n_rows
+        member_vals: dict[int, dict[int, float | None]] = {}
+
+        def extra(u):
+            if isinstance(u, FusedBatch):
+                # per-member estimates (bucket-resolved), computed ONCE and
+                # reused by apply — a split piece keeps exactly its own
+                # members' eval share
+                vals = {m.task_id: cm.predict_eval(m, n_eval)
+                        for m in u.tasks}
+                member_vals[u.task_id] = vals
+                return sum(v for v in vals.values() if v) or None
+            return cm.predict_eval(u, n_eval)
+
+        def apply(u, e):
+            if isinstance(u, FusedBatch):
+                vals = member_vals[u.task_id]
+                return u.charge_each(lambda m: vals[m.task_id])
+            return u.with_cost((u.cost or 0.0) + e) if u.cost is not None else u
+
+        return charge_units(units, extra, apply=apply)
+
     def _fuse(self, costed, cm: CostModel | None, n_rows: int):
         """Pack a costed batch into fused units (spec.fuse) and account them."""
         units = fuse_tasks(costed, max_fuse=self.spec.max_fuse,
@@ -323,12 +386,20 @@ class Session:
                     return m.with_cost(est)
             return by_id.get(m.task_id, m)
 
+        def solo_prior(m):
+            # fresh pre-amortization (solo, train-only) estimate — priors
+            # must NOT carry over from the active plan's units, whose
+            # priors already include the last _charge_eval; re-charging
+            # after this recost would otherwise compound into them
+            got = by_id.get(m.task_id)
+            return got.cost if got is not None else m.cost
+
         units = []
         for u in assignment.all_tasks():
             if isinstance(u, FusedBatch):
                 alive = u.restrict(set(by_id))
                 if alive is not None:
-                    units.append(alive.recost(recost))
+                    units.append(alive.recost(recost, prior_fn=solo_prior))
             elif u.task_id in by_id:
                 units.append(by_id[u.task_id])
         return units
@@ -358,11 +429,28 @@ class Session:
         if isinstance(profiler, CostModel) and cm is not None:
             profiler = cm          # _ensure may have swapped in the warm copy
         backend = self.backend
-        pool_observes = (self._install_observer(backend, cm, train.n_rows)
-                         if cm is not None else False)
+        pool_observes = (self._install_observer(
+            backend, cm, train.n_rows,
+            validate.n_rows if validate is not None else 0)
+            if cm is not None else False)
         metric_fn = METRICS[spec.metric]
+        # executor-side scoring (§3.4): backends whose submit accepts a
+        # ``validate=`` EvalPlan score each model where it trained and
+        # stream TaskResult.score back; foreign backends without the
+        # keyword keep the driver-side fallback (score_of, computed lazily)
+        eval_plan = None
+        if validate is not None:
+            try:
+                supports = "validate" in inspect.signature(
+                    backend.submit).parameters
+            except (TypeError, ValueError):
+                supports = False
+            if supports:
+                eval_plan = EvalPlan(validate, spec.metric)
         cc = compile_cache()
         cc_hits0, cc_misses0 = cc.counters()
+        ec = predict_compile_cache()
+        ec_hits0, ec_misses0 = ec.counters()
         pc = getattr(backend, "prepared_cache", None) or prepared_data_cache()
         pc_hits0, pc_misses0 = pc.counters()
         try:
@@ -388,6 +476,9 @@ class Session:
                 # first unit (§3.3), so LPT stops mis-ranking them.
                 units = (self._fuse(costed, cm, train.n_rows)
                          if spec.fuse else costed)
+                # §3.4: every unit that will be scored executor-side carries
+                # its eval estimate; §3.3: cold formats' one-time conversion
+                units = self._charge_eval(units, cm, eval_plan)
                 units = self._charge_conversion(units, cm, train)
                 assignment = schedule(
                     units, spec.n_executors, policy=spec.policy, seed=spec.seed,
@@ -402,8 +493,14 @@ class Session:
 
                 def score_of(r: TaskResult) -> float:
                     if r.task.task_id not in scores:
-                        scores[r.task.task_id] = metric_fn(
-                            validate.y, r.model.predict_proba(validate.x))
+                        # executor-scored results (§3.4) streamed their
+                        # metric in — the driver-side predict below survives
+                        # only as the fallback for foreign backends
+                        if r.score is not None:
+                            scores[r.task.task_id] = r.score
+                        else:
+                            scores[r.task.task_id] = metric_fn(
+                                validate.y, r.model.predict_proba(validate.x))
                     return scores[r.task.task_id]
 
                 pending = list(costed)
@@ -417,13 +514,20 @@ class Session:
                     done_ids.add(res.task.task_id)
                     self.stats.convert_seconds_total += getattr(
                         res, "convert_seconds", 0.0)
+                    self.stats.eval_seconds_total += getattr(
+                        res, "eval_seconds", 0.0)
                     if cm is not None and not pool_observes:
-                        cm.observe_result(res, train.n_rows)
+                        cm.observe_result(
+                            res, train.n_rows,
+                            validate.n_rows if validate is not None else 0)
                     if on_result is not None:
                         on_result(res)
 
                 while True:
-                    stream = backend.submit(assignment, train)
+                    stream = (backend.submit(assignment, train,
+                                             validate=eval_plan)
+                              if eval_plan is not None
+                              else backend.submit(assignment, train))
                     stream_close = getattr(stream, "close", None)
                     window: list[tuple[float, float]] = []  # (est, observed)
                     want_replan = False
@@ -440,13 +544,15 @@ class Session:
                             if self.stop_reason:
                                 break
                             if res.ok and res.task.cost and res.train_seconds > 0:
-                                # observed side includes the conversion the
-                                # task actually paid: a cold format whose
-                                # conversion dominates now REGISTERS as
-                                # drift instead of silently vanishing
+                                # observed side includes the conversion AND
+                                # eval the task actually paid: a cold format
+                                # whose conversion dominates, or scoring the
+                                # plan was blind to, now REGISTERS as drift
+                                # instead of silently vanishing
                                 window.append((res.task.cost,
                                                res.train_seconds
-                                               + res.convert_seconds))
+                                               + res.convert_seconds
+                                               + res.eval_seconds))
                             if (spec.replan_threshold is not None
                                     and replans_left > 0
                                     and len(window) >= _MIN_REPLAN_WINDOW
@@ -477,6 +583,8 @@ class Session:
                     if spec.fuse:
                         pending_units = self._pending_units(
                             assignment, pending, cm, train.n_rows)
+                        pending_units = self._charge_eval(
+                            pending_units, cm, eval_plan)
                         pending_units = self._charge_conversion(
                             pending_units, cm, train)
                         assignment = replan(
@@ -484,6 +592,7 @@ class Session:
                             current=restrict(assignment, pending_units),
                             policy=spec.policy, splitter=split_for_balance)
                     else:
+                        pending = self._charge_eval(pending, cm, eval_plan)
                         pending = self._charge_conversion(pending, cm, train)
                         assignment = replan(pending, spec.n_executors,
                                             current=restrict(assignment, pending),
@@ -514,6 +623,9 @@ class Session:
             hits, misses = cc.counters()   # this session's cache traffic
             self.stats.compile_cache_hits = hits - cc_hits0
             self.stats.compile_cache_misses = misses - cc_misses0
+            ec_hits, ec_misses = ec.counters()
+            self.stats.predict_compile_cache_hits = ec_hits - ec_hits0
+            self.stats.predict_compile_cache_misses = ec_misses - ec_misses0
             pc_hits, pc_misses = pc.counters()
             self.stats.prepared_cache_hits = pc_hits - pc_hits0
             self.stats.prepared_cache_misses = pc_misses - pc_misses0

@@ -54,13 +54,19 @@ def pick_tiles(n_features: int, n_bins: int, n_rows: int,
     lookup table (nearest power-of-two bin count), clamped to the array AND
     to the VMEM scratch budget: the accumulators take
     ``2 · n_nodes · block_f · n_bins · 4`` bytes, so deep-tree levels
-    (large ``n_nodes``) halve ``block_f`` until they fit."""
+    (large ``n_nodes``) halve ``block_f`` until they fit.
+
+    ``block_rows`` never exceeds ``n_rows``: the old
+    ``min(block_r, max(8, n_rows))`` clamp returned 8 for a sub-8-row array
+    — every tiny histogram (profiler samples, unit-test fixtures) was
+    silently padded up to twice over before the kernel's own block padding
+    even ran."""
     key = min(_TILE_TABLE, key=lambda b: abs(b - n_bins))
     block_f, block_r = _TILE_TABLE[key]
     block_f = min(block_f, n_features)
     while block_f > 1 and 2 * n_nodes * block_f * n_bins * 4 > _VMEM_SCRATCH_BUDGET:
         block_f //= 2
-    return block_f, min(block_r, max(8, n_rows))
+    return block_f, max(1, min(block_r, n_rows))
 
 
 def _hist_kernel(
@@ -127,7 +133,13 @@ def histogram_tpu(
     """
     r, f = bins.shape
     picked_f, picked_r = pick_tiles(f, n_bins, r, n_nodes)
-    block_rows = picked_r if block_rows is None else min(block_rows, max(8, r))
+    block_rows = picked_r if block_rows is None else max(1, min(block_rows, r))
+    if not interpret and block_rows < 8:
+        # real-TPU Mosaic wants >= 8 sublanes in an f32 block; a sub-8-row
+        # histogram pads up through the kernel's own row padding (pad rows
+        # carry node = n_nodes, whose one-hot row is all-zero). Interpret /
+        # CPU keeps the honest unpadded tile pick_tiles reports.
+        block_rows = 8
     block_features = picked_f if block_features is None else min(block_features, f)
     pad_r = (-r) % block_rows
     pad_f = (-f) % block_features

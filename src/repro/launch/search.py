@@ -104,8 +104,20 @@ def run_tabular(args) -> int:
     for r in session.results(train, valid):
         done += 1
         if args.verbose and r.ok:
+            # full per-task cost breakdown (§3.3/§3.4): train + convert +
+            # executor-side eval, the fused batch it rode in, and the score
+            # it streamed back with — no driver-side re-predicting
+            extras = f"{r.train_seconds:.2f}s train"
+            if r.convert_seconds:
+                extras += f" +{r.convert_seconds:.2f}s conv"
+            if r.eval_seconds:
+                extras += f" +{r.eval_seconds:.3f}s eval"
+            if r.batch_size > 1:
+                extras += f", batch={r.batch_size}"
+            if r.score is not None:
+                extras += f", {args.metric}={r.score:.4f}"
             print(f"  [{done}/{spec.n_grid_tasks}] exec {r.executor_id}: "
-                  f"{r.task.key()} ({r.train_seconds:.2f}s)")
+                  f"{r.task.key()} ({extras})")
     multi = session.multi_model()
     if not len(multi):
         print("nothing left to search (WAL already complete?)")
@@ -133,11 +145,16 @@ def run_tabular(args) -> int:
     prepared = (f" prepared_cache={st.prepared_cache_hits}h/"
                 f"{st.prepared_cache_misses}m"
                 f" convert={st.convert_seconds_total:.2f}s")
+    evald = (f" eval={st.eval_seconds_total:.2f}s"
+             f" predict_cache={st.predict_compile_cache_hits}h/"
+             f"{st.predict_compile_cache_misses}m")
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
           f"profiling_ratio={st.profiling_ratio:.1%} "
-          f"failures={st.n_failures}{stopped}{feedback}{fused}{prepared}")
+          f"failures={st.n_failures}{stopped}{feedback}{fused}{prepared}{evald}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
-          f"test {args.metric}={test_score:.4f}")
+          f"test {args.metric}={test_score:.4f} "
+          f"(train {best.train_seconds:.2f}s + conv {best.convert_seconds:.2f}s "
+          f"+ eval {best.eval_seconds:.3f}s, batch={best.batch_size})")
     return 0
 
 

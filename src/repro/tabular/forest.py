@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interface import Estimator, TrainedModel, register_estimator
-from repro.tabular.gbdt import build_tree
+from repro.tabular.gbdt import batched_tree_margins, build_tree
 
 __all__ = ["ForestEstimator", "ForestModel"]
 
@@ -83,6 +83,30 @@ class ForestModel(TrainedModel):
                 local = 2 * local + (x[np.arange(x.shape[0]), feat[g]] > thresh[g])
             out += leaves[local]
         return np.clip(out / len(self.feat), 0.0, 1.0)
+
+    # ---- jitted validation plane (DESIGN.md §3.4) -----------------------
+    # A forest "margin" is the SUM of per-tree leaf values (base 0); the
+    # probability is the tree-mean, clipped. The tree router is shared with
+    # gbdt (batched_tree_margins), so both families reuse one compiled
+    # predictor per (depth, padded trees, batch, rows) shape — round-padded
+    # sentinel trees contribute leaf 0 = 0 to the sum, and the divisor is
+    # each model's REAL tree count, so padding never skews the mean.
+    def predict_margin_jax(self, x, *, cache=None) -> np.ndarray:
+        return batched_tree_margins([self], x, cache=cache)[0]
+
+    def predict_proba_jax(self, x, *, cache=None) -> np.ndarray:
+        margin = self.predict_margin_jax(x, cache=cache)
+        return np.clip(margin / len(self.feat), 0.0, 1.0)
+
+    @classmethod
+    def predict_margin_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return batched_tree_margins(models, x, cache=cache)
+
+    @classmethod
+    def predict_proba_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        margins = batched_tree_margins(models, x, cache=cache)
+        counts = np.asarray([len(m.feat) for m in models], np.float32)
+        return np.clip(margins / counts[:, None], 0.0, 1.0)
 
 
 @register_estimator

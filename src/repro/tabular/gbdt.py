@@ -22,10 +22,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import Estimator, TrainedModel, register_estimator
 from repro.kernels import ops
 
-__all__ = ["GBDTEstimator", "GBDTModel", "build_tree", "predict_margin"]
+__all__ = [
+    "GBDTEstimator",
+    "GBDTModel",
+    "build_tree",
+    "predict_margin",
+    "predict_raw_margin",
+    "batched_tree_margins",
+]
 
 
 def build_tree(
@@ -108,6 +116,90 @@ def predict_margin(bins, feat, split, leaf_value, max_depth: int):
     return leaf_value[local]
 
 
+# --------------------------------------------------------------------------
+# Jitted validation plane (DESIGN.md §3.4): raw-feature tree routing.
+# --------------------------------------------------------------------------
+
+def predict_raw_margin(x, feat, thresh, leaves, base, *, max_depth: int):
+    """Margins of RAW rows through a whole heap-layout tree stack, one
+    program: ``lax.scan`` over the (rounds, ·) tree arrays, each level a
+    vectorized gather+compare — this replaces the driver's per-round
+    per-level numpy loop (``GBDTModel.predict_margin``). Sentinel splits
+    carry ``thresh = +inf`` (``x > inf`` is False → every row routes left),
+    so depth-padded and round-padded trees route exactly like the numpy
+    predictor; a fully-sentinel PADDING tree lands every row in leaf 0,
+    whose value is 0, adding nothing to the margin."""
+    r = x.shape[0]
+
+    def one_tree(margin, tree):
+        tf, tt, tl = tree
+        local = jnp.zeros((r,), jnp.int32)
+        for level in range(max_depth):
+            g = (1 << level) - 1 + local
+            xv = jnp.take_along_axis(x, tf[g][:, None], axis=1)[:, 0]
+            local = 2 * local + (xv > tt[g]).astype(jnp.int32)
+        return margin + tl[local], 0.0
+
+    margin0 = jnp.full((r,), jnp.float32(0.0), jnp.float32) + base
+    margin, _ = jax.lax.scan(one_tree, margin0, (feat, thresh, leaves))
+    return margin
+
+
+def _build_predict_batched(max_depth: int):
+    """Predict-compile-cache builder: vmap the tree-stack router over a
+    model batch (shared rows, per-model trees + base)."""
+    core = functools.partial(predict_raw_margin, max_depth=max_depth)
+    return jax.jit(jax.vmap(core, in_axes=(None, 0, 0, 0, 0)))
+
+
+def _stack_tree_models(models) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-model tree arrays into one (B, T, ·) batch, padding each
+    model's tree count to the shared pow-2 maximum with sentinel trees —
+    the batch analogue of ``pad_configs``: a fused unit's models share
+    padded DEPTH by construction (``train_batched``), rounds pad here, so
+    one compile serves any batch whose padded shape matches."""
+    from repro.core.fusion import pad_pow2
+
+    pad_t = pad_pow2(max(m.feat.shape[0] for m in models))
+    b, n_nodes = len(models), models[0].feat.shape[1]
+    n_leaves = models[0].leaves.shape[1]
+    feat = np.zeros((b, pad_t, n_nodes), np.int32)
+    thresh = np.full((b, pad_t, n_nodes), np.inf, np.float32)
+    leaves = np.zeros((b, pad_t, n_leaves), np.float32)
+    for i, m in enumerate(models):
+        t = m.feat.shape[0]
+        feat[i, :t] = m.feat
+        thresh[i, :t] = m.thresh
+        leaves[i, :t] = m.leaves
+    return feat, thresh, leaves
+
+
+def batched_tree_margins(models, x, *, cache=None) -> np.ndarray:
+    """(B, rows) margins for a stack of heap-layout tree models (GBDT with
+    its base margin, forest with base 0) — shared by both families' jitted
+    paths. Models are grouped by depth (a fused unit is a single group by
+    construction; mixed stacks still score correctly), each group one
+    vmapped program through the predict compile cache."""
+    cache = cache if cache is not None else predict_compile_cache()
+    x = jnp.asarray(x, jnp.float32)
+    out = np.empty((len(models), x.shape[0]), np.float32)
+    groups: dict[int, list[int]] = {}
+    for i, m in enumerate(models):
+        groups.setdefault(int(m.max_depth), []).append(i)
+    for depth, idxs in groups.items():
+        feat, thresh, leaves = _stack_tree_models([models[i] for i in idxs])
+        fn = cache.get(
+            ("tree_predict", depth, feat.shape[1], len(idxs), tuple(x.shape)),
+            lambda: _build_predict_batched(depth),
+        )
+        base = jnp.asarray([getattr(models[i], "base", 0.0) for i in idxs],
+                           jnp.float32)
+        margins = fn(x, jnp.asarray(feat), jnp.asarray(thresh),
+                     jnp.asarray(leaves), base)
+        out[idxs] = np.asarray(margins)
+    return out
+
+
 def _fit_gbdt_core(
     bins, y, base, factor, bin_limit, n_rounds, depth_limit,
     eta, lam, gamma, min_child_weight, *, n_bins: int, rounds: int, max_depth: int,
@@ -181,7 +273,27 @@ class GBDTModel(TrainedModel):
         return out
 
     def predict_proba(self, x: np.ndarray) -> np.ndarray:
-        return 1.0 / (1.0 + np.exp(-self.predict_margin(x)))
+        return stable_sigmoid(self.predict_margin(x))
+
+    # ---- jitted validation plane (DESIGN.md §3.4) -----------------------
+    def predict_margin_jax(self, x, *, cache=None) -> np.ndarray:
+        """One-program device margins (scan over trees, gather per level);
+        bit-identical to :meth:`predict_margin` — same float32 adds in the
+        same tree order, sentinel thresholds route identically."""
+        return batched_tree_margins([self], x, cache=cache)[0]
+
+    def predict_proba_jax(self, x, *, cache=None) -> np.ndarray:
+        # same stable sigmoid as predict_proba over bit-identical margins,
+        # so the jitted path scores EXACTLY what the numpy path would
+        return stable_sigmoid(self.predict_margin_jax(x, cache=cache))
+
+    @classmethod
+    def predict_margin_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return batched_tree_margins(models, x, cache=cache)
+
+    @classmethod
+    def predict_proba_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return stable_sigmoid(batched_tree_margins(models, x, cache=cache))
 
 
 @register_estimator

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import Estimator, TrainedModel, register_estimator
 
 __all__ = ["LogRegEstimator", "LogRegModel"]
@@ -70,13 +71,44 @@ def _build_batched_fit(steps: int):
     return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
+def _build_predict_batched():
+    """Predict-compile-cache builder (§3.4): a stacked weight batch scores
+    as ONE matmul — x (R, F) @ wᵀ (F, B) — instead of B driver matvecs."""
+    return jax.jit(lambda x, w, b: (x @ w.T + b[None, :]).T)
+
+
+def _batched_margins(models, x, *, cache=None) -> np.ndarray:
+    cache = cache if cache is not None else predict_compile_cache()
+    x = jnp.asarray(x, jnp.float32)
+    fn = cache.get(("logreg.predict", len(models), tuple(x.shape)),
+                   _build_predict_batched)
+    w = jnp.asarray(np.stack([m.w for m in models]).astype(np.float32))
+    b = jnp.asarray([m.b for m in models], jnp.float32)
+    return np.asarray(fn(x, w, b))
+
+
 class LogRegModel(TrainedModel):
     def __init__(self, w: np.ndarray, b: float):
         self.w, self.b = np.asarray(w), float(b)
 
     def predict_proba(self, x: np.ndarray) -> np.ndarray:
         z = np.asarray(x, np.float32) @ self.w + self.b
-        return 1.0 / (1.0 + np.exp(-z))
+        return stable_sigmoid(z)
+
+    # ---- jitted validation plane (DESIGN.md §3.4) -----------------------
+    def predict_margin_jax(self, x, *, cache=None) -> np.ndarray:
+        return _batched_margins([self], x, cache=cache)[0]
+
+    def predict_proba_jax(self, x, *, cache=None) -> np.ndarray:
+        return stable_sigmoid(self.predict_margin_jax(x, cache=cache))
+
+    @classmethod
+    def predict_margin_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return _batched_margins(models, x, cache=cache)
+
+    @classmethod
+    def predict_proba_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return stable_sigmoid(_batched_margins(models, x, cache=cache))
 
 
 @register_estimator

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import Estimator, TrainedModel, register_estimator
 
 __all__ = ["MLPEstimator", "MLPModel"]
@@ -95,6 +96,36 @@ def _build_batched_fit(dims: tuple[int, ...], steps: int, batch_size: int):
     return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
+def _build_predict_batched():
+    """Predict-compile-cache builder (§3.4): one vmapped forward pass over a
+    stacked parameter batch — layer count/shapes are fixed by the pytree
+    structure, which is part of the cache key."""
+    return jax.jit(jax.vmap(lambda x, params: _forward(params, x),
+                            in_axes=(None, 0)))
+
+
+def _batched_logits(models, x, *, cache=None) -> np.ndarray:
+    """(B, rows) logits for models sharing one architecture, grouped by
+    dims when the stack mixes them (a fused unit never does — ``network``
+    is in the fuse signature)."""
+    cache = cache if cache is not None else predict_compile_cache()
+    x = jnp.asarray(x, jnp.float32)
+    out = np.empty((len(models), x.shape[0]), np.float32)
+    groups: dict[tuple, list[int]] = {}
+    for i, m in enumerate(models):
+        groups.setdefault(tuple(w.shape for w, _ in m.params), []).append(i)
+    for dims, idxs in groups.items():
+        fn = cache.get(("mlp.predict", dims, len(idxs), tuple(x.shape)),
+                       _build_predict_batched)
+        stacked = [
+            (jnp.asarray(np.stack([models[i].params[li][0] for i in idxs])),
+             jnp.asarray(np.stack([models[i].params[li][1] for i in idxs])))
+            for li in range(len(dims))
+        ]
+        out[idxs] = np.asarray(fn(x, stacked))
+    return out
+
+
 class MLPModel(TrainedModel):
     def __init__(self, params):
         self.params = [(np.asarray(w), np.asarray(b)) for w, b in params]
@@ -105,7 +136,22 @@ class MLPModel(TrainedModel):
             h = h @ w + b
             if i < len(self.params) - 1:
                 h = np.maximum(h, 0)
-        return 1.0 / (1.0 + np.exp(-h[:, 0]))
+        return stable_sigmoid(h[:, 0])
+
+    # ---- jitted validation plane (DESIGN.md §3.4) -----------------------
+    def predict_margin_jax(self, x, *, cache=None) -> np.ndarray:
+        return _batched_logits([self], x, cache=cache)[0]
+
+    def predict_proba_jax(self, x, *, cache=None) -> np.ndarray:
+        return stable_sigmoid(self.predict_margin_jax(x, cache=cache))
+
+    @classmethod
+    def predict_margin_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return _batched_logits(models, x, cache=cache)
+
+    @classmethod
+    def predict_proba_batched(cls, models, x, *, cache=None) -> np.ndarray:
+        return stable_sigmoid(_batched_logits(models, x, cache=cache))
 
 
 @register_estimator

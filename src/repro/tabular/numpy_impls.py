@@ -14,6 +14,7 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro.core.evaluation import stable_sigmoid
 from repro.core.interface import Estimator, TrainedModel, register_estimator
 
 __all__ = ["NumpyMLPEstimator", "NumpyLogRegEstimator"]
@@ -24,7 +25,7 @@ class _NumpyLogRegModel(TrainedModel):
         self.w, self.b = w, b
 
     def predict_proba(self, x: np.ndarray) -> np.ndarray:
-        return 1.0 / (1.0 + np.exp(-(np.asarray(x, np.float32) @ self.w + self.b)))
+        return stable_sigmoid(np.asarray(x, np.float32) @ self.w + self.b)
 
 
 @register_estimator
@@ -40,7 +41,7 @@ class NumpyLogRegEstimator(Estimator):
         n, d = x.shape
         w, b = np.zeros(d, np.float32), 0.0
         for _ in range(steps):
-            p = 1.0 / (1.0 + np.exp(-(x @ w + b)))
+            p = stable_sigmoid(x @ w + b).astype(np.float32)
             gw = x.T @ (p - y) / n + w / (c * n)
             gb = float(np.mean(p - y))
             w -= lr * gw
@@ -62,7 +63,7 @@ class _NumpyMLPModel(TrainedModel):
             h = h @ w + b
             if i < len(self.layers) - 1:
                 h = np.maximum(h, 0.0)
-        return 1.0 / (1.0 + np.exp(-h[:, 0]))
+        return stable_sigmoid(h[:, 0])
 
 
 @register_estimator
@@ -91,7 +92,7 @@ class NumpyMLPEstimator(Estimator):
                 if i < len(layers) - 1:
                     h = np.maximum(h, 0.0)
                 acts.append(h)
-            p = 1.0 / (1.0 + np.exp(-h[:, 0]))
+            p = stable_sigmoid(h[:, 0]).astype(np.float32)
             grad = ((p - y[idx]) / bs)[:, None]
             for i in range(len(layers) - 1, -1, -1):
                 w, b = layers[i]

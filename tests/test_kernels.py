@@ -196,3 +196,29 @@ def test_histogram_tile_table_respects_vmem_budget():
     # deep level really does shrink vs the table default
     assert pick_tiles(120, 64, 4800, n_nodes=2048)[0] < \
         pick_tiles(120, 64, 4800, n_nodes=8)[0]
+
+
+def test_pick_tiles_never_exceeds_rows(rng):
+    """Regression: ``min(block_r, max(8, n_rows))`` returned block_rows=8
+    for a 4-row histogram, silently padding tiny arrays — block_rows must
+    be clamped to the array."""
+    from repro.kernels.histogram import pick_tiles
+
+    for n_rows in (1, 4, 7):
+        _, br = pick_tiles(16, 64, n_rows)
+        assert br == n_rows
+    _, br = pick_tiles(16, 64, 4800)
+    assert br == 512                       # table default untouched
+    # and a 4-row histogram actually computes correctly through the kernel
+    r, f, nb, nn = 4, 3, 8, 2
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = _rand(rng, (r,), jnp.float32)
+    h = jnp.abs(_rand(rng, (r,), jnp.float32)) + 0.1
+    node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+    from repro.kernels.histogram import histogram_tpu
+
+    kern = histogram_tpu(bins, g, h, node, n_nodes=nn, n_bins=nb,
+                         interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(kern), np.asarray(ref.histogram_ref(bins, g, h, node, nn, nb)),
+        atol=1e-4)
