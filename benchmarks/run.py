@@ -30,6 +30,7 @@ from benchmarks import (
     lm_bench,
     paper_figs,
     prepared_data_bench,
+    serve_bench,
 )
 
 #: bump when row names/semantics change incompatibly, so BENCH_<sha>.json
@@ -50,6 +51,7 @@ BENCHES = {
     "histogram_sweep": fusion_bench.histogram_tile_sweep,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
+    "serve": serve_bench.full,
 }
 
 #: the --smoke table: deterministic (except the *.wallclock.* rows, which
@@ -60,6 +62,7 @@ SMOKE_BENCHES = {
     "prepared_data": prepared_data_bench.smoke,
     "eval_plane": eval_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
+    "serve": serve_bench.smoke,
 }
 
 

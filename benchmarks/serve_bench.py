@@ -1,0 +1,150 @@
+"""Multi-tenant search service benchmarks (DESIGN.md §3.5).
+
+Two-layer structure, mirroring the other benches:
+
+* **Deterministic rows** (``*makespan*`` names baseline-gated): an
+  event-clock simulation of 3 tenants sharing 4 workers — one big tenant
+  (48 units) and two small ones (8 units each) — dispatched by the REAL
+  :class:`repro.core.scheduler.FairShareArbiter` in both its modes. Only
+  the clock is modelled; the arbitration decisions are production code.
+  Acceptance (raises on violation, failing the bench job): fair-share cuts
+  the small tenants' p50 time-to-first-result by ≥ 2× vs FIFO while total
+  makespan stays equal within 10% (stride arbitration is work-conserving —
+  it reorders, it does not idle workers).
+
+* **Wall-clock rows** (``serve.wallclock.*`` — excluded from the
+  baseline): a real two-tenant :class:`repro.serve.SearchService` run on
+  this machine. Acceptance: per-tenant cache counters sum EXACTLY to the
+  shared cache's globals, and the second tenant's first plan was priced by
+  the fleet CostModel prior (``n_model_estimates > 0`` with zero profiled
+  tasks).
+"""
+from __future__ import annotations
+
+import heapq
+import statistics
+import tempfile
+
+import repro.tabular  # noqa: F401  (registers the estimators)
+from repro.core import GridBuilder, SearchSpec
+from repro.core.data_format import PreparedDataCache
+from repro.core.scheduler import FairShareArbiter
+from repro.data.synthetic import make_higgs_like
+from repro.serve import SearchService
+
+Row = tuple[str, float, str]
+
+_N_WORKERS = 4
+_BIG_UNITS = 48
+_SMALL_UNITS = 8
+_UNIT_COST = 1.0          # simulated seconds per training unit
+
+
+def _simulate(mode: str) -> tuple[float, dict[str, float], float]:
+    """Dispatch the 3-tenant workload through a real arbiter, advancing an
+    event clock over ``_N_WORKERS`` workers. Returns (total makespan,
+    per-tenant time-to-first-result, share drift)."""
+    arb = FairShareArbiter(mode=mode)
+    # the big tenant registered AND queued first: the FIFO failure mode
+    arb.ensure_tenant("big")
+    for i in range(_BIG_UNITS):
+        arb.push("big", ("big", i), cost=_UNIT_COST)
+    for name in ("small-a", "small-b"):
+        arb.ensure_tenant(name)
+        for i in range(_SMALL_UNITS):
+            arb.push(name, (name, i), cost=_UNIT_COST)
+    workers = [0.0] * _N_WORKERS          # next-free times (event clock)
+    heapq.heapify(workers)
+    first_done: dict[str, float] = {}
+    makespan = 0.0
+    while True:
+        popped = arb.pop()
+        if popped is None:
+            break
+        tenant, _unit, cost = popped
+        start = heapq.heappop(workers)
+        end = start + cost
+        heapq.heappush(workers, end)
+        first_done.setdefault(tenant, end)
+        makespan = max(makespan, end)
+    return makespan, first_done, arb.share_drift
+
+
+def _deterministic() -> list[Row]:
+    rows: list[Row] = []
+    fifo_mk, fifo_first, _ = _simulate("fifo")
+    fair_mk, fair_first, fair_drift = _simulate("fair_share")
+    fifo_ttfr = statistics.median(
+        fifo_first[t] for t in ("small-a", "small-b"))
+    fair_ttfr = statistics.median(
+        fair_first[t] for t in ("small-a", "small-b"))
+    speedup = fifo_ttfr / fair_ttfr
+    rows.append(("serve.smoke.fifo_makespan", fifo_mk,
+                 f"{_BIG_UNITS}+2x{_SMALL_UNITS} units, {_N_WORKERS} workers, FIFO"))
+    rows.append(("serve.smoke.fair_makespan", fair_mk,
+                 "same workload, weighted stride fair-share"))
+    rows.append(("serve.smoke.fifo_small_ttfr_p50", fifo_ttfr,
+                 "small tenants' p50 time-to-first-result behind the backlog"))
+    rows.append(("serve.smoke.fair_small_ttfr_p50", fair_ttfr,
+                 "small tenants' p50 time-to-first-result, fair-share"))
+    rows.append(("serve.smoke.small_ttfr_speedup", speedup,
+                 "fifo_ttfr / fair_ttfr (acceptance: >= 2)"))
+    rows.append(("serve.smoke.fair_share_drift", fair_drift,
+                 "max |observed - entitled| dispatched-cost share"))
+    if speedup < 2.0:
+        raise AssertionError(
+            f"fair-share small-tenant TTFR speedup {speedup:.2f}x < 2x")
+    if fair_mk > fifo_mk * 1.10:
+        raise AssertionError(
+            f"fair-share makespan {fair_mk:.3f} not within 10% of FIFO "
+            f"{fifo_mk:.3f} — arbitration stopped being work-conserving")
+    return rows
+
+
+def _wallclock() -> list[Row]:
+    data = make_higgs_like(600, seed=11)
+    train, valid = data.split((0.8, 0.2), seed=1)
+    train, mu, sd = train.standardize()
+    valid, _, _ = valid.standardize(mu, sd)
+    sp = GridBuilder("logreg").add_grid("c", [0.05, 0.3, 1.0]).add_grid(
+        "steps", [40]).build()
+    pc = PreparedDataCache()
+    rows: list[Row] = []
+    with tempfile.TemporaryDirectory() as root:
+        svc = SearchService(n_executors=2, artifact_root=root,
+                            prepared_cache=pc)
+        try:
+            h1 = svc.submit_search(SearchSpec(spaces=[sp], n_executors=2),
+                                   train, valid, tenant="alice", weight=2.0)
+            n1 = sum(1 for r in h1.results() if r.ok)
+            h2 = svc.submit_search(SearchSpec(spaces=[sp], n_executors=2),
+                                   train, valid, tenant="bob")
+            n2 = sum(1 for r in h2.results() if r.ok)
+            hits, misses = pc.counters()
+            snap = pc.tenant_counters()
+            if sum(v.get("hits", 0) for v in snap.values()) != hits or \
+               sum(v.get("misses", 0) for v in snap.values()) != misses:
+                raise AssertionError(
+                    f"tenant ledger does not sum to globals: {snap} vs "
+                    f"hits={hits} misses={misses}")
+            if h2.stats.n_model_estimates <= 0:
+                raise AssertionError(
+                    "second tenant's plan was not priced by the fleet prior")
+            rows.append(("serve.wallclock.results_ok", float(n1 + n2),
+                         "completed tasks across two live tenants"))
+            rows.append(("serve.wallclock.prepared_hit_rate", pc.hit_rate,
+                         "shared prepared-data cache across both tenants"))
+            rows.append(("serve.wallclock.fleet_prior_estimates",
+                         float(h2.stats.n_model_estimates),
+                         "tenant-2 tasks priced by the fleet CostModel prior"))
+        finally:
+            svc.close()
+    return rows
+
+
+def smoke() -> list[Row]:
+    return _deterministic() + _wallclock()
+
+
+def full() -> list[Row]:
+    return smoke()

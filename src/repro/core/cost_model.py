@@ -127,12 +127,24 @@ class CostModel:
     Duck-types the profiler protocol (``profile(tasks, data) ->
     ProfileReport``): tasks the model can estimate cost nothing; the rest go
     to ``fallback`` (typically a :class:`SamplingProfiler`) when one is set.
+
+    ``prior`` chains a second CostModel underneath (DESIGN.md §3.5): reads
+    that find no LOCAL observations fall through to the prior, and every
+    observation is WRITTEN THROUGH to it as well. The multi-tenant search
+    service points every session's model at one shared fleet-level prior, so
+    a brand-new tenant's first plan is already warm with what other tenants
+    learned — while ``save``/``to_dict`` serialize the local populations
+    only, keeping per-session persistence (WAL + ``<wal>.cost.json``)
+    byte-identical to the single-tenant world. Prior calls always happen
+    OUTSIDE the local lock (the prior takes its own), so many sessions can
+    share one prior without lock-order cycles.
     """
 
     VERSION = 1
 
     def __init__(self, path: str | None = None, *,
-                 default_exponent: float = 1.0, fallback=None):
+                 default_exponent: float = 1.0, fallback=None,
+                 prior: "CostModel | None" = None):
         #: where save() writes (JSON); None keeps the model in-memory only
         self.path = path
         #: exponent assumed before a bucket has seen two distinct sizes
@@ -140,6 +152,9 @@ class CostModel:
         self.default_exponent = default_exponent
         #: profiler consulted for tasks with no usable observations yet
         self.fallback = fallback
+        #: shared CostModel consulted after local populations miss and
+        #: written through on every observation (never serialized)
+        self.prior = prior
         self._lock = threading.RLock()
         self._buckets: dict[str, dict[str, _LogStats]] = {}   # family -> bucket
         self._families: dict[str, _LogStats] = {}             # pooled per family
@@ -201,6 +216,9 @@ class CostModel:
                     task.cost,
                     ratio_seconds if ratio_seconds is not None else seconds)
             self._n_observed += 1
+        if self.prior is not None:      # write-through, outside our lock
+            self.prior.observe(task, seconds, n_rows, batched=batched,
+                               ratio_seconds=ratio_seconds)
 
     def observe_convert(self, fmt_key: str, seconds: float, n_rows: int) -> None:
         """Record one actual uniform→native conversion (a prepared-data
@@ -210,18 +228,23 @@ class CostModel:
         with self._lock:
             self._converts.setdefault(fmt_key, _LogStats()).add(
                 math.log(n_rows), math.log(seconds))
+        if self.prior is not None:
+            self.prior.observe_convert(fmt_key, seconds, n_rows)
 
     def predict_convert(self, fmt_key: str, n_rows: int) -> float | None:
         """Conversion-seconds estimate for a format at a data size, or None
-        before the format has ever been observed converting."""
+        before the format has ever been observed converting (locally or in
+        the prior)."""
         if n_rows <= 0:
             return None
         with self._lock:
             stats = self._converts.get(fmt_key)
-            if stats is None or not stats.n:
-                return None
-            return math.exp(stats.predict(math.log(n_rows),
-                                          self.default_exponent))
+            if stats is not None and stats.n:
+                return math.exp(stats.predict(math.log(n_rows),
+                                              self.default_exponent))
+        if self.prior is not None:
+            return self.prior.predict_convert(fmt_key, n_rows)
+        return None
 
     def observe_eval(self, task: "TrainTask | str", seconds: float,
                      n_rows: int) -> None:
@@ -241,6 +264,8 @@ class CostModel:
                 self._eval_buckets.setdefault(family, {}).setdefault(
                     bucket, _LogStats()).add(x, y)
             self._evals.setdefault(family, _LogStats()).add(x, y)
+        if self.prior is not None:
+            self.prior.observe_eval(task, seconds, n_rows)
 
     def predict_eval(self, task: "TrainTask | str", n_rows: int) -> float | None:
         """Per-task eval-seconds estimate at an eval-split size, or None
@@ -260,9 +285,11 @@ class CostModel:
                 if stats is not None and stats.n:
                     return math.exp(stats.predict(x, self.default_exponent))
             stats = self._evals.get(family)
-            if stats is None or not stats.n:
-                return None
-            return math.exp(stats.predict(x, self.default_exponent))
+            if stats is not None and stats.n:
+                return math.exp(stats.predict(x, self.default_exponent))
+        if self.prior is not None:
+            return self.prior.predict_eval(task, n_rows)
+        return None
 
     def observe_result(self, result, n_rows: int, eval_rows: int = 0) -> None:
         """``on_result``-shaped adapter: feed a TaskResult straight in. Fused
@@ -318,7 +345,8 @@ class CostModel:
         """Size-law prediction in seconds, or None with no relevant data.
 
         Resolution order: exact (family, bucket) stats, then pooled family
-        stats. Monotone non-decreasing in ``n_rows`` by construction (slopes
+        stats, then the shared ``prior``'s own resolution (outside our
+        lock). Monotone non-decreasing in ``n_rows`` by construction (slopes
         are clamped to [0, 3]). ``batched=True`` reads the fused-execution
         law (amortized per-task seconds).
         """
@@ -334,6 +362,8 @@ class CostModel:
             pooled = self._families.get(key)
             if pooled is not None and pooled.n:
                 return math.exp(pooled.predict(x, self._family_exponent(key)))
+        if self.prior is not None:
+            return self.prior.predict(task, n_rows, batched=batched)
         return None
 
     def estimate(self, task: TrainTask, n_rows: int,
@@ -443,11 +473,11 @@ class CostModel:
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any], *, path: str | None = None,
-                  fallback=None) -> "CostModel":
+                  fallback=None, prior: "CostModel | None" = None) -> "CostModel":
         if d.get("version") != cls.VERSION:
             raise ValueError(f"unsupported cost-model version {d.get('version')!r}")
         cm = cls(path, default_exponent=float(d.get("default_exponent", 1.0)),
-                 fallback=fallback)
+                 fallback=fallback, prior=prior)
         for family, entry in d.get("families", {}).items():
             cm._families[family] = _LogStats(**entry["pooled"])
             ratio = _RatioStats(**entry.get("ratio", {}))
@@ -474,13 +504,16 @@ class CostModel:
 
     @classmethod
     def open(cls, path: str | None, *, fallback=None,
-             default_exponent: float = 1.0) -> "CostModel":
+             default_exponent: float = 1.0,
+             prior: "CostModel | None" = None) -> "CostModel":
         """Load the model at ``path`` if it exists, else start a fresh one
         that will save there. ``open(None)`` is a fresh in-memory model."""
         if path and os.path.exists(path):
             with open(path) as f:
-                return cls.from_dict(json.load(f), path=path, fallback=fallback)
-        return cls(path, default_exponent=default_exponent, fallback=fallback)
+                return cls.from_dict(json.load(f), path=path,
+                                     fallback=fallback, prior=prior)
+        return cls(path, default_exponent=default_exponent, fallback=fallback,
+                   prior=prior)
 
 
 def observed_drift(pairs: Iterable[tuple[float, float]]) -> float:

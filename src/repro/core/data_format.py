@@ -27,10 +27,13 @@ import dataclasses
 import hashlib
 import threading
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Hashable, Mapping
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.tenancy import TenantLedger
 
 __all__ = [
     "DenseMatrix",
@@ -228,14 +231,39 @@ class PreparedDataCache:
     time for the thread that converted and 0.0 for everyone else (waiters'
     blocked time is a startup transient, not a conversion), ``built`` tells
     observers (the CostModel conversion law) which measurement to learn from.
+
+    GOVERNANCE (DESIGN.md §3.5): with ``budget_bytes`` set, the cache holds
+    at most that many resident payload bytes — inserts that push past the
+    budget evict least-recently-USED entries (``get`` refreshes recency).
+    Three classes of entry are never victims: in-flight builds (``ready``
+    not set — waiters hold a reference to the entry, evicting it would
+    orphan them), pinned entries (``pin``/``unpin`` refcounts — executors
+    pin the variant they are training on, see ``interface.run_prepared``),
+    and the entry being inserted right now (so a single over-budget variant
+    still serves its own build). An evicted key simply becomes cold: the
+    next ``get`` is a miss whose owner rebuilds it exactly once, through
+    the same in-flight de-dup as the first build.
+
+    Per-tenant accounting: ``hits``/``misses``/``bytes_built`` are also
+    recorded against :func:`repro.core.tenancy.current_tenant` in the same
+    critical sections, so ``tenant_counters()`` sums EXACTLY to the global
+    counters (``bytes_built`` is cumulative — the ``bytes_cached`` gauge
+    drops on eviction and is not per-tenant attributable).
     """
 
-    def __init__(self):
-        self._entries: dict[Hashable, _PreparedEntry] = {}
+    def __init__(self, *, budget_bytes: int | None = None,
+                 name: str = "prepared"):
+        self.name = name
+        self._entries: OrderedDict[Hashable, _PreparedEntry] = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.bytes_built = 0
         self._bytes = 0
+        self._budget = budget_bytes
+        self._pins: dict[Hashable, int] = {}
+        self._ledger = TenantLedger()
 
     def get(self, key: Hashable, builder: Callable[[], object],
             ) -> tuple[object, float, bool]:
@@ -245,6 +273,7 @@ class PreparedDataCache:
             if owner:
                 entry = self._entries[key] = _PreparedEntry()
                 self.misses += 1       # misses = builds attempted
+                self._ledger.add("misses")
         if owner:
             t0 = time.perf_counter()
             try:
@@ -259,6 +288,10 @@ class PreparedDataCache:
             entry.nbytes = payload_nbytes(entry.value)
             with self._lock:
                 self._bytes += entry.nbytes
+                self.bytes_built += entry.nbytes
+                self._ledger.add("bytes", entry.nbytes)
+                self._entries.move_to_end(key)
+                self._evict_locked(keep=key)
             entry.ready.set()
             return entry.value, entry.seconds, True
         entry.ready.wait()
@@ -269,7 +302,51 @@ class PreparedDataCache:
             return self.get(key, builder)
         with self._lock:
             self.hits += 1             # hits = served from a completed build
+            self._ledger.add("hits")
+            if self._entries.get(key) is entry:   # may have been evicted
+                self._entries.move_to_end(key)
         return entry.value, 0.0, False
+
+    def _evict_locked(self, keep: Hashable = None) -> None:
+        """Evict LRU-first until within budget. Caller holds ``self._lock``."""
+        if self._budget is None:
+            return
+        while self._bytes > self._budget:
+            victim = next(
+                (k for k, e in self._entries.items()
+                 if k != keep and e.ready.is_set() and e.error is None
+                 and not self._pins.get(k)),
+                None)
+            if victim is None:
+                return                 # everything left is in-flight/pinned/keep
+            e = self._entries.pop(victim)
+            self._bytes -= e.nbytes
+            self.evictions += 1
+
+    def pin(self, key: Hashable) -> None:
+        """Protect ``key`` from eviction until a matching :meth:`unpin`.
+        Refcounted; pinning a key that is not (yet) resident is allowed."""
+        with self._lock:
+            self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key: Hashable) -> None:
+        with self._lock:
+            n = self._pins.get(key, 0) - 1
+            if n <= 0:
+                self._pins.pop(key, None)
+            else:
+                self._pins[key] = n
+            self._evict_locked()       # eviction deferred by the pin runs now
+
+    def set_budget(self, budget_bytes: int | None) -> None:
+        with self._lock:
+            self._budget = budget_bytes
+            self._evict_locked()
+
+    @property
+    def budget_bytes(self) -> int | None:
+        with self._lock:
+            return self._budget
 
     def contains(self, key: Hashable) -> bool:
         with self._lock:
@@ -278,6 +355,12 @@ class PreparedDataCache:
     def counters(self) -> tuple[int, int]:
         with self._lock:
             return self.hits, self.misses
+
+    def tenant_counters(self) -> dict[str, dict[str, float]]:
+        """Per-tenant ``{"hits", "misses", "bytes"}``; sums exactly to the
+        global ``hits``/``misses``/``bytes_built`` (satellite-2 invariant)."""
+        with self._lock:
+            return self._ledger.snapshot()
 
     @property
     def n_entries(self) -> int:
@@ -300,7 +383,11 @@ class PreparedDataCache:
             self._entries.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
+            self.bytes_built = 0
             self._bytes = 0
+            self._pins.clear()
+            self._ledger.clear()
 
 
 _GLOBAL_PREPARED = PreparedDataCache()

@@ -79,7 +79,7 @@ def stable_sigmoid(z: np.ndarray) -> np.ndarray:
 #: process-wide cache of compiled PREDICT programs — deliberately separate
 #: from fusion.compile_cache() (training programs) so the validation plane's
 #: hit/miss traffic is observable on its own (SearchStats.predict_compile_*)
-_PREDICT_CACHE = CompileCache()
+_PREDICT_CACHE = CompileCache(name="predict")
 
 
 def predict_compile_cache() -> CompileCache:

@@ -32,9 +32,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict
 from typing import Callable, Hashable, Sequence
 
 from repro.core.interface import TrainTask, get_estimator
+from repro.core.tenancy import TenantLedger
 
 __all__ = [
     "FusedBatch",
@@ -231,37 +233,124 @@ def charge_carrier(tasks: Sequence[TrainTask]) -> int:
 # Compile cache.
 # --------------------------------------------------------------------------
 
+#: Nominal resident size charged per cached program when the caller gives no
+#: measured ``nbytes``. Compiled callables don't expose their executable +
+#: constant footprint portably, so budget enforcement needs a proxy weight;
+#: 1 MiB makes ``budget_bytes`` read as "roughly N programs".
+DEFAULT_PROGRAM_NBYTES = 1 << 20
+
+
 class CompileCache:
     """Process-wide cache of compiled batched programs, keyed on the static
     shape signature. ``get`` returns the cached callable or builds (and
     counts a miss for) a new one; reusing the SAME jitted object is what
-    makes later batches of a signature skip XLA compilation entirely."""
+    makes later batches of a signature skip XLA compilation entirely.
 
-    def __init__(self):
-        self._fns: dict[Hashable, Callable] = {}
+    Governance mirrors :class:`repro.core.data_format.PreparedDataCache`
+    (DESIGN.md §3.5): an optional byte budget with LRU eviction (entries
+    weigh ``nbytes`` when the builder's caller knows it, else
+    :data:`DEFAULT_PROGRAM_NBYTES`), pin/unpin refcounts, and per-tenant
+    hit/miss/bytes ledgers updated in the same critical sections as the
+    global counters. No in-flight de-dup: racing builders both compile and
+    the first insert wins — same semantics as before, and the loser's bytes
+    are NOT charged (its program is dropped on the floor)."""
+
+    def __init__(self, *, name: str = "compile",
+                 budget_bytes: int | None = None):
+        self.name = name
+        self._fns: OrderedDict[Hashable, tuple[Callable, int]] = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.bytes_built = 0
+        self._bytes = 0
+        self._budget = budget_bytes
+        self._pins: dict[Hashable, int] = {}
+        self._ledger = TenantLedger()
 
-    def get(self, key: Hashable, builder: Callable[[], Callable]) -> Callable:
+    def get(self, key: Hashable, builder: Callable[[], Callable], *,
+            nbytes: int | None = None) -> Callable:
         with self._lock:
-            fn = self._fns.get(key)
-            if fn is not None:
+            got = self._fns.get(key)
+            if got is not None:
                 self.hits += 1
-                return fn
+                self._ledger.add("hits")
+                self._fns.move_to_end(key)
+                return got[0]
             self.misses += 1
+            self._ledger.add("misses")
         built = builder()          # build outside the lock: compiles are slow
+        weight = int(nbytes) if nbytes is not None else DEFAULT_PROGRAM_NBYTES
         with self._lock:
-            return self._fns.setdefault(key, built)
+            got = self._fns.get(key)
+            if got is not None:    # lost the insert race; keep the first
+                return got[0]
+            self._fns[key] = (built, weight)
+            self._bytes += weight
+            self.bytes_built += weight
+            self._ledger.add("bytes", weight)
+            self._evict_locked(keep=key)
+            return built
+
+    def _evict_locked(self, keep: Hashable = None) -> None:
+        if self._budget is None:
+            return
+        while self._bytes > self._budget:
+            victim = next((k for k in self._fns
+                           if k != keep and not self._pins.get(k)), None)
+            if victim is None:
+                return
+            _, weight = self._fns.pop(victim)
+            self._bytes -= weight
+            self.evictions += 1
+
+    def pin(self, key: Hashable) -> None:
+        with self._lock:
+            self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key: Hashable) -> None:
+        with self._lock:
+            n = self._pins.get(key, 0) - 1
+            if n <= 0:
+                self._pins.pop(key, None)
+            else:
+                self._pins[key] = n
+            self._evict_locked()
+
+    def set_budget(self, budget_bytes: int | None) -> None:
+        with self._lock:
+            self._budget = budget_bytes
+            self._evict_locked()
+
+    @property
+    def budget_bytes(self) -> int | None:
+        with self._lock:
+            return self._budget
+
+    def contains(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._fns
 
     def counters(self) -> tuple[int, int]:
         with self._lock:
             return self.hits, self.misses
 
+    def tenant_counters(self) -> dict[str, dict[str, float]]:
+        """Per-tenant ``{"hits", "misses", "bytes"}`` — sums exactly to the
+        globals; see :class:`repro.core.tenancy.TenantLedger`."""
+        with self._lock:
+            return self._ledger.snapshot()
+
     @property
     def n_entries(self) -> int:
         with self._lock:
             return len(self._fns)
+
+    @property
+    def bytes_cached(self) -> int:
+        with self._lock:
+            return self._bytes
 
     @property
     def hit_rate(self) -> float:
@@ -274,6 +363,11 @@ class CompileCache:
             self._fns.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
+            self.bytes_built = 0
+            self._bytes = 0
+            self._pins.clear()
+            self._ledger.clear()
 
 
 _GLOBAL_CACHE = CompileCache()

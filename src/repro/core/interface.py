@@ -305,16 +305,19 @@ def prepared_cache_key(est: Estimator, raw: DenseMatrix,
 
 
 def _prepare_for(est: Estimator, raw: DenseMatrix, params: Mapping[str, Any],
-                 cache, placement: Hashable) -> tuple[object, float]:
+                 cache, placement: Hashable) -> tuple[object, float, object, Hashable]:
     """Resolve ``est.prepare`` through the cache; returns
-    ``(prepared, convert_seconds)`` — builds go through :meth:`Estimator.
-    prepare` itself, so ``prepare`` overrides are honored on the executor
-    path (keyed per-estimator via :func:`prepared_cache_key`)."""
+    ``(prepared, convert_seconds, cache, key)`` — builds go through
+    :meth:`Estimator.prepare` itself, so ``prepare`` overrides are honored
+    on the executor path (keyed per-estimator via
+    :func:`prepared_cache_key`). The cache + key come back so callers can
+    ``pin`` the entry for the duration of training: under a byte budget
+    (DESIGN.md §3.5) the variant a worker is actively training on must not
+    be an eviction victim."""
     cache = cache if cache is not None else prepared_data_cache()
-    prepared, seconds, _ = cache.get(
-        prepared_cache_key(est, raw, params, placement),
-        lambda: est.prepare(raw, params))
-    return prepared, seconds
+    key = prepared_cache_key(est, raw, params, placement)
+    prepared, seconds, _ = cache.get(key, lambda: est.prepare(raw, params))
+    return prepared, seconds, cache, key
 
 
 def run_prepared(
@@ -338,10 +341,15 @@ def run_prepared(
     if type(est).run is not Estimator.run:
         model, secs = est.run(raw, params)
         return model, secs, 0.0
-    prepared, convert_seconds = _prepare_for(est, raw, params, cache, placement)
-    t0 = time.perf_counter()
-    model = est.train(prepared, dict(params))
-    return model, time.perf_counter() - t0, convert_seconds
+    prepared, convert_seconds, pcache, key = _prepare_for(
+        est, raw, params, cache, placement)
+    pcache.pin(key)
+    try:
+        t0 = time.perf_counter()
+        model = est.train(prepared, dict(params))
+        return model, time.perf_counter() - t0, convert_seconds
+    finally:
+        pcache.unpin(key)
 
 
 def run_prepared_batched(
@@ -364,11 +372,16 @@ def run_prepared_batched(
         return models, secs, 0.0
     _batch_format_params(est, params_list)   # mixed formats fail loud
     first = dict(params_list[0]) if params_list else {}
-    prepared, convert_seconds = _prepare_for(est, raw, first, cache, placement)
-    t0 = time.perf_counter()
-    models = est.train_batched(prepared, [dict(p) for p in params_list],
-                               cache=compile_cache)
-    return models, time.perf_counter() - t0, convert_seconds
+    prepared, convert_seconds, pcache, key = _prepare_for(
+        est, raw, first, cache, placement)
+    pcache.pin(key)
+    try:
+        t0 = time.perf_counter()
+        models = est.train_batched(prepared, [dict(p) for p in params_list],
+                                   cache=compile_cache)
+        return models, time.perf_counter() - t0, convert_seconds
+    finally:
+        pcache.unpin(key)
 
 
 _REGISTRY: dict[str, Callable[[], Estimator]] = {}

@@ -24,12 +24,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import random as _random
+from collections import deque
 from typing import Sequence
 
 from repro.core.interface import TrainTask
 
 __all__ = [
     "Assignment",
+    "FairShareArbiter",
     "charge_first_of_group",
     "charge_units",
     "schedule",
@@ -454,3 +456,116 @@ def simulate_replan(
         if eid not in busy:
             start_next(eid)
     return {"makespan": makespan, "replans": replans, "observed": observed}
+
+
+# --------------------------------------------------------------------------
+# Multi-tenant fair-share arbitration (DESIGN.md §3.5).
+# --------------------------------------------------------------------------
+
+class FairShareArbiter:
+    """Stride-scheduling arbiter over per-tenant unit queues.
+
+    The multi-tenant service (``repro.serve.search_service``) funnels every
+    active session's ready units through ONE of these; shared workers ask it
+    ``pop()`` whenever they go idle. Two modes:
+
+    * ``"fair_share"`` (stride scheduling): each tenant carries a *pass*
+      value; ``pop`` serves the ready tenant with the LOWEST pass and then
+      advances it by ``cost / weight`` of the dispatched unit. Over time
+      every tenant's dispatched cost converges to its weight share — a
+      1000-config tenant cannot starve a 10-config one, it merely runs
+      alongside it. When an idle tenant becomes ready again its pass is
+      caught up to the minimum ready pass (never reset below its own), so
+      sleeping does not bank credit — the classic stride/deficit guard.
+    * ``"fifo"``: strict arrival order of tenants — a tenant's queue drains
+      completely before a later tenant runs (head-of-line blocking on
+      purpose; this is the baseline ``serve_bench`` contrasts against).
+
+    Costs are the units' profile estimates (``None``/non-positive charges a
+    nominal 1.0 — unprofiled work still advances the pass). Pure data
+    structure, no locking: the service calls it under its own lock, and the
+    benchmark drives the SAME object from a deterministic event clock.
+    Ties break by tenant arrival order, so dispatch order is reproducible.
+    """
+
+    #: pass charge for units with no usable cost estimate
+    NOMINAL_COST = 1.0
+
+    def __init__(self, mode: str = "fair_share"):
+        if mode not in ("fair_share", "fifo"):
+            raise ValueError(f"unknown arbiter mode {mode!r}")
+        self.mode = mode
+        self._queues: dict[str, deque] = {}      # tenant -> deque[(item, cost)]
+        self._weights: dict[str, float] = {}
+        self._pass: dict[str, float] = {}
+        self._arrival: dict[str, int] = {}       # tenant -> registration order
+        self._n_seen = 0
+        #: total dispatched cost per tenant — the observed-share numerator
+        #: behind ServiceStats' drift reporting
+        self.dispatched_cost: dict[str, float] = {}
+
+    def ensure_tenant(self, tenant: str, weight: float = 1.0) -> None:
+        """Register ``tenant`` (idempotent; re-registering updates weight)."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be positive, got {weight}")
+        if tenant not in self._queues:
+            self._queues[tenant] = deque()
+            self._pass[tenant] = 0.0
+            self._arrival[tenant] = self._n_seen
+            self._n_seen += 1
+            self.dispatched_cost[tenant] = 0.0
+        self._weights[tenant] = float(weight)
+
+    def push(self, tenant: str, item, cost: float | None = None) -> None:
+        """Queue one unit for ``tenant`` (FIFO within the tenant)."""
+        self.ensure_tenant(tenant, self._weights.get(tenant, 1.0))
+        q = self._queues[tenant]
+        if not q:
+            # idle -> ready: catch the pass up to the busy minimum so the
+            # tenant gets service soon but claims no credit for idle time
+            ready = [self._pass[t] for t, qq in self._queues.items() if qq]
+            if ready:
+                self._pass[tenant] = max(self._pass[tenant], min(ready))
+        q.append((item, cost))
+
+    def pop(self):
+        """Dispatch decision: ``(tenant, item, cost)`` or None when empty."""
+        ready = [t for t, q in self._queues.items() if q]
+        if not ready:
+            return None
+        if self.mode == "fifo":
+            tenant = min(ready, key=lambda t: self._arrival[t])
+        else:
+            tenant = min(ready, key=lambda t: (self._pass[t], self._arrival[t]))
+        item, cost = self._queues[tenant].popleft()
+        charge = cost if cost is not None and cost > 0 else self.NOMINAL_COST
+        self._pass[tenant] += charge / self._weights[tenant]
+        self.dispatched_cost[tenant] += charge
+        return tenant, item, cost
+
+    def discard(self, tenant: str, pred) -> int:
+        """Drop queued units of ``tenant`` matching ``pred(item)`` (the
+        service's session-cancellation path); returns how many were removed."""
+        q = self._queues.get(tenant)
+        if not q:
+            return 0
+        kept = deque(e for e in q if not pred(e[0]))
+        removed = len(q) - len(kept)
+        self._queues[tenant] = kept
+        return removed
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def share_drift(self) -> float:
+        """max over tenants of |observed share − weight share| of dispatched
+        cost (0.0 until anything dispatched). The fairness gauge surfaced in
+        ``ServiceStats``: FIFO on mixed tenants drifts toward 1, fair-share
+        stays near 0 once steady."""
+        total = sum(self.dispatched_cost.values())
+        wsum = sum(self._weights[t] for t in self.dispatched_cost)
+        if total <= 0 or wsum <= 0:
+            return 0.0
+        return max(abs(c / total - self._weights[t] / wsum)
+                   for t, c in self.dispatched_cost.items())

@@ -197,10 +197,11 @@ class Session:
                 if default is not None and profiler.n_observed == 0:
                     # pathless declared model + a default location: warm-load
                     # what a previous session persisted there, keeping the
-                    # declared fallback/exponent
+                    # declared fallback/exponent/fleet prior
                     profiler = CostModel.open(
                         default, fallback=profiler.fallback,
-                        default_exponent=profiler.default_exponent)
+                        default_exponent=profiler.default_exponent,
+                        prior=profiler.prior)
                 else:
                     profiler.path = default
             self.cost_model = profiler
@@ -448,11 +449,25 @@ class Session:
             if supports:
                 eval_plan = EvalPlan(validate, spec.metric)
         cc = compile_cache()
-        cc_hits0, cc_misses0 = cc.counters()
         ec = predict_compile_cache()
-        ec_hits0, ec_misses0 = ec.counters()
         pc = getattr(backend, "prepared_cache", None) or prepared_data_cache()
-        pc_hits0, pc_misses0 = pc.counters()
+        # Under the multi-tenant service (serve.search_service) many sessions
+        # share these caches CONCURRENTLY, so a global before/after delta
+        # would blend every tenant's traffic into this session's stats. A
+        # backend that declares a ``tenant`` scopes the delta to that
+        # tenant's ledger instead (exact — the ledgers update in the same
+        # critical sections as the global counters, DESIGN.md §3.5).
+        tenant = getattr(backend, "tenant", None)
+
+        def _counts(cache):
+            if tenant is not None and hasattr(cache, "tenant_counters"):
+                snap = cache.tenant_counters().get(tenant, {})
+                return int(snap.get("hits", 0)), int(snap.get("misses", 0))
+            return cache.counters()
+
+        cc_hits0, cc_misses0 = _counts(cc)
+        ec_hits0, ec_misses0 = _counts(ec)
+        pc_hits0, pc_misses0 = _counts(pc)
         try:
             while True:
                 batch = tuner.propose()
@@ -620,13 +635,13 @@ class Session:
             self.stats.total_seconds = time.perf_counter() - t_start
             self.stats.n_tasks = len(self._results)
             self.stats.n_failures = sum(1 for r in self._results if not r.ok)
-            hits, misses = cc.counters()   # this session's cache traffic
+            hits, misses = _counts(cc)     # this session's cache traffic
             self.stats.compile_cache_hits = hits - cc_hits0
             self.stats.compile_cache_misses = misses - cc_misses0
-            ec_hits, ec_misses = ec.counters()
+            ec_hits, ec_misses = _counts(ec)
             self.stats.predict_compile_cache_hits = ec_hits - ec_hits0
             self.stats.predict_compile_cache_misses = ec_misses - ec_misses0
-            pc_hits, pc_misses = pc.counters()
+            pc_hits, pc_misses = _counts(pc)
             self.stats.prepared_cache_hits = pc_hits - pc_hits0
             self.stats.prepared_cache_misses = pc_misses - pc_misses0
             self.finished = True

@@ -1,3 +1,18 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.search_service import (
+    SearchHandle,
+    SearchService,
+    ServiceSaturated,
+    ServiceStats,
+    TenantStats,
+)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "SearchService",
+    "SearchHandle",
+    "ServiceStats",
+    "TenantStats",
+    "ServiceSaturated",
+]
