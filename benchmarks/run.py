@@ -24,6 +24,7 @@ import time
 import traceback
 
 from benchmarks import (
+    asha_bench,
     cost_model_bench,
     eval_bench,
     fusion_bench,
@@ -48,6 +49,7 @@ BENCHES = {
     "fusion": fusion_bench.full,
     "prepared_data": prepared_data_bench.full,
     "eval_plane": eval_bench.full,
+    "asha": asha_bench.full,
     "histogram_sweep": fusion_bench.histogram_tile_sweep,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
@@ -61,6 +63,7 @@ SMOKE_BENCHES = {
     "fusion": fusion_bench.smoke,
     "prepared_data": prepared_data_bench.smoke,
     "eval_plane": eval_bench.smoke,
+    "asha": asha_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
     "serve": serve_bench.smoke,
 }

@@ -1,8 +1,9 @@
-"""Multi-tenant search quickstart (DESIGN.md §3.5).
+"""Multi-tenant search quickstart (DESIGN.md §3.5 + §3.6).
 
-One process, one :class:`repro.serve.SearchService`: two tenants submit
-searches concurrently against the SAME shared executors and caches —
-fair-share arbitration interleaves their training units (weight 2:1), the
+One process, one :class:`repro.serve.SearchService`: three tenants submit
+searches concurrently against the SAME shared executors and caches — two
+exhaustive grids plus one ASHA session whose rung tasks interleave with
+them — fair-share arbitration interleaves their training units, the
 prepared-data cache is built once and hit by both, every observation feeds
 the fleet CostModel so later tenants plan warm, and the per-tenant ledger
 in the printed ServiceStats sums exactly to the shared caches' globals:
@@ -27,6 +28,13 @@ bob_spaces = [
     GridBuilder("forest").add_grid("n_estimators", [5])
                          .add_grid("max_depth", [8]).build(),
 ]
+# carol runs ADAPTIVE search (DESIGN.md §3.6): an ASHA ladder over gbdt,
+# sharing the same workers/caches as the grid tenants — rung tasks are
+# ordinary schedulable units to the fair-share arbiter
+carol_spaces = [
+    GridBuilder("gbdt").add_grid("eta", [0.1, 0.3, 0.9])
+                       .add_grid("max_depth", [4, 6]).build(),
+]
 
 # ----- shared data --------------------------------------------------------
 data = make_higgs_like(2000, seed=0)
@@ -49,15 +57,34 @@ with tempfile.TemporaryDirectory() as artifacts:
         bob = service.submit_search(
             SearchSpec(spaces=bob_spaces, n_executors=4),
             train_df, validate_df, tenant="bob", weight=1.0)
+        carol = service.submit_search(
+            SearchSpec(spaces=carol_spaces, n_executors=4, tuner="asha",
+                       tuner_args={"base_budget": 3, "max_budget": 12,
+                                   "eta": 2}),
+            train_df, validate_df, tenant="carol", weight=1.0)
 
-        for handle in (alice, bob):
+        carol_results = []
+        for handle in (alice, bob, carol):
             for result in handle.results():   # streams in completion order
+                if handle is carol:
+                    carol_results.append(result)
                 print(f"  [{handle.tenant}] {result.task.estimator} "
                       f"auc={-1.0 if result.score is None else result.score:.4f}")
             best = handle.multi_model().best(validate_df)
             print(f"{handle.tenant}: best {best.task.estimator} "
                   f"auc={best.score:.4f} "
                   f"(time-to-first-result {handle.time_to_first_result:.2f}s)")
+
+        # the §3.6 coexistence check: the adaptive session ran a real
+        # ladder on the SAME shared workers as the grid tenants — every
+        # carol unit is a rung task, promotions reached the budget cap,
+        # and promoted rungs resumed (prev_budget > 0) rather than
+        # retraining from scratch
+        from repro.core import RungTask
+        assert carol_results and all(
+            isinstance(r.task, RungTask) and r.ok for r in carol_results)
+        assert max(r.task.budget for r in carol_results) == 12
+        assert any(r.task.prev_budget > 0 for r in carol_results)
 
         stats = service.stats()
         print()

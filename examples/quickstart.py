@@ -73,3 +73,29 @@ print(f"validation plane: {st.eval_seconds_total:.2f}s scoring executor-side, "
 for m in scores[:5]:
     print(f"  auc={m.score:.4f}  {m.task.key()}")
 print(f"best: {scores[0].task.key()}")
+
+# ----- adaptive search (DESIGN.md §3.6) ----------------------------------
+# The grid above trained every config at its full budget. ASHA ladders the
+# budget instead: every gbdt config gets 10 boosting rounds, the top 1/eta
+# per rung RESUME (train_resumable — only the increment is trained) at 3x
+# the budget, and the losers are never scheduled again.
+asha_grid = (GridBuilder("gbdt")            # no "round" axis: ASHA owns it
+             .add_grid("eta", [0.1, 0.3, 0.9])
+             .add_grid("max_depth", [4, 6, 8])
+             .add_grid("max_bin", [32, 64, 128])
+             .build())
+asha_spec = SearchSpec(
+    spaces=[asha_grid],
+    n_executors=4,
+    tuner="asha",
+    tuner_args={"base_budget": 10, "max_budget": 90, "eta": 3},
+    profiler=SamplingProfiler(0.01),
+)
+asha_session = Session(asha_spec)
+rungs = list(asha_session.results(train_df, validate_df))
+spent = sum(r.task.budget - r.task.prev_budget for r in rungs if r.ok)
+best = max((r for r in rungs if r.ok and r.score is not None),
+           key=lambda r: r.score)
+print(f"asha: {len(rungs)} rung tasks, {spent} boosting rounds trained "
+      f"(grid at full budget would train {27 * 90}), "
+      f"best auc={best.score:.4f} at {best.task.key()}")

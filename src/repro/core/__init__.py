@@ -32,6 +32,8 @@ from repro.core.fusion import (
 from repro.core.grid import GridBuilder, SearchSpace, enumerate_tasks
 from repro.core.interface import (
     Estimator,
+    ResumeState,
+    RungTask,
     TaskResult,
     TrainTask,
     TrainedModel,
@@ -40,6 +42,7 @@ from repro.core.interface import (
     register_estimator,
     run_prepared,
     run_prepared_batched,
+    run_prepared_resumable,
     unregister_estimator,
 )
 from repro.core.profiler import AnalyticProfiler, ProfileReport, SamplingProfiler, attach_costs
@@ -65,6 +68,8 @@ from repro.core.searcher import ModelSearcher
 from repro.core.session import SearchStats, Session
 from repro.core.spec import POLICIES, SearchSpec
 from repro.core.tuner import (
+    TUNER_KINDS,
+    AshaController,
     GridSearchTuner,
     RandomSearchTuner,
     SuccessiveHalvingTuner,

@@ -69,6 +69,26 @@ def param_bucket(params: Mapping[str, Any]) -> str:
     return ",".join(parts)
 
 
+def _law_params(task) -> Mapping[str, Any]:
+    """Params the TRAIN size/bucket laws key on.
+
+    A rung task's params carry its ABSOLUTE budget (so prepared-data and
+    compile-cache keys stay stable across rungs, §3.6), but the train time
+    it reports is for the INCREMENT it actually ran — resuming at budget
+    270 from 90 costs 180 rounds, not 270. Swapping the budget param to
+    ``budget - prev_budget`` buckets rungs by the work they do, so rung
+    observations and full-run observations share one consistent law. Eval
+    laws keep the absolute params: scoring cost depends on the model the
+    rung PRODUCED (all 270 trees), not on the increment."""
+    bp = getattr(task, "budget_param", None)
+    budget = getattr(task, "budget", None)
+    if not bp or budget is None:
+        return task.params
+    p = dict(task.params)
+    p[bp] = max(1, int(budget) - int(getattr(task, "prev_budget", 0) or 0))
+    return p
+
+
 @dataclasses.dataclass
 class _LogStats:
     """Incremental least-squares over (x=log rows, y=log seconds)."""
@@ -209,7 +229,7 @@ class CostModel:
         x, y = math.log(n_rows), math.log(seconds)
         with self._lock:
             fam = self._buckets.setdefault(key, {})
-            fam.setdefault(param_bucket(task.params), _LogStats()).add(x, y)
+            fam.setdefault(param_bucket(_law_params(task)), _LogStats()).add(x, y)
             self._families.setdefault(key, _LogStats()).add(x, y)
             if task.cost is not None and task.cost > 0:
                 self._ratios.setdefault(key, _RatioStats()).add(
@@ -356,7 +376,7 @@ class CostModel:
         x = math.log(n_rows)
         with self._lock:
             fam = self._buckets.get(key, {})
-            stats = fam.get(param_bucket(task.params))
+            stats = fam.get(param_bucket(_law_params(task)))
             if stats is not None and stats.n:
                 return math.exp(stats.predict(x, self._family_exponent(key)))
             pooled = self._families.get(key)
@@ -382,7 +402,7 @@ class CostModel:
         key = self._family_key(task.estimator, batched)
         with self._lock:
             fam = self._buckets.get(key, {})
-            stats = fam.get(param_bucket(task.params))
+            stats = fam.get(param_bucket(_law_params(task)))
             if stats is not None and stats.n and n_rows > 0:
                 return math.exp(stats.predict(
                     math.log(n_rows), self._family_exponent(key)))

@@ -43,11 +43,13 @@ from repro.core.evaluation import EvalPlan, evaluate_models
 from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
 from repro.core.fusion import FusedBatch, charge_carrier
 from repro.core.interface import (
+    RungTask,
     TaskResult,
     TrainTask,
     get_estimator,
     run_prepared,
     run_prepared_batched,
+    run_prepared_resumable,
 )
 from repro.core.scheduler import Assignment
 
@@ -101,6 +103,26 @@ def _run_fused_unit(unit: FusedBatch, data, eid: int,
                        error=repr(e), batch_size=len(members))
             for m in members
         ]
+
+
+def _train_solo(task, data, cache: PreparedDataCache | None = None,
+                placement=None):
+    """Train one solo task, dispatching :class:`RungTask`s through the
+    resumable path (DESIGN.md §3.6) so a promoted rung continues from its
+    carried state instead of retraining from scratch; plain tasks keep the
+    ``run_prepared`` path unchanged. Every solo call site (workers,
+    driver-inline leftovers, mesh slices, the multi-tenant service) goes
+    through here so rung semantics cannot diverge. Returns
+    ``(estimator, model, train_seconds, convert_seconds, resume_state)``."""
+    est = get_estimator(task.estimator)
+    if isinstance(task, RungTask):
+        model, secs, conv, rstate = run_prepared_resumable(
+            est, data, task.params, budget=task.budget, state=task.state,
+            cache=cache, placement=placement)
+        return est, model, secs, conv, rstate
+    model, secs, conv = run_prepared(est, data, task.params,
+                                     cache=cache, placement=placement)
+    return est, model, secs, conv, None
 
 
 def _score_solo(est, model, validate: EvalPlan | None,
@@ -207,6 +229,9 @@ class LocalExecutorPool:
                                   score=res.score,
                                   convert_seconds=res.convert_seconds,
                                   eval_seconds=res.eval_seconds))
+                    if res.resume_state is not None:
+                        self.wal.record_resume(res.task.task_id,
+                                               res.resume_state)
             return True
 
         def execute_fused(eid: int, unit: FusedBatch) -> None:
@@ -250,14 +275,14 @@ class LocalExecutorPool:
             try:
                 if self.failure_hook is not None:
                     self.failure_hook(eid, task)  # may raise ExecutorFailure
-                est = get_estimator(task.estimator)
-                model, secs, conv = run_prepared(est, data, task.params,
-                                                 cache=self.prepared_cache)
+                est, model, secs, conv, rstate = _train_solo(
+                    task, data, cache=self.prepared_cache)
                 score, eval_s = _score_solo(est, model, validate,
                                             self.prepared_cache)
                 res = TaskResult(task=task, model=model, train_seconds=secs,
                                  executor_id=eid, convert_seconds=conv,
-                                 score=score, eval_seconds=eval_s)
+                                 score=score, eval_seconds=eval_s,
+                                 resume_state=rstate)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(task.task_id, None)
@@ -389,19 +414,21 @@ class LocalExecutorPool:
                             yield res
                     continue
                 if not self.wal.is_done(task.task_id) and task.task_id not in results:
-                    est = get_estimator(task.estimator)
                     try:
-                        model, secs, conv = run_prepared(
-                            est, data, task.params, cache=self.prepared_cache)
+                        est, model, secs, conv, rstate = _train_solo(
+                            task, data, cache=self.prepared_cache)
                         score, eval_s = _score_solo(est, model, validate,
                                                     self.prepared_cache)
                         res = TaskResult(task=task, model=model, train_seconds=secs,
                                          executor_id=-1, convert_seconds=conv,
-                                         score=score, eval_seconds=eval_s)
+                                         score=score, eval_seconds=eval_s,
+                                         resume_state=rstate)
                         self.wal.record(WALRecord(task_id=task.task_id, key=task.key(),
                                                   seconds=secs, executor_id=-1,
                                                   score=score, convert_seconds=conv,
                                                   eval_seconds=eval_s))
+                        if rstate is not None:
+                            self.wal.record_resume(task.task_id, rstate)
                     except Exception as e:
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
                     results[task.task_id] = res
@@ -595,16 +622,16 @@ class MeshSliceExecutorPool:
         ``task_runner`` owns its payloads, so scoring is skipped."""
         conv = 0.0
         score, eval_s = None, 0.0
+        rstate = None
         try:
             if self.failure_hook is not None:
                 self.failure_hook(eid, task)  # may raise ExecutorFailure
             if self.task_runner is not None:
                 model, secs = self.task_runner(task, sl, data)
             else:
-                est = get_estimator(task.estimator)
-                model, secs, conv = run_prepared(
-                    est, data, task.params,
-                    cache=self.prepared_cache, placement=self._placement(sl))
+                est, model, secs, conv, rstate = _train_solo(
+                    task, data, cache=self.prepared_cache,
+                    placement=self._placement(sl))
                 score, eval_s = _score_solo(est, model, validate,
                                             self.prepared_cache,
                                             placement=self._placement(sl))
@@ -615,9 +642,12 @@ class MeshSliceExecutorPool:
         self.wal.record(WALRecord(task_id=task.task_id, key=task.key(), seconds=secs,
                                   executor_id=eid, score=score,
                                   convert_seconds=conv, eval_seconds=eval_s))
+        if rstate is not None:
+            self.wal.record_resume(task.task_id, rstate)
         return TaskResult(task=task, model=model, train_seconds=secs,
                           executor_id=eid, convert_seconds=conv,
-                          score=score, eval_seconds=eval_s)
+                          score=score, eval_seconds=eval_s,
+                          resume_state=rstate)
 
     def _run_fused(self, eid: int, unit: FusedBatch, sl, data,
                    validate: EvalPlan | None = None) -> list[TaskResult]:

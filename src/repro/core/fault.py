@@ -21,7 +21,7 @@ import os
 import threading
 from typing import Iterable
 
-from repro.core.interface import TrainTask
+from repro.core.interface import ResumeState, TrainTask
 
 __all__ = ["SearchWAL", "ExecutorFailure", "WALRecord"]
 
@@ -57,13 +57,22 @@ class SearchWAL:
         self.path = path
         self._lock = threading.Lock()
         self._done: dict[int, WALRecord] = {}
+        #: task_id → wire-form ResumeState (adaptive search, DESIGN.md §3.6);
+        #: kept as wire dicts so loading a WAL never imports family payloads
+        self._resume: dict[int, dict] = {}
         if path and os.path.exists(path):
             with open(path) as f:
                 for line in f:
                     line = line.strip()
                     if not line:
                         continue
-                    rec = WALRecord(**json.loads(line))
+                    obj = json.loads(line)
+                    # records are dispatched on the optional "kind" field;
+                    # completion lines (old WALs: every line) have none
+                    if obj.get("kind") == "resume":
+                        self._resume[int(obj["task_id"])] = obj["state"]
+                        continue
+                    rec = WALRecord(**obj)
                     self._done[rec.task_id] = rec
 
     # -- write side -------------------------------------------------------
@@ -73,6 +82,18 @@ class SearchWAL:
             if self.path:
                 with open(self.path, "a") as f:
                     f.write(json.dumps(dataclasses.asdict(rec)) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+
+    def record_resume(self, task_id: int, state: ResumeState) -> None:
+        """Journal a rung's carryover so ``Session.resume`` restarts warm."""
+        wire = state.to_wire()
+        with self._lock:
+            self._resume[int(task_id)] = wire
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps({"kind": "resume", "task_id": int(task_id),
+                                        "state": wire}) + "\n")
                     f.flush()
                     os.fsync(f.fileno())
 
@@ -88,3 +109,9 @@ class SearchWAL:
     def remaining(self, tasks: Iterable[TrainTask]) -> list[TrainTask]:
         with self._lock:
             return [t for t in tasks if t.task_id not in self._done]
+
+    def resume_state(self, task_id: int) -> ResumeState | None:
+        """The journalled carryover of a completed rung, if any."""
+        with self._lock:
+            wire = self._resume.get(int(task_id))
+        return None if wire is None else ResumeState.from_wire(wire)

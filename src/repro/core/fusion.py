@@ -35,7 +35,7 @@ import threading
 from collections import OrderedDict
 from typing import Callable, Hashable, Sequence
 
-from repro.core.interface import TrainTask, get_estimator
+from repro.core.interface import RungTask, TrainTask, get_estimator
 from repro.core.tenancy import TenantLedger
 
 __all__ = [
@@ -423,6 +423,12 @@ def fuse_tasks(
     from repro.core.data_format import format_key
 
     for i, t in enumerate(tasks):
+        if isinstance(t, RungTask):
+            # rung tasks run solo: the batched trainer can neither consume a
+            # carried ResumeState nor produce one per member (§3.6), and a
+            # promoted rung's warm resume beats amortized batching anyway
+            passthrough.append((i, t))
+            continue
         est = get_estimator(t.estimator)
         sig = est.fuse_signature(t.params)
         if sig is None:

@@ -26,7 +26,9 @@ cache — see the migration notes in DESIGN.md §3.3).
 from __future__ import annotations
 
 import abc
+import base64
 import dataclasses
+import io
 import time
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
@@ -43,6 +45,8 @@ __all__ = [
     "Estimator",
     "TrainedModel",
     "TrainTask",
+    "RungTask",
+    "ResumeState",
     "TaskResult",
     "register_estimator",
     "unregister_estimator",
@@ -52,7 +56,59 @@ __all__ = [
     "prepared_cache_key",
     "run_prepared",
     "run_prepared_batched",
+    "run_prepared_resumable",
 ]
+
+
+def _wire_encode(value):
+    """JSON-safe encoding of one ResumeState payload value (ndarray → b64 npy)."""
+    if isinstance(value, np.ndarray):
+        buf = io.BytesIO()
+        np.save(buf, value, allow_pickle=False)
+        return {"__nd__": base64.b64encode(buf.getvalue()).decode("ascii")}
+    if isinstance(value, (np.integer,)):
+        return int(value)
+    if isinstance(value, (np.floating,)):
+        return float(value)
+    return value
+
+
+def _wire_decode(value):
+    if isinstance(value, dict) and "__nd__" in value:
+        return np.load(io.BytesIO(base64.b64decode(value["__nd__"])),
+                       allow_pickle=False)
+    return value
+
+
+@dataclasses.dataclass
+class ResumeState:
+    """Opaque-to-the-driver carryover of a partially trained config.
+
+    ``payload`` maps names to numpy arrays / scalars — whatever the family
+    needs to continue bit-exactly (trees/margins for gbdt, weight + Adam
+    moment stacks + PRNG key for the step families). ``budget`` is the
+    ABSOLUTE number of budget units already trained (``Estimator.budget_param``
+    units), so a resume call trains only ``budget_target - budget`` more.
+
+    States are tied to the prepared dataset they were trained on (gbdt's
+    carried margin has one entry per training row); resuming against a
+    different dataset is undefined. :meth:`to_wire`/:meth:`from_wire` give a
+    JSON-safe form for the WAL so ``Session.resume`` can restart mid-rung.
+    """
+
+    estimator: str
+    budget: int
+    payload: dict[str, Any]
+
+    def to_wire(self) -> dict[str, Any]:
+        return {"estimator": self.estimator, "budget": int(self.budget),
+                "payload": {k: _wire_encode(v) for k, v in self.payload.items()}}
+
+    @classmethod
+    def from_wire(cls, wire: Mapping[str, Any]) -> "ResumeState":
+        return cls(estimator=str(wire["estimator"]), budget=int(wire["budget"]),
+                   payload={k: _wire_decode(v)
+                            for k, v in dict(wire["payload"]).items()})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +130,32 @@ class TrainTask:
     def key(self) -> str:
         items = ",".join(f"{k}={self.params[k]!r}" for k in sorted(self.params))
         return f"{self.estimator}({items})"
+
+
+@dataclasses.dataclass(frozen=True)
+class RungTask(TrainTask):
+    """A partial-budget training unit in an adaptive search (DESIGN.md §3.6).
+
+    Subclasses :class:`TrainTask`, so the whole planning surface — profiler,
+    CostModel, scheduler, WAL, executor pools — handles it unchanged.
+    ``params`` already carry ``budget_param = budget`` (the ABSOLUTE target),
+    which keeps ``key()`` distinct per rung and — because budget params are
+    never format params — the prepared-data and compile-cache keys identical
+    across a config's rungs, so a promoted rung is a warm cache hit.
+
+    ``state`` is the previous rung's :class:`ResumeState` (None at rung 0, or
+    when the family cannot resume — executors then train from scratch at the
+    absolute budget, which is correct, just not warm). Excluded from equality
+    and repr: two rungs are the same unit regardless of carried weights.
+    """
+
+    config_id: int = -1
+    rung: int = 0
+    budget: int = 0
+    prev_budget: int = 0
+    budget_param: str = ""
+    state: "ResumeState | None" = dataclasses.field(
+        default=None, compare=False, repr=False)
 
 
 @dataclasses.dataclass
@@ -103,6 +185,10 @@ class TaskResult:
     #: data conversion for the task that built the entry). Feeds the
     #: CostModel's per-family eval law — never part of ``train_seconds``.
     eval_seconds: float = 0.0
+    #: carryover for the NEXT rung when ``task`` was a :class:`RungTask` and
+    #: the family supports warm resume; journalled in the WAL alongside the
+    #: completion record so mid-rung restarts stay warm. None otherwise.
+    resume_state: "ResumeState | None" = None
 
     @property
     def ok(self) -> bool:
@@ -165,6 +251,12 @@ class Estimator(abc.ABC):
     #: default ``eval_dense`` (features only; labels stay host-side for the
     #: numpy metric) serves all four.
     eval_format: str = "eval_dense"
+    #: the hyperparameter that acts as the resumable-budget axis for adaptive
+    #: search (gbdt ``"round"``, forest ``"n_estimators"``, logreg/mlp
+    #: ``"steps"``). None = the family declares no budget axis; rung tasks
+    #: then need an explicit ``budget_param`` from the tuner, and the default
+    #: :meth:`train_resumable` retrains from scratch each rung.
+    budget_param: str | None = None
 
     @abc.abstractmethod
     def train(self, data: Any, params: Mapping[str, Any]) -> TrainedModel:
@@ -172,6 +264,27 @@ class Estimator(abc.ABC):
 
     def default_params(self) -> dict[str, Any]:
         return {}
+
+    # ---- adaptive search (DESIGN.md §3.6) -------------------------------
+    def train_resumable(self, data: Any, params: Mapping[str, Any], *,
+                        budget: int, state: "ResumeState | None" = None,
+                        ) -> tuple[TrainedModel, "ResumeState | None"]:
+        """Train to the ABSOLUTE ``budget`` (in :attr:`budget_param` units),
+        warm-starting from ``state`` when given; returns ``(model, state')``
+        where ``state'`` resumes the next rung.
+
+        This default keeps third-party estimators working in adaptive
+        searches without any new code: it trains from scratch at the
+        absolute budget and returns no carryover — correct semantics, no
+        warm start. The shipped families override it (trees append
+        rounds/trees bit-exactly; step families carry weights + Adam moments
+        + PRNG key through the masked-carry scan machinery).
+        """
+        del state
+        p = dict(params)
+        if self.budget_param:
+            p[self.budget_param] = int(budget)
+        return self.train(data, p), None
 
     # ---- prepared-data plane (DESIGN.md §3.3) ---------------------------
     def format_params(self, params: Mapping[str, Any]) -> dict[str, Any]:
@@ -348,6 +461,41 @@ def run_prepared(
         t0 = time.perf_counter()
         model = est.train(prepared, dict(params))
         return model, time.perf_counter() - t0, convert_seconds
+    finally:
+        pcache.unpin(key)
+
+
+def run_prepared_resumable(
+    est: Estimator,
+    raw: DenseMatrix,
+    params: Mapping[str, Any],
+    *,
+    budget: int,
+    state: "ResumeState | None" = None,
+    cache=None,
+    placement: Hashable = None,
+) -> tuple[TrainedModel, float, float, "ResumeState | None"]:
+    """Cache-resolved :meth:`Estimator.train_resumable`: returns
+    ``(model, train_seconds, convert_seconds, new_state)``. The prepared-data
+    resolution is IDENTICAL to :func:`run_prepared` — budget params are never
+    format params, so every rung of a config is a warm cache hit after the
+    first. A subclass that overrides :meth:`Estimator.run` (pre-§3.3 code)
+    takes its own uncached path at the absolute budget, with no carryover.
+    """
+    if type(est).run is not Estimator.run:
+        p = dict(params)
+        if est.budget_param:
+            p[est.budget_param] = int(budget)
+        model, secs = est.run(raw, p)
+        return model, secs, 0.0, None
+    prepared, convert_seconds, pcache, key = _prepare_for(
+        est, raw, params, cache, placement)
+    pcache.pin(key)
+    try:
+        t0 = time.perf_counter()
+        model, new_state = est.train_resumable(
+            prepared, dict(params), budget=int(budget), state=state)
+        return model, time.perf_counter() - t0, convert_seconds, new_state
     finally:
         pcache.unpin(key)
 

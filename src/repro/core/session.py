@@ -97,6 +97,8 @@ class SearchStats:
         self.n_tasks = 0
         self.n_failures = 0
         self.n_replans = 0              # mid-round drift-triggered replans
+        self.n_rung_kills = 0           # rung tasks cancelled mid-flight by an
+                                        # adaptive tuner (ASHA early_kill, §3.6)
         self.n_model_estimates = 0      # tasks costed by the CostModel (free)
         self.n_profiled = 0             # tasks that still needed the profiler
         self.policy = ""
@@ -468,12 +470,40 @@ class Session:
         cc_hits0, cc_misses0 = _counts(cc)
         ec_hits0, ec_misses0 = _counts(ec)
         pc_hits0, pc_misses0 = _counts(pc)
+        if tuner.is_dynamic and validate is None:
+            raise ValueError("dynamic tuners need validation data")
+        # adaptive tuners (AshaController) expose kill_candidates(): rung
+        # members already outperformed by enough siblings, cancelled through
+        # the same stream-close + drain path a drift replan uses (§3.6)
+        kill_fn = (getattr(tuner, "kill_candidates", None)
+                   if tuner.is_dynamic else None)
+        killed_ids: set[int] = set()
         try:
             while True:
-                batch = tuner.propose()
+                budget_left = (None if spec.max_tasks is None
+                               else max(0, spec.max_tasks - len(self._results)))
+                batch = tuner.suggest(budget_left)
                 if not batch:
                     break
-                batch = self.wal.remaining(batch)
+                remaining = self.wal.remaining(batch)
+                if tuner.is_dynamic and len(remaining) < len(batch):
+                    # WAL resume mid-adaptive-search: replay the journalled
+                    # completions (score + carried rung state) so the tuner
+                    # sees the same feedback it would have streamed live —
+                    # otherwise it would re-suggest this batch forever
+                    live = {t.task_id for t in remaining}
+                    recs = self.wal.completed()
+                    for t in batch:
+                        if t.task_id in live:
+                            continue
+                        rec = recs[t.task_id]
+                        tuner.report(TaskResult(
+                            task=t, model=None, train_seconds=rec.seconds,
+                            executor_id=rec.executor_id, score=rec.score,
+                            convert_seconds=rec.convert_seconds,
+                            eval_seconds=rec.eval_seconds,
+                            resume_state=self.wal.resume_state(t.task_id)))
+                batch = remaining
                 if not batch:
                     if not tuner.is_dynamic:
                         break
@@ -535,6 +565,12 @@ class Session:
                         cm.observe_result(
                             res, train.n_rows,
                             validate.n_rows if validate is not None else 0)
+                    if tuner.is_dynamic:
+                        # feed the tuner the moment the result lands — this
+                        # is what lets ASHA promote (and kill) mid-round
+                        if res.ok and res.score is None and res.model is not None:
+                            res.score = score_of(res)
+                        tuner.report(res)
                     if on_result is not None:
                         on_result(res)
 
@@ -574,6 +610,14 @@ class Session:
                                     and observed_drift(window) > spec.replan_threshold):
                                 want_replan = True
                                 break
+                            if kill_fn is not None:
+                                kills = set(kill_fn()) - done_ids
+                                if kills:
+                                    # cancel the stream; the kill takes effect
+                                    # when the survivors are re-planned below
+                                    killed_ids |= kills
+                                    want_replan = True
+                                    break
                     finally:
                         if stream_close is not None:  # plain iterators lack close
                             stream_close()  # cancels workers if we broke out early
@@ -590,6 +634,11 @@ class Session:
                         break
                     pending = [t for t in pending if t.task_id not in done_ids
                                and not self.wal.is_done(t.task_id)]
+                    if killed_ids:
+                        survivors = [t for t in pending
+                                     if t.task_id not in killed_ids]
+                        self.stats.n_rung_kills += len(pending) - len(survivors)
+                        pending = survivors
                     if not want_replan or not pending:
                         break
                     # feedback: re-cost the remainder, then rebalance — never
@@ -619,13 +668,8 @@ class Session:
                     cm.save()          # per-round checkpoint of the model
                 if self.stop_reason:
                     break
-                # 4. feed scores back to dynamic tuners (reusing any scores
-                # the target_metric budget already computed)
-                if tuner.is_dynamic:
-                    if validate is None:
-                        raise ValueError("dynamic tuners need validation data")
-                    tuner.observe([(r.task, score_of(r))
-                                   for r in round_results if r.ok])
+                # 4. dynamic tuners were fed per-result inside take() — by
+                # here the controller has already absorbed this round
         finally:
             if cm is not None and cm.path:
                 try:

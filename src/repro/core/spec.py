@@ -31,7 +31,7 @@ from typing import Any, Mapping
 from repro.core.grid import GridBuilder, SearchSpace
 from repro.core.profiler import AnalyticProfiler, SamplingProfiler
 from repro.core.results import METRICS
-from repro.core.tuner import GridSearchTuner, Tuner, make_tuner
+from repro.core.tuner import TUNER_KINDS, GridSearchTuner, Tuner, make_tuner
 
 __all__ = ["SearchSpec", "POLICIES"]
 
@@ -55,8 +55,17 @@ class SearchSpec:
     spaces: tuple[SearchSpace, ...] = ()
     n_executors: int = 1
     policy: str = "lpt"
-    #: a Tuner instance, a {"kind": ..., **kwargs} mapping, or None (grid)
+    #: a Tuner instance, a kind name ("grid" | "random" | "asha" |
+    #: "surrogate", configured via ``tuner_args``), a {"kind": ..., **kwargs}
+    #: mapping, or None (grid). Kind names / mappings are validated at
+    #: construction and materialised fresh per Session — prefer them over
+    #: instances for anything resumable: a Tuner INSTANCE carries its own
+    #: mutable state across Session.resume.
     tuner: Any = None
+    #: kwargs for a kind-name ``tuner`` (e.g. ``{"budget_param": "round",
+    #: "base_budget": 10, "max_budget": 270}`` for "asha"); probe-validated
+    #: at construction so a bad budget/eta fails HERE, not mid-search
+    tuner_args: Mapping[str, Any] | None = None
     #: a profiler instance, a {"kind": "sampling"|"analytic", ...} mapping,
     #: or None (sampling at 3%, the ModelSearcher default)
     profiler: Any = None
@@ -112,8 +121,22 @@ class SearchSpec:
             raise ValueError(f"unknown metric {self.metric!r}; known: {sorted(METRICS)}")
         if isinstance(self.tuner, Mapping) and "kind" not in self.tuner:
             raise ValueError("declarative tuner mapping needs a 'kind' key")
-        if (self.tuner is not None and not isinstance(self.tuner, (Tuner, Mapping))):
-            raise TypeError("tuner must be a Tuner, a {'kind': ...} mapping, or None")
+        if (self.tuner is not None
+                and not isinstance(self.tuner, (Tuner, Mapping, str))):
+            raise TypeError("tuner must be a Tuner, a kind name, a "
+                            "{'kind': ...} mapping, or None")
+        if self.tuner_args is not None:
+            if not isinstance(self.tuner, str):
+                raise ValueError("tuner_args applies only when tuner is a "
+                                 "kind name (e.g. tuner='asha')")
+            object.__setattr__(self, "tuner_args", dict(self.tuner_args))
+        if isinstance(self.tuner, str):
+            if self.tuner not in TUNER_KINDS:
+                raise ValueError(f"unknown tuner {self.tuner!r}; "
+                                 f"known: {sorted(TUNER_KINDS)}")
+            # probe-construct once so bad tuner_args (missing budgets, eta<2,
+            # unknown kwargs) fail at construction, Propheticus-style
+            make_tuner(self.tuner, spaces, **(self.tuner_args or {}))
         if isinstance(self.profiler, Mapping):
             kind = self.profiler.get("kind")
             if kind not in _PROFILER_KINDS:
@@ -154,6 +177,9 @@ class SearchSpec:
             return GridSearchTuner(self.spaces)
         if isinstance(self.tuner, Tuner):
             return self.tuner
+        if isinstance(self.tuner, str):
+            return make_tuner(self.tuner, self.spaces,
+                              **(self.tuner_args or {}))
         kw = dict(self.tuner)
         return make_tuner(kw.pop("kind"), self.spaces, **kw)
 

@@ -65,6 +65,23 @@ def paper_search_space(scale: float = 1.0):
     return [gbdt, mlp, forest, logreg]
 
 
+def _parse_tuner_args(pairs) -> dict:
+    """``--tuner-arg k=v`` values: int, then float, then bare string."""
+    out = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--tuner-arg wants k=v, got {pair!r}")
+        k, v = pair.split("=", 1)
+        for conv in (int, float):
+            try:
+                v = conv(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
 def run_tabular(args) -> int:
     data = (make_higgs_like(args.rows, seed=0) if args.dataset == "higgs"
             else make_secom_like(seed=0))
@@ -79,6 +96,9 @@ def run_tabular(args) -> int:
         policy=args.policy,
         profiler=(SamplingProfiler(args.sample_rate) if args.profiler == "sampling"
                   else AnalyticProfiler()),
+        tuner=args.tuner,
+        tuner_args=(_parse_tuner_args(args.tuner_arg)
+                    if args.tuner is not None else None),
         metric=args.metric,
         seed=0,
         wal_path=args.wal,
@@ -218,6 +238,16 @@ def main() -> int:
                    choices=("lpt", "random", "round_robin", "dynamic", "lpt_dynamic"))
     p.add_argument("--profiler", default="sampling", choices=("sampling", "analytic"))
     p.add_argument("--sample-rate", type=float, default=0.03)
+    p.add_argument("--tuner", default=None,
+                   choices=("grid", "random", "asha", "surrogate"),
+                   help="search strategy over the declared spaces "
+                        "(default: exhaustive grid). 'asha' runs adaptive "
+                        "successive halving on the streaming eval plane "
+                        "(DESIGN.md §3.6)")
+    p.add_argument("--tuner-arg", action="append", metavar="K=V",
+                   help="tuner kwarg, repeatable — e.g. --tuner asha "
+                        "--tuner-arg base_budget=10 --tuner-arg "
+                        "max_budget=270 --tuner-arg eta=3")
     p.add_argument("--metric", default="auc")
     p.add_argument("--scale", type=float, default=0.3,
                    help="search-space budget scale (1.0 = paper-sized)")
@@ -253,6 +283,8 @@ def main() -> int:
     args = p.parse_args()
     if args.resume and not args.wal:
         p.error("--resume requires --wal")
+    if args.tuner_arg and not args.tuner:
+        p.error("--tuner-arg requires --tuner")
     return run_tabular(args) if args.workload == "tabular" else run_lm(args)
 
 

@@ -56,10 +56,10 @@ from repro.core.evaluation import EvalPlan, predict_compile_cache
 # units with EXACTLY the pools' semantics (amortized fused accounting,
 # solo scoring, task-level failure isolation) — re-implementing them here
 # would let the two drift apart
-from repro.core.executor import _run_fused_unit, _score_solo
+from repro.core.executor import _run_fused_unit, _score_solo, _train_solo
 from repro.core.fault import SearchWAL, WALRecord
 from repro.core.fusion import FusedBatch, compile_cache
-from repro.core.interface import TaskResult, get_estimator, run_prepared
+from repro.core.interface import TaskResult
 from repro.core.scheduler import FairShareArbiter
 from repro.core.session import Session
 from repro.core.spec import SearchSpec
@@ -643,15 +643,17 @@ class SearchService:
             if wal.is_done(task.task_id):
                 return []
             try:
-                est = get_estimator(task.estimator)
-                model, secs, conv = run_prepared(est, ticket.data, task.params,
-                                                 cache=self.prepared_cache)
+                # _train_solo dispatches RungTasks through the resumable
+                # path (§3.6), so adaptive tenants get warm rungs too
+                est, model, secs, conv, rstate = _train_solo(
+                    task, ticket.data, cache=self.prepared_cache)
                 score, eval_s = _score_solo(est, model, ticket.validate,
                                             self.prepared_cache)
                 results = [TaskResult(task=task, model=model,
                                       train_seconds=secs, executor_id=wid,
                                       convert_seconds=conv, score=score,
-                                      eval_seconds=eval_s)]
+                                      eval_seconds=eval_s,
+                                      resume_state=rstate)]
             except Exception as e:     # task-level failure, worker survives
                 results = [TaskResult(task=task, model=None, train_seconds=0.0,
                                       executor_id=wid, error=repr(e))]
@@ -662,6 +664,8 @@ class SearchService:
                     seconds=res.train_seconds, executor_id=wid,
                     score=res.score, convert_seconds=res.convert_seconds,
                     eval_seconds=res.eval_seconds))
+                if res.resume_state is not None:
+                    wal.record_resume(res.task.task_id, res.resume_state)
         return results
 
     # -- stats / lifecycle -------------------------------------------------

@@ -16,7 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import Estimator, TrainedModel, register_estimator
+from repro.core.interface import (
+    Estimator,
+    ResumeState,
+    TrainedModel,
+    register_estimator,
+)
 from repro.tabular.gbdt import batched_tree_margins, build_tree
 
 __all__ = ["ForestEstimator", "ForestModel"]
@@ -54,9 +59,44 @@ def _fit_forest_core(
     return trees
 
 
+def _resume_forest_core(
+    bins, y, key, min_samples_leaf, depth_limit, start,
+    *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
+):
+    """Grow trees ``start .. start + n_trees`` — the rung machinery
+    (DESIGN.md §3.6). Trees are mutually independent (the scan carries
+    nothing) and tree t's key is ``fold_in(key, t)`` regardless of how many
+    trees ran before, so appending a rung's trees to the previous stack is
+    bit-exact against growing the whole forest in one go."""
+    r, f = bins.shape
+
+    def one_tree(_, tree_key):
+        kb, kf = jax.random.split(tree_key)
+        w = jax.random.poisson(kb, 1.0, (r,)).astype(jnp.float32)  # bootstrap
+        perm = jax.random.permutation(kf, f)
+        feat_mask = jnp.zeros((f,), bool).at[perm[:max_features]].set(True)
+        g = -y * w
+        h = w
+        feat, split, leaf_g, leaf_h = build_tree(
+            bins, g, h, n_bins=n_bins, max_depth=max_depth,
+            lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
+            feat_mask=feat_mask, depth_limit=depth_limit,
+        )
+        leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
+        return None, (feat, split, leaf_value)
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, start + i))(
+        jnp.arange(n_trees))
+    _, trees = jax.lax.scan(one_tree, None, keys)
+    return trees
+
+
 _fit_forest = functools.partial(
     jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
 )(_fit_forest_core)
+_resume_forest = functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
+)(_resume_forest_core)
 
 
 def _build_batched_fit(n_bins: int, n_trees: int, max_depth: int, max_features: int):
@@ -113,6 +153,7 @@ class ForestModel(TrainedModel):
 class ForestEstimator(Estimator):
     name = "forest"
     data_format = "quantized_bins"
+    budget_param = "n_estimators"
 
     def default_params(self) -> dict[str, Any]:
         return {"n_estimators": 100, "max_depth": 8, "min_samples_leaf": 1.0, "seed": 0}
@@ -141,6 +182,43 @@ class ForestEstimator(Estimator):
         feat_np, split_np = np.asarray(feat), np.asarray(split)
         thresh = self._thresholds(feat_np, split_np, np.asarray(edges))
         return ForestModel(feat_np, thresh, leaves, max_depth)
+
+    # ---- adaptive search (DESIGN.md §3.6) -------------------------------
+    def train_resumable(self, data, params: Mapping[str, Any], *,
+                        budget: int, state: ResumeState | None = None):
+        p = {**self.default_params(), **params}
+        bins, edges = data["bins"], data["edges"]
+        f = bins.shape[1]
+        max_depth = int(p["max_depth"])
+        target = int(budget)
+        if state is None:
+            start = 0
+            n_nodes, n_leaves = (1 << max_depth) - 1, 1 << max_depth
+            prev_feat = np.zeros((0, n_nodes), np.int32)
+            prev_thresh = np.zeros((0, n_nodes), np.float32)
+            prev_leaves = np.zeros((0, n_leaves), np.float32)
+        else:
+            start = int(state.budget)
+            pl = state.payload
+            prev_feat, prev_thresh, prev_leaves = pl["feat"], pl["thresh"], pl["leaves"]
+        if target > start:
+            feat, split, leaves = _resume_forest(
+                bins, data["y"], jax.random.key(int(p["seed"])),
+                jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
+                jnp.int32(start),
+                n_bins=int(data["n_bins"]), n_trees=target - start,
+                max_depth=max_depth, max_features=max(1, int(np.sqrt(f))),
+            )
+            feat_np, split_np = np.asarray(feat), np.asarray(split)
+            thresh = self._thresholds(feat_np, split_np, np.asarray(edges))
+            prev_feat = np.concatenate([prev_feat, feat_np])
+            prev_thresh = np.concatenate([prev_thresh, thresh])
+            prev_leaves = np.concatenate([prev_leaves, np.asarray(leaves)])
+        model = ForestModel(prev_feat, prev_thresh, prev_leaves, max_depth)
+        new_state = ResumeState(self.name, max(target, start),
+                                {"feat": prev_feat, "thresh": prev_thresh,
+                                 "leaves": prev_leaves})
+        return model, new_state
 
     # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
     def fuse_signature(self, params: Mapping[str, Any]):

@@ -23,7 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
-from repro.core.interface import Estimator, TrainedModel, register_estimator
+from repro.core.interface import (
+    Estimator,
+    ResumeState,
+    TrainedModel,
+    register_estimator,
+)
 from repro.kernels import ops
 
 __all__ = [
@@ -243,6 +248,43 @@ _fit_gbdt = functools.partial(
 )(_fit_gbdt_core)
 
 
+def _resume_gbdt_core(
+    bins, y, margin0, factor, bin_limit, n_rounds, depth_limit,
+    eta, lam, gamma, min_child_weight, start,
+    *, n_bins: int, rounds: int, max_depth: int,
+):
+    """Boost ``rounds`` MORE trees on top of a carried margin — the rung
+    machinery (DESIGN.md §3.6). Round indices continue from ``start`` and the
+    final margin is returned alongside the trees (it IS the resume state:
+    boosting's only carry is the ensemble margin), so rung-k-then-resume
+    appends the exact trees a straight run would have grown. ``rounds`` is
+    the UNPADDED increment — no masked tail whose ``+0.0`` margin adds could
+    flip -0.0 bits between the chained and the straight run."""
+    cbins = bins // factor          # coarsen in-graph: factor is traced
+
+    def one_round(margin, r_idx):
+        p = jax.nn.sigmoid(margin)
+        g = p - y
+        h = jnp.maximum(p * (1.0 - p), 1e-16)
+        feat, split, leaf_g, leaf_h = build_tree(
+            cbins, g, h, n_bins=n_bins, max_depth=max_depth,
+            lam=lam, gamma=gamma, min_child_weight=min_child_weight,
+            depth_limit=depth_limit, bin_limit=bin_limit,
+        )
+        leaf_value = jnp.where(
+            r_idx < n_rounds, -eta * leaf_g / (leaf_h + lam), 0.0)
+        margin = margin + predict_margin(cbins, feat, split, leaf_value, max_depth)
+        return margin, (feat, split, leaf_value)
+
+    margin, trees = jax.lax.scan(one_round, margin0, start + jnp.arange(rounds))
+    return trees, margin
+
+
+_resume_gbdt = functools.partial(
+    jax.jit, static_argnames=("n_bins", "rounds", "max_depth")
+)(_resume_gbdt_core)
+
+
 def _build_batched_fit(n_bins: int, rounds: int, max_depth: int):
     """Compile-cache builder: vmap the core over the per-config args (data,
     labels and base margin are shared across the batch)."""
@@ -300,6 +342,7 @@ class GBDTModel(TrainedModel):
 class GBDTEstimator(Estimator):
     name = "gbdt"
     data_format = "quantized_bins"
+    budget_param = "round"
 
     def default_params(self) -> dict[str, Any]:
         return {
@@ -361,6 +404,51 @@ class GBDTEstimator(Estimator):
         feat_np, split_np = np.asarray(feat), np.asarray(split)
         thresh = self._thresholds(feat_np, split_np, np.asarray(edges), factor, n_cbins)
         return GBDTModel(feat_np, thresh, leaves, base, max_depth)
+
+    # ---- adaptive search (DESIGN.md §3.6) -------------------------------
+    def train_resumable(self, data, params: Mapping[str, Any], *,
+                        budget: int, state: ResumeState | None = None):
+        p = {**self.default_params(), **params}
+        bins, edges, y = data["bins"], data["edges"], data["y"]
+        factor, n_cbins = self._coarsen(int(data["n_bins"]), int(p["max_bin"]))
+        max_depth = int(p["max_depth"])
+        base = self._base_margin(y)
+        target = int(budget)
+        if state is None:
+            start = 0
+            margin0 = jnp.full((bins.shape[0],), base, jnp.float32)
+            n_nodes, n_leaves = (1 << max_depth) - 1, 1 << max_depth
+            prev_feat = np.zeros((0, n_nodes), np.int32)
+            prev_thresh = np.zeros((0, n_nodes), np.float32)
+            prev_leaves = np.zeros((0, n_leaves), np.float32)
+        else:
+            start = int(state.budget)
+            pl = state.payload
+            margin0 = jnp.asarray(pl["margin"], jnp.float32)
+            prev_feat, prev_thresh, prev_leaves = pl["feat"], pl["thresh"], pl["leaves"]
+        if target > start:
+            (feat, split, leaves), margin = _resume_gbdt(
+                bins, y, margin0,
+                jnp.int32(factor), jnp.int32(n_cbins),
+                jnp.int32(target), jnp.int32(max_depth),
+                jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
+                jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
+                jnp.int32(start),
+                n_bins=n_cbins, rounds=target - start, max_depth=max_depth,
+            )
+            feat_np, split_np = np.asarray(feat), np.asarray(split)
+            thresh = self._thresholds(feat_np, split_np, np.asarray(edges),
+                                      factor, n_cbins)
+            prev_feat = np.concatenate([prev_feat, feat_np])
+            prev_thresh = np.concatenate([prev_thresh, thresh])
+            prev_leaves = np.concatenate([prev_leaves, np.asarray(leaves)])
+            margin0 = margin
+        model = GBDTModel(prev_feat, prev_thresh, prev_leaves, base, max_depth)
+        new_state = ResumeState(self.name, max(target, start),
+                                {"feat": prev_feat, "thresh": prev_thresh,
+                                 "leaves": prev_leaves,
+                                 "margin": np.asarray(margin0)})
+        return model, new_state
 
     # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
     def fuse_signature(self, params: Mapping[str, Any]):

@@ -14,19 +14,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
-from repro.core.interface import Estimator, TrainedModel, register_estimator
+from repro.core.interface import (
+    Estimator,
+    ResumeState,
+    TrainedModel,
+    register_estimator,
+)
 
 __all__ = ["LogRegEstimator", "LogRegModel"]
 
 
-def _fit_logreg_core(x, y, c, lr, n_steps, *, steps: int):
-    """Adam on logistic loss over a PADDED step count: steps past the traced
-    ``n_steps`` freeze the whole carry, so one compile (and, vmapped, one
-    fused program — ``train_batched``) serves configs with different step
-    budgets while matching the unpadded run exactly."""
-    n, d = x.shape
-    w0 = jnp.zeros((d,), jnp.float32)
-    b0 = jnp.zeros((), jnp.float32)
+def _adam_step(x, y, c, lr, n_steps):
+    """The one Adam step both the fresh and the resume scans run. ``i`` is
+    the GLOBAL step index (bias correction uses ``t = i + 1``), so a scan
+    started at step k continues the exact sequence a scan from 0 produces."""
+    n = x.shape[0]
 
     def loss_fn(params):
         w, b = params
@@ -58,12 +60,37 @@ def _fit_logreg_core(x, y, c, lr, n_steps, *, steps: int):
             lambda nv, ov: jnp.where(active, nv, ov), new, carry)
         return out, 0.0
 
+    return step
+
+
+def _fit_logreg_core(x, y, c, lr, n_steps, *, steps: int):
+    """Adam on logistic loss over a PADDED step count: steps past the traced
+    ``n_steps`` freeze the whole carry, so one compile (and, vmapped, one
+    fused program — ``train_batched``) serves configs with different step
+    budgets while matching the unpadded run exactly."""
+    d = x.shape[1]
+    w0 = jnp.zeros((d,), jnp.float32)
+    b0 = jnp.zeros((), jnp.float32)
+    step = _adam_step(x, y, c, lr, n_steps)
     init = ((w0, b0), (jnp.zeros_like(w0), b0), (jnp.zeros_like(w0), b0))
     (params, _, _), _ = jax.lax.scan(step, init, jnp.arange(steps, dtype=jnp.float32))
     return params
 
 
+def _resume_logreg_core(x, y, c, lr, n_steps, start, carry, *, steps: int):
+    """Continue the Adam scan from global step ``start`` with a carried
+    ``((w, b), (mw, mb), (vw, vb))`` — the rung machinery (DESIGN.md §3.6).
+    Runs exactly ``steps`` more steps (callers pass the unpadded increment),
+    with the same step body as :func:`_fit_logreg_core`, so rung-k-then-
+    resume matches the straight run step for step."""
+    step = _adam_step(x, y, c, lr, n_steps)
+    carry, _ = jax.lax.scan(step, carry,
+                            start + jnp.arange(steps, dtype=jnp.float32))
+    return carry
+
+
 _fit = functools.partial(jax.jit, static_argnames=("steps",))(_fit_logreg_core)
+_resume_fit = functools.partial(jax.jit, static_argnames=("steps",))(_resume_logreg_core)
 
 
 def _build_batched_fit(steps: int):
@@ -115,6 +142,7 @@ class LogRegModel(TrainedModel):
 class LogRegEstimator(Estimator):
     name = "logreg"
     data_format = "dense_rows"
+    budget_param = "steps"
 
     def default_params(self) -> dict[str, Any]:
         return {"c": 1.0, "lr": 0.05, "steps": 200}
@@ -125,6 +153,35 @@ class LogRegEstimator(Estimator):
         w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]), jnp.float32(p["lr"]),
                     jnp.float32(steps), steps=steps)
         return LogRegModel(np.asarray(w), float(b))
+
+    # ---- adaptive search (DESIGN.md §3.6) -------------------------------
+    def train_resumable(self, data, params: Mapping[str, Any], *,
+                        budget: int, state: ResumeState | None = None):
+        p = {**self.default_params(), **params}
+        x = data["x"]
+        target = int(budget)
+        if state is None:
+            start = 0
+            d = x.shape[1]
+            w0 = np.zeros((d,), np.float32)
+            b0 = np.float32(0.0)
+            carry = ((w0, b0), (np.zeros_like(w0), b0), (np.zeros_like(w0), b0))
+        else:
+            start = int(state.budget)
+            pl = state.payload
+            carry = ((pl["w"], pl["b"]), (pl["mw"], pl["mb"]),
+                     (pl["vw"], pl["vb"]))
+        carry = jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), carry)
+        if target > start:
+            carry = _resume_fit(x, data["y"], jnp.float32(p["c"]),
+                                jnp.float32(p["lr"]), jnp.float32(target),
+                                jnp.float32(start), carry, steps=target - start)
+        (w, b), (mw, mb), (vw, vb) = jax.tree_util.tree_map(np.asarray, carry)
+        model = LogRegModel(w, float(b))
+        new_state = ResumeState(self.name, max(target, start),
+                                {"w": w, "b": b, "mw": mw, "mb": mb,
+                                 "vw": vw, "vb": vb})
+        return model, new_state
 
     # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
     def fuse_signature(self, params: Mapping[str, Any]):

@@ -14,7 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
-from repro.core.interface import Estimator, TrainedModel, register_estimator
+from repro.core.interface import (
+    Estimator,
+    ResumeState,
+    TrainedModel,
+    register_estimator,
+)
 
 __all__ = ["MLPEstimator", "MLPModel"]
 
@@ -37,15 +42,12 @@ def _forward(params, x):
     return h[:, 0]
 
 
-def _fit_mlp_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...], steps: int,
-                  batch_size: int):
-    """Minibatch Adam over a PADDED step count: past the traced ``n_steps``
-    the whole carry (params, optimizer state, PRNG key) freezes, so a
-    step-padded run matches the unpadded one exactly, and one compile per
-    (architecture, padded steps, batch size) serves the whole learning-rate
-    × step-budget grid — vmapped into one fused program by ``train_batched``."""
+def _mlp_step(x, y, lr, n_steps, batch_size: int):
+    """The one minibatch-Adam step both the fresh and the resume scans run.
+    ``i`` is the GLOBAL step index (bias correction ``t = i + 1``) and the
+    PRNG key rides the carry, so a scan started at step k with the carried
+    key draws the exact minibatch sequence a scan from 0 would."""
     n = x.shape[0]
-    params = _init_params(key, dims)
 
     def loss_fn(params, xb, yb):
         logits = _forward(params, xb)
@@ -53,9 +55,6 @@ def _fit_mlp_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...], steps: int,
             jnp.maximum(logits, 0) - logits * yb + jnp.log1p(jnp.exp(-jnp.abs(logits)))
         )
 
-    opt_state = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params], [
-        (jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params
-    ]
     beta1, beta2, eps = 0.9, 0.999, 1e-8
 
     def step(carry, i):
@@ -81,13 +80,43 @@ def _fit_mlp_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...], steps: int,
             lambda nv, ov: jnp.where(active, nv, ov), new, carry)
         return out, 0.0
 
+    return step
+
+
+def _fit_mlp_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...], steps: int,
+                  batch_size: int):
+    """Minibatch Adam over a PADDED step count: past the traced ``n_steps``
+    the whole carry (params, optimizer state, PRNG key) freezes, so a
+    step-padded run matches the unpadded one exactly, and one compile per
+    (architecture, padded steps, batch size) serves the whole learning-rate
+    × step-budget grid — vmapped into one fused program by ``train_batched``."""
+    params = _init_params(key, dims)
+    opt_state = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params], [
+        (jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params
+    ]
+    step = _mlp_step(x, y, lr, n_steps, batch_size)
     (params, _, _), _ = jax.lax.scan(step, (params, opt_state, key), jnp.arange(steps, dtype=jnp.float32))
     return params
+
+
+def _resume_mlp_core(x, y, lr, n_steps, start, carry, *, steps: int,
+                     batch_size: int):
+    """Continue the minibatch-Adam scan from global step ``start`` with a
+    carried ``(params, (m, v), key)`` — the rung machinery (DESIGN.md §3.6).
+    Runs exactly ``steps`` more steps with the same step body as
+    :func:`_fit_mlp_core`; the architecture is implied by the carry shapes."""
+    step = _mlp_step(x, y, lr, n_steps, batch_size)
+    carry, _ = jax.lax.scan(step, carry,
+                            start + jnp.arange(steps, dtype=jnp.float32))
+    return carry
 
 
 _fit = functools.partial(
     jax.jit, static_argnames=("dims", "steps", "batch_size")
 )(_fit_mlp_core)
+_resume_fit = functools.partial(
+    jax.jit, static_argnames=("steps", "batch_size")
+)(_resume_mlp_core)
 
 
 def _build_batched_fit(dims: tuple[int, ...], steps: int, batch_size: int):
@@ -158,6 +187,7 @@ class MLPModel(TrainedModel):
 class MLPEstimator(Estimator):
     name = "mlp"
     data_format = "dense_rows"
+    budget_param = "steps"
 
     def default_params(self) -> dict[str, Any]:
         return {"network": "64_64", "learning_rate": 0.003, "steps": 300, "batch_size": 128, "seed": 0}
@@ -178,6 +208,46 @@ class MLPEstimator(Estimator):
             jnp.float32(steps), dims=dims, steps=steps, batch_size=bs,
         )
         return MLPModel(params_out)
+
+    # ---- adaptive search (DESIGN.md §3.6) -------------------------------
+    def train_resumable(self, data, params: Mapping[str, Any], *,
+                        budget: int, state: ResumeState | None = None):
+        p = {**self.default_params(), **params}
+        x, y = data["x"], data["y"]
+        bs = int(min(p["batch_size"], x.shape[0]))
+        target = int(budget)
+        if state is None:
+            start = 0
+            dims = self._dims(p, int(x.shape[1]))
+            key = jax.random.key(int(p["seed"]))
+            net = _init_params(key, dims)
+            m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in net]
+            v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in net]
+            # the UNSPLIT seed key enters the carry, as in _fit_mlp_core
+            carry = (net, (m, v), key)
+        else:
+            start = int(state.budget)
+            pl = state.payload
+            n_layers = int(pl["n_layers"])
+            as32 = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+            net = [(as32(pl[f"w{i}"]), as32(pl[f"b{i}"])) for i in range(n_layers)]
+            m = [(as32(pl[f"mw{i}"]), as32(pl[f"mb{i}"])) for i in range(n_layers)]
+            v = [(as32(pl[f"vw{i}"]), as32(pl[f"vb{i}"])) for i in range(n_layers)]
+            key = jax.random.wrap_key_data(jnp.asarray(pl["key"]))
+            carry = (net, (m, v), key)
+        if target > start:
+            carry = _resume_fit(x, y, jnp.float32(p["learning_rate"]),
+                                jnp.float32(target), jnp.float32(start), carry,
+                                steps=target - start, batch_size=bs)
+        net, (m, v), key = carry
+        model = MLPModel(net)
+        payload: dict[str, Any] = {"n_layers": len(net),
+                                   "key": np.asarray(jax.random.key_data(key))}
+        for i in range(len(net)):
+            payload[f"w{i}"], payload[f"b{i}"] = map(np.asarray, net[i])
+            payload[f"mw{i}"], payload[f"mb{i}"] = map(np.asarray, m[i])
+            payload[f"vw{i}"], payload[f"vb{i}"] = map(np.asarray, v[i])
+        return model, ResumeState(self.name, max(target, start), payload)
 
     # ---- fused batches (core/fusion.py, DESIGN.md §3.2) -----------------
     def fuse_signature(self, params: Mapping[str, Any]):
