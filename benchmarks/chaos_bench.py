@@ -1,0 +1,208 @@
+"""Chaos benchmarks for the fault plane (DESIGN.md §3.7).
+
+Two-layer structure, mirroring the other benches:
+
+* **Deterministic rows** (``chaos.sim.*makespan*``, baseline-gated): an
+  event-clock simulation of 48 unit-cost tasks on 4 workers sweeping the
+  injected train-failure rate (0%, 5%, 10%, 20%). Fault decisions come from
+  the REAL seeded coin (:func:`repro.core.chaos.chaos_roll`) and the retry
+  arithmetic from the REAL :class:`repro.core.fault.RetryLedger` — only the
+  clock is modelled. Acceptance (raises on violation, failing the bench
+  job): the 10%-fault makespan stays within 1.5× of fault-free — bounded
+  retries must degrade throughput smoothly, not collapse it.
+
+* **Wall-clock rows** (``chaos.wallclock.*`` — no "makespan" in the name,
+  so never baseline-gated): a real :class:`LocalExecutorPool` run under a
+  :class:`FaultPlan` combining a 10% task-failure rate, one scheduled
+  executor death, and one poison task. Acceptance: exactly ONE terminal
+  result per config, ZERO duplicate WAL completion records, and the poison
+  task quarantined after at most ``poison_threshold`` executor kills.
+"""
+from __future__ import annotations
+
+import heapq
+import json
+import tempfile
+
+import repro.tabular  # noqa: F401  (registers the estimators)
+from repro.core import (
+    Estimator,
+    SearchWAL,
+    TrainedModel,
+    register_estimator,
+    schedule,
+    unregister_estimator,
+)
+from repro.core.chaos import FaultPlan, chaos_roll
+from repro.core.executor import LocalExecutorPool
+from repro.core.fault import RetryLedger
+from repro.core.interface import TrainTask
+from repro.data.synthetic import make_higgs_like
+
+Row = tuple[str, float, str]
+
+_SEED = 7
+_N_TASKS = 48
+_N_WORKERS = 4
+_UNIT_COST = 1.0          # simulated seconds per training attempt
+_MAX_RETRIES = 3
+_BACKOFF = 0.05
+_RATES = ((0.0, "f00"), (0.05, "f05"), (0.10, "f10"), (0.20, "f20"))
+_INFLATION_LIMIT = 1.5    # acceptance: f10 makespan <= 1.5x fault-free
+
+
+# ---------------------------------------------------------------------------
+# Deterministic event-clock simulation (gated rows)
+# ---------------------------------------------------------------------------
+
+def _simulate(rate: float) -> tuple[float, int, int]:
+    """Run the sweep workload at one injected failure rate.
+
+    Greedy event clock: each attempt occupies the next-free worker for
+    ``_UNIT_COST`` seconds; a failed attempt wastes that slot and re-queues
+    after the ledger's capped exponential backoff. Returns
+    (makespan, n_retries, n_terminal_failures).
+    """
+    ledger = RetryLedger(max_task_retries=_MAX_RETRIES,
+                         retry_backoff=_BACKOFF, sleep=lambda s: None)
+    workers = [0.0] * _N_WORKERS
+    heapq.heapify(workers)
+    # (ready_time, task_id, attempt) — ready_time models the backoff delay
+    queue: list[tuple[float, int, int]] = [(0.0, tid, 1)
+                                           for tid in range(_N_TASKS)]
+    heapq.heapify(queue)
+    makespan, n_retries, n_terminal = 0.0, 0, 0
+    while queue:
+        ready, tid, att = heapq.heappop(queue)
+        start = max(heapq.heappop(workers), ready)
+        end = start + _UNIT_COST
+        heapq.heappush(workers, end)
+        makespan = max(makespan, end)
+        if chaos_roll(_SEED, tid, att) < rate:
+            if ledger.should_retry(tid):
+                n_retries += 1
+                heapq.heappush(queue,
+                               (end + ledger.backoff_of(tid), tid, att + 1))
+            else:
+                n_terminal += 1
+        # success: task done, nothing to push
+    return makespan, n_retries, n_terminal
+
+
+def _deterministic() -> list[Row]:
+    rows: list[Row] = []
+    by_tag: dict[str, float] = {}
+    for rate, tag in _RATES:
+        mk, retries, terminal = _simulate(rate)
+        by_tag[tag] = mk
+        rows.append((f"chaos.sim.{tag}.makespan", mk,
+                     f"{_N_TASKS} unit tasks, {_N_WORKERS} workers, "
+                     f"{rate:.0%} injected failures, {_MAX_RETRIES} retries"))
+        rows.append((f"chaos.sim.{tag}.retries", float(retries),
+                     "attempts burned recovering injected failures"))
+        rows.append((f"chaos.sim.{tag}.terminal_failures", float(terminal),
+                     "tasks that exhausted the retry budget"))
+    inflation = by_tag["f10"] / by_tag["f00"]
+    rows.append(("chaos.sim.f10.inflation", inflation,
+                 f"f10 / fault-free makespan (acceptance: <= {_INFLATION_LIMIT})"))
+    if inflation > _INFLATION_LIMIT:
+        raise AssertionError(
+            f"10%-fault makespan inflated {inflation:.2f}x over fault-free "
+            f"(> {_INFLATION_LIMIT}x) — retry storm, not graceful degradation")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock: a real pool under combined chaos (assertion-only rows)
+# ---------------------------------------------------------------------------
+
+class _StubModel(TrainedModel):
+    def predict_proba(self, x):
+        import numpy as np
+        return np.full((x.shape[0],), 0.5, dtype=np.float32)
+
+
+class _BenchEstimator(Estimator):
+    name = "chaosbench"
+    data_format = "dense_rows"
+
+    def train(self, data, params):
+        return _StubModel()
+
+
+_N_REAL_TASKS = 24
+_POISON_TID = 5
+_POISON_THRESHOLD = 2
+
+
+def _wallclock() -> list[Row]:
+    register_estimator(_BenchEstimator)
+    try:
+        train = make_higgs_like(400, seed=_SEED)
+        tasks = [TrainTask(task_id=i, estimator="chaosbench",
+                           params={"i": i}, cost=1.0)
+                 for i in range(_N_REAL_TASKS)]
+        chaos = FaultPlan(seed=_SEED, task_failure_rate=0.10,
+                          max_task_faults=2,
+                          executor_deaths=((0, 2),),
+                          poison_tasks=frozenset({_POISON_TID}),
+                          ).build(lambda s: None)
+        with tempfile.NamedTemporaryFile(suffix=".jsonl") as tmp:
+            pool = LocalExecutorPool(
+                _N_WORKERS, wal=SearchWAL(tmp.name),
+                failure_hook=chaos.hook,
+                max_task_retries=_MAX_RETRIES, retry_backoff=0.0,
+                poison_threshold=_POISON_THRESHOLD,
+                sleep=lambda s: None)
+            results = list(pool.submit(
+                schedule(tasks, _N_WORKERS, policy="dynamic"), train))
+            # acceptance 1: exactly one terminal result per config
+            ids = sorted(r.task.task_id for r in results)
+            if ids != list(range(_N_REAL_TASKS)):
+                raise AssertionError(
+                    f"expected one terminal result per config, got {ids}")
+            # acceptance 2: zero duplicate WAL completion records
+            wal_ids: list[int] = []
+            with open(tmp.name) as f:
+                for line in f:
+                    obj = json.loads(line)
+                    if obj.get("kind") != "resume":
+                        wal_ids.append(obj["task_id"])
+            if len(wal_ids) != len(set(wal_ids)):
+                dupes = sorted({i for i in wal_ids if wal_ids.count(i) > 1})
+                raise AssertionError(f"duplicate WAL records for {dupes}")
+            # acceptance 3: poison task quarantined within the threshold
+            poison = [r for r in results if r.task.task_id == _POISON_TID]
+            if not (poison[0].quarantined and not poison[0].ok):
+                raise AssertionError(
+                    f"poison task not quarantined: {poison[0]}")
+            if chaos.n_poison_kills > _POISON_THRESHOLD:
+                raise AssertionError(
+                    f"poison task killed {chaos.n_poison_kills} executors "
+                    f"(> threshold {_POISON_THRESHOLD})")
+            n_ok = sum(1 for r in results if r.ok)
+            n_retried = sum(1 for r in results if r.attempts > 1)
+        return [
+            ("chaos.wallclock.results_ok", float(n_ok),
+             f"of {_N_REAL_TASKS} configs under 10% faults + death + poison"),
+            ("chaos.wallclock.retried_tasks", float(n_retried),
+             "configs that needed more than one attempt"),
+            ("chaos.wallclock.train_faults", float(chaos.n_train_faults),
+             "injected train failures"),
+            ("chaos.wallclock.executor_deaths",
+             float(chaos.n_deaths + chaos.n_poison_kills),
+             "scheduled death + poison kills"),
+            ("chaos.wallclock.quarantined", 1.0,
+             f"poison task {_POISON_TID} quarantined after "
+             f"{chaos.n_poison_kills} kills"),
+        ]
+    finally:
+        unregister_estimator("chaosbench")
+
+
+def smoke() -> list[Row]:
+    return _deterministic() + _wallclock()
+
+
+def full() -> list[Row]:
+    return smoke()

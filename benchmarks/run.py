@@ -25,6 +25,7 @@ import traceback
 
 from benchmarks import (
     asha_bench,
+    chaos_bench,
     cost_model_bench,
     eval_bench,
     fusion_bench,
@@ -54,6 +55,7 @@ BENCHES = {
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
     "serve": serve_bench.full,
+    "chaos": chaos_bench.full,
 }
 
 #: the --smoke table: deterministic (except the *.wallclock.* rows, which
@@ -66,6 +68,7 @@ SMOKE_BENCHES = {
     "asha": asha_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
     "serve": serve_bench.smoke,
+    "chaos": chaos_bench.smoke,
 }
 
 

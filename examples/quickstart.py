@@ -27,11 +27,17 @@ sklearn_lr_grid = (GridBuilder("logreg")
                    .build())
 
 # ----- declarative spec (replaces the mutable builder) -------------------
+# The fault plane (DESIGN.md §3.7) rides the same spec: max_task_retries
+# re-runs a config whose train raises (capped exponential backoff) before
+# it surfaces as a terminal error, and deadline_factor=F speculatively
+# duplicates any task running longer than F x its predicted cost. The
+# launcher exposes both as --max-task-retries / --deadline-factor.
 spec = SearchSpec(
     spaces=[xgb_grid, tf_grid, sklearn_lr_grid],
     n_executors=4,
     policy="lpt",
     profiler=SamplingProfiler(0.01),
+    max_task_retries=1,
 )
 
 # ----- model search (paper Fig. 1, second half) --------------------------

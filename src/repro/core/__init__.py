@@ -77,6 +77,12 @@ from repro.core.tuner import (
     Tuner,
     make_tuner,
 )
-from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
+from repro.core.fault import (
+    AllExecutorsLost,
+    ExecutorFailure,
+    RetryLedger,
+    SearchWAL,
+    WALRecord,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

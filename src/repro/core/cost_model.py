@@ -31,6 +31,7 @@ import json
 import math
 import os
 import threading
+import warnings
 from typing import Any, Iterable, Mapping, Sequence
 
 from repro.core.interface import TrainTask
@@ -322,8 +323,15 @@ class CostModel:
         ``eval_rows``, the validation split's size) feeds the per-family
         eval law; the obs/est ratio compares the task's planned cost against
         train + convert + eval, since eval-charged units plan with eval
-        included."""
+        included. A ``timed_out`` failure feeds its elapsed time in as a
+        censored observation (§3.7): the task ran AT LEAST that long, so
+        the estimate that missed the deadline inflates toward reality and
+        stops being trusted."""
         if not result.ok:
+            if (getattr(result, "timed_out", False)
+                    and result.train_seconds > 0):
+                self.observe(result.task, result.train_seconds, n_rows,
+                             batched=getattr(result, "batch_size", 1) > 1)
             return
         batch_size = getattr(result, "batch_size", 1)
         conv = getattr(result, "convert_seconds", 0.0)
@@ -527,11 +535,29 @@ class CostModel:
              default_exponent: float = 1.0,
              prior: "CostModel | None" = None) -> "CostModel":
         """Load the model at ``path`` if it exists, else start a fresh one
-        that will save there. ``open(None)`` is a fresh in-memory model."""
+        that will save there. ``open(None)`` is a fresh in-memory model.
+
+        A corrupt or partial file (torn write, version drift, truncated
+        JSON) must not abort ``Session.resume``: the bad file is preserved
+        as ``<path>.corrupt`` for post-mortem and the model starts cold
+        with a warning — runtimes re-learn within a round.
+        """
         if path and os.path.exists(path):
-            with open(path) as f:
-                return cls.from_dict(json.load(f), path=path,
-                                     fallback=fallback, prior=prior)
+            try:
+                with open(path) as f:
+                    return cls.from_dict(json.load(f), path=path,
+                                         fallback=fallback, prior=prior)
+            except (ValueError, KeyError, TypeError) as e:
+                # ValueError covers json.JSONDecodeError + version mismatch
+                corrupt = path + ".corrupt"
+                try:
+                    os.replace(path, corrupt)
+                except OSError:
+                    corrupt = "<could not preserve>"
+                warnings.warn(
+                    f"cost model at {path} is corrupt "
+                    f"({type(e).__name__}: {e}); starting cold — bad file "
+                    f"preserved as {corrupt}", RuntimeWarning, stacklevel=2)
         return cls(path, default_exponent=default_exponent, fallback=fallback,
                    prior=prior)
 

@@ -40,7 +40,13 @@ from typing import Callable, Iterator, Sequence
 
 from repro.core.data_format import DenseMatrix, PreparedDataCache, prepared_data_cache
 from repro.core.evaluation import EvalPlan, evaluate_models
-from repro.core.fault import ExecutorFailure, SearchWAL, WALRecord
+from repro.core.fault import (
+    AllExecutorsLost,
+    ExecutorFailure,
+    RetryLedger,
+    SearchWAL,
+    WALRecord,
+)
 from repro.core.fusion import FusedBatch, charge_carrier
 from repro.core.interface import (
     RungTask,
@@ -71,9 +77,12 @@ def _run_fused_unit(unit: FusedBatch, data, eid: int,
     id) — one build, one observation, on the member the planner charged.
     With ``validate`` set, the whole model stack is scored HERE (§3.4) as
     one vmapped predict program — members stream back with ``score`` and
-    the amortized ``eval_seconds`` attached. A whole-batch exception
-    becomes a per-member error result (task-level failure semantics — the
-    executor survives)."""
+    the amortized ``eval_seconds`` attached. A whole-batch exception is
+    BISECTED (§3.7): the batch splits at its structural bucket boundaries
+    (``split_at_buckets``) and each piece re-runs; an unsplittable piece
+    degrades to solo member runs — so one poison config costs only its own
+    result and every good member is salvaged. Task-level failure semantics
+    throughout: the executor survives."""
     members = list(unit.tasks)
     est = get_estimator(unit.estimator)
     try:
@@ -98,11 +107,36 @@ def _run_fused_unit(unit: FusedBatch, data, eid: int,
     except ExecutorFailure:
         raise
     except Exception as e:
-        return [
-            TaskResult(task=m, model=None, train_seconds=0.0, executor_id=eid,
-                       error=repr(e), batch_size=len(members))
-            for m in members
-        ]
+        if len(members) == 1:
+            return [TaskResult(task=members[0], model=None, train_seconds=0.0,
+                               executor_id=eid, error=repr(e))]
+        pieces = unit.split_at_buckets()
+        if len(pieces) > 1:
+            out: list[TaskResult] = []
+            for piece in pieces:
+                out.extend(_run_fused_unit(piece, data, eid, cache=cache,
+                                           placement=placement,
+                                           validate=validate))
+            return out
+        # single structural bucket: fall back to the singleton machinery —
+        # run each member solo so only the culprit carries the error
+        out = []
+        for m in members:
+            try:
+                s_est, model, secs, conv, rstate = _train_solo(
+                    m, data, cache=cache, placement=placement)
+                score, eval_s = _score_solo(s_est, model, validate, cache,
+                                            placement=placement)
+                out.append(TaskResult(task=m, model=model, train_seconds=secs,
+                                      executor_id=eid, convert_seconds=conv,
+                                      score=score, eval_seconds=eval_s,
+                                      resume_state=rstate))
+            except ExecutorFailure:
+                raise
+            except Exception as e2:
+                out.append(TaskResult(task=m, model=None, train_seconds=0.0,
+                                      executor_id=eid, error=repr(e2)))
+        return out
 
 
 def _train_solo(task, data, cache: PreparedDataCache | None = None,
@@ -152,11 +186,34 @@ class LocalExecutorPool:
         speculation_factor: float | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         prepared_cache: PreparedDataCache | None = None,
+        max_task_retries: int = 0,
+        retry_backoff: float = 0.05,
+        poison_threshold: int | None = 3,
+        deadline_factor: float | None = None,
+        task_timeout_seconds: float | None = None,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self._n_executors = n_executors
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook  # tests inject ExecutorFailure here
         self.speculation_factor = speculation_factor
+        #: soft deadline (§3.7): ``deadline_factor`` × predicted cost rides
+        #: the speculation path — an overdue unit is duplicated on an idle
+        #: executor, first completion wins. ``speculation_factor`` (the
+        #: historical knob) takes precedence when both are set.
+        self.deadline_factor = deadline_factor
+        #: hard deadline (§3.7): a unit in flight longer than this many
+        #: wall-clock seconds is abandoned-and-requeued (one retry attempt
+        #: burned); out of attempts it surfaces as a terminal ``timed_out``
+        #: error result, and the submit loop stops waiting on the hung
+        #: worker (the daemon thread is left behind).
+        self.task_timeout_seconds = task_timeout_seconds
+        #: per-task attempt/taint bookkeeping, POOL-lifetime so a poison
+        #: task re-queued across rounds keeps its history (§3.7)
+        self._retry = RetryLedger(max_task_retries=max_task_retries,
+                                  retry_backoff=retry_backoff,
+                                  poison_threshold=poison_threshold,
+                                  sleep=sleep)
         #: prepared-data cache the workers resolve conversion through; worker
         #: threads share one device, so placement is the process default
         #: (None) and the default cache is the process-wide one
@@ -221,6 +278,7 @@ class LocalExecutorPool:
             with results_lock:
                 if res.task.task_id in results:
                     return False
+                self._retry.stamp(res)
                 results[res.task.task_id] = res
                 if res.ok:
                     self.wal.record(
@@ -246,27 +304,67 @@ class LocalExecutorPool:
                 in_flight[unit.task_id] = (eid, time.perf_counter())
             sub = unit.restrict(pend)
             try:
+                hook_err: Exception | None = None
                 if self.failure_hook is not None:
-                    self.failure_hook(eid, unit)  # may raise ExecutorFailure
-                batch_results = _run_fused_unit(sub, data, eid,
-                                                cache=self.prepared_cache,
-                                                validate=validate)
+                    try:
+                        self.failure_hook(eid, unit)  # may raise ExecutorFailure
+                    except ExecutorFailure:
+                        raise
+                    except Exception as e:
+                        # injected batch-level failure: every pending member
+                        # fails this attempt; the retry filter below re-queues
+                        # them SOLO, so the culprit isolates on re-run (§3.7)
+                        hook_err = e
+                if hook_err is not None:
+                    batch_results = [
+                        TaskResult(task=m, model=None, train_seconds=0.0,
+                                   executor_id=eid, error=repr(hook_err),
+                                   batch_size=len(sub.tasks))
+                        for m in sub.tasks]
+                else:
+                    batch_results = _run_fused_unit(sub, data, eid,
+                                                    cache=self.prepared_cache,
+                                                    validate=validate)
             except ExecutorFailure:
                 with results_lock:
                     in_flight.pop(unit.task_id, None)
                 raise
             with results_lock:
                 in_flight.pop(unit.task_id, None)
+            # solo-shaped members (pre-amortization cost restored) for
+            # retries: a failed member re-queues ALONE so its next attempt
+            # cannot take good batch-mates down with it (§3.7)
+            solo = {sub.tasks[i].task_id: sub.unfused_task(i)
+                    for i in range(len(sub.tasks))}
             for res in batch_results:
+                if not res.ok and self._retry.should_retry(res.task.task_id):
+                    self._retry.wait(res.task.task_id)
+                    requeue.put(solo.get(res.task.task_id, res.task))
+                    continue
                 if accept(res, eid):
                     self._emit(res)
                     out.put(res)
+
+        def quarantine(eid: int, task: TrainTask, n: int | None = None) -> None:
+            """Surface a poison task as a terminal quarantine error (§3.7)."""
+            n = n if n is not None else self._retry.taints_of(task.task_id)
+            res = TaskResult(task=task, model=None, train_seconds=0.0,
+                             executor_id=eid,
+                             error=f"quarantined after {n} executor deaths "
+                                   "while claimed (poison task)",
+                             quarantined=True)
+            if accept(res, eid):
+                self._emit(res)
+                out.put(res)
 
         def execute(eid: int, task) -> None:
             if isinstance(task, FusedBatch):
                 execute_fused(eid, task)
                 return
             if self.wal.is_done(task.task_id):
+                return
+            if self._retry.quarantined(task.task_id):
+                quarantine(eid, task)
                 return
             with results_lock:
                 if task.task_id in results:
@@ -288,6 +386,14 @@ class LocalExecutorPool:
                     in_flight.pop(task.task_id, None)
                 raise
             except Exception as e:  # task-level failure: record, don't kill pool
+                with results_lock:
+                    in_flight.pop(task.task_id, None)
+                if self._retry.should_retry(task.task_id):
+                    # bounded retry (§3.7): capped exponential backoff, then
+                    # back on the re-queue for any live worker to claim
+                    self._retry.wait(task.task_id)
+                    requeue.put(task)
+                    return
                 res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=eid, error=repr(e))
             with results_lock:
                 in_flight.pop(task.task_id, None)
@@ -297,8 +403,17 @@ class LocalExecutorPool:
                 out.put(res)
 
         def maybe_speculate(eid: int) -> TrainTask | None:
-            """Idle executor: duplicate the longest-overdue in-flight task."""
-            if self.speculation_factor is None:
+            """Idle executor: duplicate the longest-overdue in-flight task.
+
+            The soft deadline (§3.7) rides this same path: ``deadline_factor``
+            is the unit's CostModel-predicted cost multiplier past which it
+            counts as overdue. ``speculation_factor`` (the historical knob)
+            takes precedence when both are set.
+            """
+            factor = (self.speculation_factor
+                      if self.speculation_factor is not None
+                      else self.deadline_factor)
+            if factor is None:
                 return None
             now = time.perf_counter()
             with results_lock:
@@ -311,7 +426,7 @@ class LocalExecutorPool:
                     if est_cost is None:
                         continue
                     over = (now - t0) / est_cost
-                    if over > self.speculation_factor and over > overdue:
+                    if over > factor and over > overdue:
                         best, overdue = task, over
                 if best is not None:
                     speculated.add(best.task_id)
@@ -319,7 +434,116 @@ class LocalExecutorPool:
 
         task_by_id = {t.task_id: t for t in assignment.all_tasks()}
 
+        def requeue_after_death(eid: int, unit) -> None:
+            """An executor died while running ``unit``: taint it (§3.7).
+
+            A tainted FusedBatch re-queues as solo singletons so the poison
+            member isolates instead of re-killing whole batches; a task past
+            ``poison_threshold`` deaths is quarantined (terminal error
+            result) instead of being handed to the next victim.
+            """
+            if isinstance(unit, FusedBatch):
+                for m in unit.singletons():
+                    if self.wal.is_done(m.task_id):
+                        continue
+                    requeue_after_death(eid, m)
+                return
+            n = self._retry.taint(unit.task_id)
+            if self._retry.quarantined(unit.task_id):
+                quarantine(eid, unit, n)
+            else:
+                requeue.put(unit)
+
+        hard = self.task_timeout_seconds
+        hung: set[int] = set()  # executors abandoned past the hard deadline
+        overdue_ids: set[int] = set()  # unit ids ever abandoned as overdue
+        expected: set[int] = set()
+        if hard is not None:
+            for u in assignment.all_tasks():
+                members = u.tasks if isinstance(u, FusedBatch) else (u,)
+                expected.update(m.task_id for m in members
+                                if not self.wal.is_done(m.task_id))
+
+        def check_timeouts() -> None:
+            """Hard deadline (§3.7): abandon-and-requeue overdue units.
+
+            The abandoned copy keeps running on its (hung) worker — first
+            completion wins, ``accept`` dedups — but the submit loop stops
+            waiting on that worker. The overrun is fed to the cost-model
+            observer as a censored ``timed_out`` observation so the estimate
+            that missed stops being trusted.
+            """
+            now = time.perf_counter()
+            overdue: list[tuple[int, int, float, bool]] = []
+            with results_lock:
+                for tid, (owner, t0) in list(in_flight.items()):
+                    if now - t0 > hard:
+                        in_flight.pop(tid, None)
+                        hung.add(owner)
+                        overdue_ids.add(tid)
+                        unit = task_by_id.get(tid)
+                        retriable = (unit is not None
+                                     and self._retry.should_retry(tid))
+                        if retriable:
+                            # re-queue INSIDE the lock: an idle worker's
+                            # exit check reads in_flight under this lock,
+                            # so it cannot miss the retry in between
+                            requeue.put(unit)
+                        overdue.append((tid, owner, now - t0, retriable))
+            for tid, owner, elapsed, retriable in overdue:
+                unit = task_by_id.get(tid)
+                if unit is None:
+                    continue
+                if retriable:
+                    if not isinstance(unit, FusedBatch):
+                        # censored observation: surfaced to the observer
+                        # only, never to the result stream
+                        self._emit(TaskResult(
+                            task=unit, model=None, train_seconds=elapsed,
+                            executor_id=owner,
+                            error=(f"deadline exceeded after {elapsed:.3f}s "
+                                   "(abandoned, re-queued)"),
+                            timed_out=True))
+                    continue
+                members = (unit.tasks if isinstance(unit, FusedBatch)
+                           else (unit,))
+                for m in members:
+                    if self.wal.is_done(m.task_id):
+                        continue
+                    res = TaskResult(
+                        task=m, model=None, train_seconds=elapsed,
+                        executor_id=owner,
+                        error=(f"hard deadline: abandoned after "
+                               f"{elapsed:.3f}s on executor {owner}"),
+                        timed_out=True,
+                        attempts=self._retry.failures_of(tid))
+                    if accept(res, owner):
+                        self._emit(res)
+                        out.put(res)
+
+        def wait_for_requeue(idle: list) -> bool:
+            """Idle-worker exit gate under hard deadlines (§3.7): while any
+            peer still holds a unit in flight, a timeout may re-queue it —
+            so stay alive to claim the retry (otherwise it would fall to
+            the driver, which refuses suspect-hung work). After in_flight
+            drains, loop ONE more time so a retry queued in the same
+            locked section as the drain is never missed. Returns True to
+            keep looping, False to exit."""
+            if hard is None:
+                return False
+            with results_lock:
+                busy = bool(in_flight)
+            if busy:
+                idle[0] = False
+                stop.wait(0.01)
+                return True
+            if not idle[0]:
+                idle[0] = True
+                return True
+            return False
+
         def worker(eid: int, static_queue: list[TrainTask]) -> None:
+            idle = [False]
             try:
                 if dynamic:
                     while not stop.is_set():
@@ -331,12 +555,16 @@ class LocalExecutorPool:
                             except _queue.Empty:
                                 task = maybe_speculate(eid)
                                 if task is None:
+                                    if wait_for_requeue(idle):
+                                        continue
                                     return
+                        idle[0] = False
                         try:
                             execute(eid, task)
                         except ExecutorFailure:
-                            # dying with a claimed task: hand it to survivors
-                            requeue.put(task)
+                            # dying with a claimed task: taint it, hand it to
+                            # survivors (or quarantine past the threshold)
+                            requeue_after_death(eid, task)
                             raise
                 else:
                     for i, task in enumerate(static_queue):
@@ -345,8 +573,10 @@ class LocalExecutorPool:
                         try:
                             execute(eid, task)
                         except ExecutorFailure:
-                            # push the rest of my queue to survivors, then die
-                            for rest in static_queue[i:]:
+                            # the claimed task is tainted; the rest of my
+                            # queue was never claimed, push it plain
+                            requeue_after_death(eid, task)
+                            for rest in static_queue[i + 1:]:
                                 if not self.wal.is_done(rest.task_id):
                                     requeue.put(rest)
                             raise
@@ -355,30 +585,63 @@ class LocalExecutorPool:
                         try:
                             task = requeue.get_nowait()
                         except _queue.Empty:
+                            if wait_for_requeue(idle):
+                                continue
                             return
+                        idle[0] = False
                         try:
                             execute(eid, task)
                         except ExecutorFailure:
-                            requeue.put(task)
+                            requeue_after_death(eid, task)
                             raise
             except ExecutorFailure:
                 self._dead.add(eid)
 
         threads = []
+        static_plans: list[list] = []
         for eid in range(self._n_executors):
             q = assignment.plan[eid] if eid < len(assignment.plan) and not dynamic else []
+            static_plans.append(q)
             th = threading.Thread(target=worker, args=(eid, q), daemon=True)
             threads.append(th)
             th.start()
+        def join_all() -> None:
+            """Join workers; never wait forever on one abandoned past the
+            hard deadline (its daemon thread is left behind)."""
+            for eid2, th in enumerate(threads):
+                if hard is None:
+                    th.join()
+                else:
+                    th.join(0.1 if eid2 in hung else hard + 0.5)
+
         try:
             while any(th.is_alive() for th in threads):
                 try:
                     res = out.get(timeout=0.05)
                 except _queue.Empty:
+                    if hard is not None:
+                        check_timeouts()
+                        with results_lock:
+                            covered = all(
+                                tid in results or self.wal.is_done(tid)
+                                for tid in expected)
+                        if covered:
+                            break  # every task terminal; stop waiting on hung workers
+                        if not any(th.is_alive()
+                                   for i, th in enumerate(threads)
+                                   if i not in hung):
+                            # only hung workers remain: salvage their
+                            # unclaimed static work and let the driver-
+                            # inline leftovers path finish the plan
+                            # (duplicates dedup against ``results`` there)
+                            for eid2 in hung:
+                                for t in static_plans[eid2]:
+                                    if not self.wal.is_done(t.task_id):
+                                        requeue.put(t)
+                            break
                     continue
                 yield res
-            for th in threads:
-                th.join()
+            join_all()
             while True:  # drain completions raced in while the last thread exited
                 try:
                     res = out.get_nowait()
@@ -399,21 +662,60 @@ class LocalExecutorPool:
                         leftovers.append(shared.get_nowait())
                     except _queue.Empty:
                         break
-            for task in leftovers:
+            while leftovers:
+                task = leftovers.pop(0)
+                if task.task_id in overdue_ids:
+                    # A unit once abandoned past the hard deadline is suspect
+                    # hung — the driver must NEVER run it inline (a genuine
+                    # hang would block the whole submit with no preemption).
+                    # Terminal timed_out, even with retry budget left.
+                    members = (task.tasks if isinstance(task, FusedBatch)
+                               else (task,))
+                    for m in members:
+                        if self.wal.is_done(m.task_id) or m.task_id in results:
+                            continue
+                        res = TaskResult(
+                            task=m, model=None, train_seconds=0.0,
+                            executor_id=-1,
+                            error=("hard deadline: abandoned as overdue; "
+                                   "not retried on the driver"),
+                            timed_out=True,
+                            attempts=self._retry.failures_of(task.task_id))
+                        if accept(res, -1):
+                            self._emit(res)
+                            yield res
+                    continue
                 if isinstance(task, FusedBatch):
                     pend = {m.task_id for m in task.tasks
                             if not self.wal.is_done(m.task_id)
                             and m.task_id not in results}
                     if not pend:
                         continue
-                    for res in _run_fused_unit(task.restrict(pend), data, -1,
+                    sub = task.restrict(pend)
+                    solo = {sub.tasks[i].task_id: sub.unfused_task(i)
+                            for i in range(len(sub.tasks))}
+                    for res in _run_fused_unit(sub, data, -1,
                                                cache=self.prepared_cache,
                                                validate=validate):
+                        if (not res.ok
+                                and self._retry.should_retry(res.task.task_id)):
+                            self._retry.wait(res.task.task_id)
+                            leftovers.append(
+                                solo.get(res.task.task_id, res.task))
+                            continue
                         if accept(res, -1):
                             self._emit(res)
                             yield res
                     continue
                 if not self.wal.is_done(task.task_id) and task.task_id not in results:
+                    if self._retry.quarantined(task.task_id):
+                        quarantine(-1, task)
+                        while True:  # quarantine() parks on out; surface it
+                            try:
+                                yield out.get_nowait()
+                            except _queue.Empty:
+                                break
+                        continue
                     try:
                         est, model, secs, conv, rstate = _train_solo(
                             task, data, cache=self.prepared_cache)
@@ -430,14 +732,18 @@ class LocalExecutorPool:
                         if rstate is not None:
                             self.wal.record_resume(task.task_id, rstate)
                     except Exception as e:
+                        if self._retry.should_retry(task.task_id):
+                            self._retry.wait(task.task_id)
+                            leftovers.append(task)
+                            continue
                         res = TaskResult(task=task, model=None, train_seconds=0.0, executor_id=-1, error=repr(e))
+                    self._retry.stamp(res)
                     results[task.task_id] = res
                     self._emit(res)
                     yield res
         finally:
             stop.set()
-            for th in threads:
-                th.join()
+            join_all()
             # tasks that finished while the stream was being cancelled: the
             # WAL has them but the consumer never saw them. Park them for
             # drain_stragglers() so a replanning driver can re-surface them.
@@ -536,6 +842,10 @@ class MeshSliceExecutorPool:
         driver_slice: object | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         prepared_cache: PreparedDataCache | None = None,
+        max_task_retries: int = 0,
+        retry_backoff: float = 0.05,
+        poison_threshold: int | None = 3,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         if slices is not None:
             self.slices = list(slices)
@@ -563,6 +873,16 @@ class MeshSliceExecutorPool:
         self.on_result = on_result
         self._dead: set[int] = set()
         self._stragglers: list[TaskResult] = []
+        #: per-task attempt/taint bookkeeping, POOL-lifetime (§3.7) — the
+        #: same ledger semantics as LocalExecutorPool
+        self._retry = RetryLedger(max_task_retries=max_task_retries,
+                                  retry_backoff=retry_backoff,
+                                  poison_threshold=poison_threshold,
+                                  sleep=sleep)
+        #: retriable failures collected by ``_execute`` for the current
+        #: ``submit`` to re-queue (the pool is a serial generator, so the
+        #: buffer needs no lock)
+        self._pending_retry: list[TrainTask] = []
 
     def _emit(self, res: TaskResult) -> TaskResult:
         if self.on_result is not None:
@@ -650,67 +970,116 @@ class MeshSliceExecutorPool:
                           resume_state=rstate)
 
     def _run_fused(self, eid: int, unit: FusedBatch, sl, data,
-                   validate: EvalPlan | None = None) -> list[TaskResult]:
+                   validate: EvalPlan | None = None,
+                   run_hook: bool = True) -> list[TaskResult]:
         """One fused unit as ONE placed program: the runner receives the
         batch and returns (payload per member, total seconds); results are
         unbatched with amortized per-member seconds. The estimator-backed
         default also scores the whole model stack on its slice (one vmapped
-        predict program, §3.4). A batch-level exception becomes per-member
-        error results; ExecutorFailure propagates."""
+        predict program, §3.4). A batch-level exception is BISECTED (§3.7):
+        the batch splits at its bucket boundaries and each piece re-runs,
+        degrading to solo member runs, so good members are salvaged and
+        only the culprit carries the error. ExecutorFailure propagates."""
         members = [m for m in unit.tasks if not self.wal.is_done(m.task_id)]
         if not members:
             return []
         sub = unit.restrict({m.task_id for m in members})
-        conv = 0.0
-        scores: list = [None] * len(members)
-        eval_per = 0.0
-        try:
-            if self.failure_hook is not None:
+        if run_hook and self.failure_hook is not None:
+            try:
                 self.failure_hook(eid, unit)  # may raise ExecutorFailure
-            if self.task_runner is not None:
-                payloads, total = self.task_runner(sub, sl, data)
-            else:
-                est = get_estimator(sub.estimator)
-                payloads, total, conv = run_prepared_batched(
-                    est, data, [m.params for m in members],
-                    cache=self.prepared_cache, placement=self._placement(sl))
-                if validate is not None:
-                    scores, eval_per = evaluate_models(
-                        est, payloads, validate,
-                        prepared_cache=self.prepared_cache,
-                        placement=self._placement(sl))
+            except ExecutorFailure:
+                raise
+            except Exception as e:
+                # injected batch-level failure: every pending member fails
+                # this attempt; _execute's retry filter re-queues them SOLO
+                return [TaskResult(task=m, model=None, train_seconds=0.0,
+                                   executor_id=eid, error=repr(e),
+                                   batch_size=len(members)) for m in members]
+        if self.task_runner is None:
+            # estimator-backed: the shared fused machinery (including §3.7
+            # bisection); journal successes inline, as _run_one does
+            results = _run_fused_unit(sub, data, eid,
+                                      cache=self.prepared_cache,
+                                      placement=self._placement(sl),
+                                      validate=validate)
+            for res in results:
+                if res.ok:
+                    self.wal.record(WALRecord(
+                        task_id=res.task.task_id, key=res.task.key(),
+                        seconds=res.train_seconds, executor_id=eid,
+                        score=res.score,
+                        convert_seconds=res.convert_seconds,
+                        eval_seconds=res.eval_seconds))
+                    if res.resume_state is not None:
+                        self.wal.record_resume(res.task.task_id,
+                                               res.resume_state)
+            return results
+        try:
+            payloads, total = self.task_runner(sub, sl, data)
         except ExecutorFailure:
             raise
         except Exception as e:
-            return [TaskResult(task=m, model=None, train_seconds=0.0,
-                               executor_id=eid, error=repr(e),
-                               batch_size=len(members)) for m in members]
+            if len(members) == 1:
+                return [TaskResult(task=members[0], model=None,
+                                   train_seconds=0.0, executor_id=eid,
+                                   error=repr(e))]
+            pieces = sub.split_at_buckets()
+            if len(pieces) > 1:
+                out: list[TaskResult] = []
+                for piece in pieces:
+                    out.extend(self._run_fused(eid, piece, sl, data,
+                                               validate, run_hook=False))
+                return out
+            # single structural bucket: singleton machinery — each member
+            # runs solo so only the culprit carries the error
+            return [self._run_one(eid, m, sl, data, validate)
+                    for m in sub.singletons()]
         per = total / len(members)
-        carrier = charge_carrier(members) if conv > 0 else -1
         results = []
-        for j, (m, payload) in enumerate(zip(members, payloads)):
-            conv_j = conv if j == carrier else 0.0
+        for m, payload in zip(members, payloads):
             self.wal.record(WALRecord(task_id=m.task_id, key=m.key(),
                                       seconds=per, executor_id=eid,
-                                      score=scores[j], convert_seconds=conv_j,
-                                      eval_seconds=eval_per))
+                                      score=None))
             results.append(TaskResult(task=m, model=payload, train_seconds=per,
-                                      executor_id=eid, batch_size=len(members),
-                                      convert_seconds=conv_j,
-                                      score=scores[j], eval_seconds=eval_per))
+                                      executor_id=eid, batch_size=len(members)))
         return results
 
     def _execute(self, eid: int, task, sl, data,
                  validate: EvalPlan | None = None) -> list[TaskResult]:
         """Run one scheduled unit (task or fused batch); every produced
         result is emitted to ``on_result`` HERE, the moment it exists — so
-        even results a cancelled stream never surfaces feed the observers."""
+        even results a cancelled stream never surfaces feed the observers.
+
+        Retriable failures (§3.7) are filtered OUT of the returned batch
+        and parked on ``_pending_retry`` — failed fused members re-queue as
+        solo tasks (pre-amortization cost restored) — for ``submit`` to
+        re-dispatch with backoff already paid.
+        """
+        solo: dict[int, TrainTask] = {}
         if isinstance(task, FusedBatch):
-            results = self._run_fused(eid, task, sl, data, validate)
+            raw = self._run_fused(eid, task, sl, data, validate)
+            solo = {task.tasks[i].task_id: task.unfused_task(i)
+                    for i in range(len(task.tasks))}
         elif self.wal.is_done(task.task_id):
-            results = []
+            raw = []
+        elif self._retry.quarantined(task.task_id):
+            raw = [TaskResult(
+                task=task, model=None, train_seconds=0.0, executor_id=eid,
+                error=f"quarantined after {self._retry.taints_of(task.task_id)}"
+                      " executor deaths while claimed (poison task)",
+                quarantined=True)]
         else:
-            results = [self._run_one(eid, task, sl, data, validate)]
+            raw = [self._run_one(eid, task, sl, data, validate)]
+        results = []
+        for res in raw:
+            if (not res.ok and not res.quarantined
+                    and self._retry.should_retry(res.task.task_id)):
+                self._retry.wait(res.task.task_id)
+                self._pending_retry.append(
+                    solo.get(res.task.task_id, res.task))
+                continue
+            self._retry.stamp(res)
+            results.append(res)
         for res in results:
             self._emit(res)
         return results
@@ -734,6 +1103,35 @@ class MeshSliceExecutorPool:
         got, self._stragglers = self._stragglers, []
         return got
 
+    def _taint_claimed(self, eid: int, unit):
+        """The slice died while running ``unit`` (§3.7): taint it. Returns
+        ``(quarantine results to surface, tasks to re-queue)`` — a fused
+        unit re-queues as solo singletons so the poison member isolates
+        instead of re-killing whole batches; a task past
+        ``poison_threshold`` deaths surfaces as a terminal quarantine
+        error instead of being handed to the next victim."""
+        if isinstance(unit, FusedBatch):
+            qres: list[TaskResult] = []
+            requeue: list[TrainTask] = []
+            for m in unit.singletons():
+                if self.wal.is_done(m.task_id):
+                    continue
+                qr, rq = self._taint_claimed(eid, m)
+                qres.extend(qr)
+                requeue.extend(rq)
+            return qres, requeue
+        n = self._retry.taint(unit.task_id)
+        if self._retry.quarantined(unit.task_id):
+            res = TaskResult(
+                task=unit, model=None, train_seconds=0.0, executor_id=eid,
+                error=f"quarantined after {n} executor deaths while "
+                      "claimed (poison task)",
+                quarantined=True)
+            self._retry.stamp(res)
+            self._emit(res)
+            return [res], []
+        return [], [unit]
+
     def submit(self, assignment: Assignment, data,
                validate: EvalPlan | None = None) -> Iterator[TaskResult]:
         """Execute the plan slice by slice, yielding each result as it lands.
@@ -750,21 +1148,35 @@ class MeshSliceExecutorPool:
         LocalExecutorPool's recovery semantics.
         """
         self._stragglers = []  # per-submit buffer (see drain_stragglers)
+        self._pending_retry = []
         queues = self._queues(assignment)
         alive = set(range(len(self.slices)))
         stranded: list[TrainTask] = []
-        for eid, (q, sl) in enumerate(zip(queues, self.slices)):
+        for eid, q in enumerate(queues):
+            if eid >= len(self.slices):
+                # a plan with more queues than slices (a replan built for a
+                # bigger pool) must not silently drop the tail: strand it
+                # for the re-queue loop instead of vanishing
+                stranded.extend(q)
+                continue
+            sl = self.slices[eid]
             for i, task in enumerate(q):
                 try:
                     results = self._execute(eid, task, sl, data, validate)
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
-                    stranded.extend(q[i:])
+                    qres, rq = self._taint_claimed(eid, task)
+                    stranded.extend(rq)
+                    stranded.extend(q[i + 1:])
+                    yield from self._deliver(qres)
                     break
                 yield from self._deliver(results)
-        # failure re-queue: surviving slices absorb dead slices' work
-        while stranded:
+        # failure re-queue: surviving slices absorb dead slices' work (and
+        # every retriable failure _execute parked on _pending_retry)
+        while True:
+            stranded.extend(self._pending_retry)
+            self._pending_retry = []
             pending = [t for t in stranded
                        if isinstance(t, FusedBatch) or not self.wal.is_done(t.task_id)]
             stranded = []
@@ -776,17 +1188,23 @@ class MeshSliceExecutorPool:
                         results = self._execute(-1, task, self.driver_slice,
                                                 data, validate)
                     except ExecutorFailure as e:
-                        # the driver has no failure semantics to escalate to:
-                        # record the loss as task-level errors
+                        # every executor AND the driver-inline fallback are
+                        # gone: no failure semantics left to escalate to, so
+                        # the stranded tasks surface as terminal errors —
+                        # they must never vanish
+                        err = AllExecutorsLost(
+                            f"all executors lost; driver-inline fallback "
+                            f"died too: {e!r}")
                         members = task.tasks if isinstance(task, FusedBatch) else [task]
                         results = [TaskResult(task=m, model=None, train_seconds=0.0,
-                                              executor_id=-1, error=repr(e))
+                                              executor_id=-1, error=repr(err))
                                    for m in members
                                    if not self.wal.is_done(m.task_id)]
                         for res in results:
+                            self._retry.stamp(res)
                             self._emit(res)
                     yield from self._deliver(results)
-                break
+                continue
             for idx, task in enumerate(pending):
                 if not alive:  # last survivor died mid-re-queue
                     stranded.extend(pending[idx:])
@@ -798,7 +1216,9 @@ class MeshSliceExecutorPool:
                 except ExecutorFailure:
                     self._dead.add(eid)
                     alive.discard(eid)
-                    stranded.append(task)  # retry on the next survivor
+                    qres, rq = self._taint_claimed(eid, task)
+                    stranded.extend(rq)  # retry on the next survivor
+                    yield from self._deliver(qres)
                     continue
                 yield from self._deliver(results)
 

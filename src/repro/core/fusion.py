@@ -134,6 +134,12 @@ class FusedBatch:
         prior = self._prior_of(i)
         return t if prior == t.cost else dataclasses.replace(t, cost=prior)
 
+    def singletons(self) -> "list[TrainTask]":
+        """Every member as a standalone sequential task (pre-amortization
+        costs restored) — a tainted batch re-queues this way so a poison
+        member isolates instead of re-killing whole batches (§3.7)."""
+        return [self.unfused_task(i) for i in range(len(self.tasks))]
+
     def restrict(self, keep_ids) -> "FusedBatch | None":
         """The sub-batch of members still pending, or None if none are."""
         kept = [i for i, t in enumerate(self.tasks) if t.task_id in keep_ids]

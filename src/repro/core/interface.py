@@ -189,6 +189,21 @@ class TaskResult:
     #: the family supports warm resume; journalled in the WAL alongside the
     #: completion record so mid-rung restarts stay warm. None otherwise.
     resume_state: "ResumeState | None" = None
+    # -- fault plane (DESIGN.md §3.7) ----------------------------------
+    #: total attempts this task burned before producing THIS result (1 =
+    #: first try; a terminal error result after k retries reports k+1).
+    #: ``SearchStats.n_retries`` sums the excess.
+    attempts: int = 1
+    #: True when the task was quarantined: it was claimed by
+    #: ``poison_threshold`` executors that all died, so the pool surfaces
+    #: this error result instead of re-queueing it a cascade-killing third
+    #: time. ``error`` is set; ``SearchStats.n_quarantined`` counts these.
+    quarantined: bool = False
+    #: True when the task blew its hard wall-clock deadline on every
+    #: allowed attempt; ``train_seconds`` then holds the elapsed time the
+    #: last abandoned attempt burned, which the CostModel observes as a
+    #: censored runtime so the estimate that missed stops being trusted.
+    timed_out: bool = False
 
     @property
     def ok(self) -> bool:

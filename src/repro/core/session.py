@@ -96,6 +96,10 @@ class SearchStats:
         self.total_seconds = 0.0
         self.n_tasks = 0
         self.n_failures = 0
+        # -- fault plane (DESIGN.md §3.7) -------------------------------
+        self.n_retries = 0              # extra attempts paid beyond the first
+        self.n_quarantined = 0          # poison tasks quarantined terminally
+        self.n_timeouts = 0             # results that crossed the hard deadline
         self.n_replans = 0              # mid-round drift-triggered replans
         self.n_rung_kills = 0           # rung tasks cancelled mid-flight by an
                                         # adaptive tuner (ASHA early_kill, §3.6)
@@ -171,8 +175,18 @@ class Session:
     @property
     def backend(self) -> ExecutorBackend:
         if self._backend is None:
+            # fault-plane knobs (§3.7) flow from the spec; explicit
+            # pool_options still win so tests can override any of them
+            opts = dict(
+                max_task_retries=self.spec.max_task_retries,
+                retry_backoff=self.spec.retry_backoff,
+                poison_threshold=self.spec.poison_threshold,
+                deadline_factor=self.spec.deadline_factor,
+                task_timeout_seconds=self.spec.task_timeout_seconds,
+            )
+            opts.update(self.spec.pool_options)
             self._backend = LocalExecutorPool(
-                self.spec.n_executors, wal=self.wal, **self.spec.pool_options
+                self.spec.n_executors, wal=self.wal, **opts
             )
         return self._backend
 
@@ -679,6 +693,12 @@ class Session:
             self.stats.total_seconds = time.perf_counter() - t_start
             self.stats.n_tasks = len(self._results)
             self.stats.n_failures = sum(1 for r in self._results if not r.ok)
+            self.stats.n_retries = sum(
+                max(0, getattr(r, "attempts", 1) - 1) for r in self._results)
+            self.stats.n_quarantined = sum(
+                1 for r in self._results if getattr(r, "quarantined", False))
+            self.stats.n_timeouts = sum(
+                1 for r in self._results if getattr(r, "timed_out", False))
             hits, misses = _counts(cc)     # this session's cache traffic
             self.stats.compile_cache_hits = hits - cc_hits0
             self.stats.compile_cache_misses = misses - cc_misses0

@@ -96,6 +96,32 @@ class SearchSpec:
     #: more dispatch/compile but are scheduled atomically, so very large
     #: values can cost load balance on few executors
     max_fuse: int = 16
+    # -- fault plane (DESIGN.md §3.7) ------------------------------------
+    #: in-session retries for a task whose train raises: the task re-queues
+    #: with capped exponential backoff up to this many times, then surfaces
+    #: as a terminal error TaskResult. 0 = the pre-§3.7 fail-fast behavior.
+    max_task_retries: int = 0
+    #: base of the retry backoff (seconds; doubles per failed attempt,
+    #: capped at RetryLedger.BACKOFF_CAP). Pools take an injectable
+    #: ``sleep=`` so simulated clocks pay nothing.
+    retry_backoff: float = 0.05
+    #: a task claimed by this many executors that ALL died is quarantined
+    #: (error result, ``SearchStats.n_quarantined``) instead of re-queued,
+    #: so one poison config cannot cascade-kill the pool. None disables.
+    poison_threshold: int | None = 3
+    #: soft deadline multiplier: a unit in flight longer than
+    #: ``deadline_factor`` × its CostModel-predicted cost is speculatively
+    #: duplicated on an idle executor (first completion wins) — the same
+    #: machinery as ``pool_options['speculation_factor']``, which takes
+    #: precedence when both are set. None disables.
+    deadline_factor: float | None = None
+    #: hard wall-clock timeout per unit (seconds): an overdue task is
+    #: abandoned-and-requeued (burning one retry attempt) and, out of
+    #: attempts, surfaces as a terminal ``timed_out`` error result whose
+    #: elapsed time feeds the CostModel as a censored observation. None
+    #: disables (the default — a hung worker thread then blocks forever,
+    #: the pre-§3.7 behavior).
+    task_timeout_seconds: float | None = None
     #: fault-injection / speculation knobs forwarded to the executor pool
     pool_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -153,6 +179,24 @@ class SearchSpec:
         object.__setattr__(self, "max_fuse", int(self.max_fuse))
         if self.max_fuse < 2:
             raise ValueError(f"max_fuse must be >= 2, got {self.max_fuse}")
+        # -- fault plane (§3.7) ------------------------------------------
+        object.__setattr__(self, "max_task_retries", int(self.max_task_retries))
+        if self.max_task_retries < 0:
+            raise ValueError(
+                f"max_task_retries must be >= 0, got {self.max_task_retries}")
+        if self.retry_backoff < 0:
+            raise ValueError(
+                f"retry_backoff must be >= 0, got {self.retry_backoff}")
+        if self.poison_threshold is not None:
+            object.__setattr__(self, "poison_threshold",
+                               int(self.poison_threshold))
+            if self.poison_threshold < 1:
+                raise ValueError(
+                    f"poison_threshold must be >= 1, got {self.poison_threshold}")
+        for name in ("deadline_factor", "task_timeout_seconds"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
 
     # -- construction helpers ------------------------------------------
     @classmethod

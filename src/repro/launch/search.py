@@ -109,6 +109,8 @@ def run_tabular(args) -> int:
         replan_threshold=args.replan_threshold,
         fuse=args.fuse,
         max_fuse=args.max_fuse,
+        max_task_retries=args.max_task_retries,
+        deadline_factor=args.deadline_factor,
     )
     print(f"search space: {spec.n_grid_tasks} configurations over "
           f"{[s.estimator for s in spec.spaces]}")
@@ -267,6 +269,15 @@ def main() -> int:
                         "that train as one device program (DESIGN.md §3.2)")
     p.add_argument("--max-fuse", type=int, default=16, metavar="N",
                    help="largest fused batch (configs per program, default 16)")
+    p.add_argument("--max-task-retries", type=int, default=0, metavar="N",
+                   help="re-run a task whose train raises up to N times "
+                        "(capped exponential backoff) before it surfaces "
+                        "as a terminal error (DESIGN.md \u00a73.7)")
+    p.add_argument("--deadline-factor", type=float, default=None, metavar="F",
+                   help="soft deadline: a task in flight longer than F \u00d7 "
+                        "its CostModel-predicted cost is speculatively "
+                        "duplicated on an idle executor; first completion "
+                        "wins (DESIGN.md \u00a73.7)")
     p.add_argument("--max-seconds", type=float, default=None,
                    help="early-stop budget: wall-clock seconds")
     p.add_argument("--max-tasks", type=int, default=None,

@@ -57,7 +57,12 @@ from repro.core.evaluation import EvalPlan, predict_compile_cache
 # solo scoring, task-level failure isolation) — re-implementing them here
 # would let the two drift apart
 from repro.core.executor import _run_fused_unit, _score_solo, _train_solo
-from repro.core.fault import SearchWAL, WALRecord
+from repro.core.fault import (
+    ExecutorFailure,
+    RetryLedger,
+    SearchWAL,
+    WALRecord,
+)
 from repro.core.fusion import FusedBatch, compile_cache
 from repro.core.interface import TaskResult
 from repro.core.scheduler import FairShareArbiter
@@ -180,6 +185,13 @@ class _SessionCtx:
         self.train = train
         self.validate = validate
         self.wal = SearchWAL(spec.wal_path)
+        #: per-session attempt/taint bookkeeping (§3.7) — each session's
+        #: spec sets its own retry budget and poison threshold, but the
+        #: deaths it survives happen on the SHARED workers
+        self.retry = RetryLedger(max_task_retries=spec.max_task_retries,
+                                 retry_backoff=spec.retry_backoff,
+                                 poison_threshold=spec.poison_threshold,
+                                 sleep=service._sleep)
         self.backend = _TenantBackend(service, self)
         self.session = Session(spec, backend=self.backend)
         self.state = "queued"          # queued -> active -> done | cancelled
@@ -381,13 +393,22 @@ class SearchService:
                  prepared_cache: PreparedDataCache | None = None,
                  fleet_cost_model: CostModel | None = None,
                  cache_budget_bytes: int | None = None,
-                 compile_budget_bytes: int | None = None):
+                 compile_budget_bytes: int | None = None,
+                 failure_hook=None,
+                 sleep=time.sleep):
         if n_executors <= 0:
             raise ValueError("n_executors must be positive")
         if max_active < 1:
             raise ValueError("max_active must be >= 1")
         self.n_executors = n_executors
         self.max_active = max_active
+        #: chaos seam (§3.7): called as ``failure_hook(wid, task)`` before a
+        #: unit runs — an ExecutorFailure simulates the worker's executor
+        #: dying with the unit claimed, any other exception is a task-level
+        #: train failure. Same contract as the pools' failure_hook.
+        self.failure_hook = failure_hook
+        #: injectable so retry backoff costs nothing under simulated clocks
+        self._sleep = sleep
         self.max_queued = max_queued
         self.artifact_root = artifact_root
         self.prepared_cache = (prepared_cache if prepared_cache is not None
@@ -616,33 +637,121 @@ class SearchService:
         ticket = unit.ticket
         ctx = ticket.ctx
         t0 = time.perf_counter()
-        with tenant_context(ctx.tenant):
-            results = self._run_unit(wid, unit.task, ticket)
+        try:
+            with tenant_context(ctx.tenant):
+                results = self._run_unit(wid, unit.task, ticket)
+        except ExecutorFailure:
+            # the worker's executor "died" with this unit claimed (§3.7);
+            # the thread itself survives — the service's model is that a
+            # replacement executor is attached instantly — but the unit is
+            # tainted exactly like a pool task whose executor was lost
+            with self._cond:
+                ctx.n_units += 1
+                ctx.executed_seconds += time.perf_counter() - t0
+            self._requeue_after_death(wid, unit)
+            return
         elapsed = time.perf_counter() - t0
         with self._cond:
             ctx.n_units += 1
             ctx.executed_seconds += elapsed
         for res in results:
-            if ticket.ctx.backend.on_result is not None:
-                try:
-                    ticket.ctx.backend.on_result(res)
-                except Exception:
-                    pass               # observers must not kill workers
-            ticket.out.put(res)
+            self._surface(ticket, res)
+
+    def _surface(self, ticket: _Ticket, res: TaskResult) -> None:
+        """Deliver one result to the session: observers first (CostModel
+        feedback), then the ticket's stream."""
+        if ticket.ctx.backend.on_result is not None:
+            try:
+                ticket.ctx.backend.on_result(res)
+            except Exception:
+                pass                   # observers must not kill workers
+        ticket.out.put(res)
+
+    def _repush(self, ticket: _Ticket, tasks: list) -> None:
+        """Re-queue retriable tasks on the arbiter (backoff already paid);
+        a cancelled or finished ticket drops them, matching _cancel_ticket's
+        discard of undispatched units."""
+        if not tasks:
+            return
+        with self._cond:
+            if ticket.cancelled or ticket.finished:
+                return
+            ticket.undispatched += len(tasks)
+            for t in tasks:
+                self._arbiter.push(ticket.ctx.tenant, _Unit(ticket, t),
+                                   getattr(t, "cost", None))
+            self._cond.notify_all()
+
+    def _requeue_after_death(self, wid: int, unit: _Unit) -> None:
+        """Taint a unit claimed by a dead executor (§3.7): quarantine past
+        the session's poison threshold, else re-queue — fused units as solo
+        singletons so the poison member isolates."""
+        ticket = unit.ticket
+        ledger = ticket.ctx.retry
+        wal = ticket.ctx.wal
+        members = (unit.task.singletons()
+                   if isinstance(unit.task, FusedBatch) else [unit.task])
+        repush = []
+        for t in members:
+            if wal.is_done(t.task_id):
+                continue
+            n = ledger.taint(t.task_id)
+            if ledger.quarantined(t.task_id):
+                res = TaskResult(
+                    task=t, model=None, train_seconds=0.0, executor_id=wid,
+                    error=f"quarantined after {n} executor deaths while "
+                          "claimed (poison task)",
+                    quarantined=True)
+                ledger.stamp(res)
+                self._surface(ticket, res)
+            else:
+                repush.append(t)
+        self._repush(ticket, repush)
 
     def _run_unit(self, wid: int, task, ticket: _Ticket) -> list[TaskResult]:
         wal = ticket.ctx.wal
+        ledger = ticket.ctx.retry
+        solo: dict[int, object] = {}
         if isinstance(task, FusedBatch):
             pend = {m.task_id for m in task.tasks if not wal.is_done(m.task_id)}
             if not pend:
                 return []
-            results = _run_fused_unit(task.restrict(pend), ticket.data, wid,
-                                      cache=self.prepared_cache,
-                                      validate=ticket.validate)
+            sub = task.restrict(pend)
+            solo = {sub.tasks[i].task_id: sub.unfused_task(i)
+                    for i in range(len(sub.tasks))}
+            hook_err: Exception | None = None
+            if self.failure_hook is not None:
+                try:
+                    self.failure_hook(wid, task)  # may raise ExecutorFailure
+                except ExecutorFailure:
+                    raise
+                except Exception as e:
+                    # injected batch-level failure: every pending member
+                    # fails this attempt; the retry filter below re-queues
+                    # them SOLO so the culprit isolates on re-run (§3.7)
+                    hook_err = e
+            if hook_err is not None:
+                results = [TaskResult(task=m, model=None, train_seconds=0.0,
+                                      executor_id=wid, error=repr(hook_err),
+                                      batch_size=len(sub.tasks))
+                           for m in sub.tasks]
+            else:
+                results = _run_fused_unit(sub, ticket.data, wid,
+                                          cache=self.prepared_cache,
+                                          validate=ticket.validate)
         else:
             if wal.is_done(task.task_id):
                 return []
+            if ledger.quarantined(task.task_id):
+                results = [TaskResult(
+                    task=task, model=None, train_seconds=0.0, executor_id=wid,
+                    error=f"quarantined after {ledger.taints_of(task.task_id)}"
+                          " executor deaths while claimed (poison task)",
+                    quarantined=True)]
+                return [ledger.stamp(r) for r in results]
             try:
+                if self.failure_hook is not None:
+                    self.failure_hook(wid, task)  # may raise ExecutorFailure
                 # _train_solo dispatches RungTasks through the resumable
                 # path (§3.6), so adaptive tenants get warm rungs too
                 est, model, secs, conv, rstate = _train_solo(
@@ -654,10 +763,25 @@ class SearchService:
                                       convert_seconds=conv, score=score,
                                       eval_seconds=eval_s,
                                       resume_state=rstate)]
+            except ExecutorFailure:
+                raise
             except Exception as e:     # task-level failure, worker survives
                 results = [TaskResult(task=task, model=None, train_seconds=0.0,
                                       executor_id=wid, error=repr(e))]
+        surfaced: list[TaskResult] = []
+        retry: list = []
         for res in results:
+            if (not res.ok and not res.quarantined
+                    and ledger.should_retry(res.task.task_id)):
+                # bounded retry (§3.7): backoff on this worker, then back
+                # on the arbiter for any shared worker to claim
+                ledger.wait(res.task.task_id)
+                retry.append(solo.get(res.task.task_id, res.task))
+                continue
+            ledger.stamp(res)
+            surfaced.append(res)
+        self._repush(ticket, retry)
+        for res in surfaced:
             if res.ok:                 # failures stay out: resume retries them
                 wal.record(WALRecord(
                     task_id=res.task.task_id, key=res.task.key(),
@@ -666,7 +790,7 @@ class SearchService:
                     eval_seconds=res.eval_seconds))
                 if res.resume_state is not None:
                     wal.record_resume(res.task.task_id, res.resume_state)
-        return results
+        return surfaced
 
     # -- stats / lifecycle -------------------------------------------------
     def stats(self) -> ServiceStats:

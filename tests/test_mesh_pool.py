@@ -254,3 +254,45 @@ def test_fused_unit_requeues_to_survivor_on_slice_death(tmp_path):
     assert all(r.ok for r in results)
     assert pool.dead_executors == {0}
     assert all(s == "s1" for _, s in runner.calls)   # survivor did everything
+
+
+# --------------------------------------------------------------------------
+# Pinning paths (§3.7): plans wider than the pool, and total executor loss.
+# --------------------------------------------------------------------------
+
+def test_excess_plan_queues_are_not_dropped():
+    """A plan built for MORE executors than the pool has slices: the extra
+    queues' tasks must still surface (the old zip() silently dropped them)."""
+    tasks = mk_tasks([1.0] * 6)
+    runner = RecordingRunner()
+    pool = MeshSliceExecutorPool(task_runner=runner, slices=["s0", "s1"])
+    # round_robin over 4 queues: q2=[2] and q3=[3] have no slice to run on
+    results = pool.run(schedule(tasks, 4, policy="round_robin"), data=None)
+    assert sorted(r.task.task_id for r in results) == [0, 1, 2, 3, 4, 5]
+    assert all(r.ok for r in results)
+    assert pool.dead_executors == set()      # stranded ≠ dead
+    assert {s for _, s in runner.calls} == {"s0", "s1"}
+
+
+def test_driver_fallback_death_surfaces_typed_errors(tmp_path):
+    """Every slice dead AND the driver-inline fallback dying too: stranded
+    tasks surface as AllExecutorsLost error results — never vanish, never
+    journal."""
+    from repro.core import AllExecutorsLost  # noqa: F401 — typed error
+
+    tasks = mk_tasks([1.0] * 4)
+    # round_robin: s0 [0,1], s1 [2,3]; both die on their first task, then
+    # the driver (slice handle "s0") dies again on tasks 1 and 3
+    runner = RecordingRunner(
+        die_on={("s0", 0), ("s1", 2), ("s0", 1), ("s0", 3)})
+    pool = MeshSliceExecutorPool(task_runner=runner, slices=["s0", "s1"],
+                                 wal=SearchWAL(str(tmp_path / "wal.jsonl")))
+    results = pool.run(schedule(tasks, 2, policy="round_robin"), data=None)
+    assert sorted(r.task.task_id for r in results) == [0, 1, 2, 3]
+    assert pool.dead_executors == {0, 1}
+    by_id = {r.task.task_id: r for r in results}
+    assert by_id[0].ok and by_id[2].ok       # driver salvaged what it could
+    for tid in (1, 3):
+        assert not by_id[tid].ok
+        assert "AllExecutorsLost" in by_id[tid].error
+        assert not pool.wal.is_done(tid)     # failures stay out of the WAL
