@@ -290,10 +290,14 @@ def histogram_smoke() -> list[Row]:
 def histogram_tile_sweep() -> list[Row]:
     """Re-measure tile candidates (interpret-mode wall time — a launch/grid
     overhead proxy on CPU; re-run on TPU for real MXU numbers) and report the
-    winner per (F, B) shape. This sweep produced ``_TILE_TABLE``."""
+    winner per (F, B) shape. Since the §3.8 fusion the sweep drives
+    ``fused_level_split_tpu`` — the kernel training actually launches, whose
+    per-block work adds the split scan and a wider scratch to the histogram
+    accumulate — and its ranking is what ``_TILE_TABLE`` records."""
+    import jax
     import jax.numpy as jnp
 
-    from repro.kernels.histogram import histogram_tpu
+    from repro.kernels.histogram import fused_level_split_tpu
 
     rows: list[Row] = []
     rng = np.random.default_rng(0)
@@ -307,10 +311,11 @@ def histogram_tile_sweep() -> list[Row]:
         for bf, br in itertools.product((1, 2, 4, 8, 16), (128, 256, 512, 1024)):
             if bf > f or 2 * n_nodes * bf * b * 4 > (4 << 20):
                 continue
-            run = lambda: histogram_tpu(  # noqa: E731
+            run = lambda: jax.block_until_ready(fused_level_split_tpu(  # noqa: E731
                 bins, g, h, node, n_nodes=n_nodes, n_bins=b,
+                lam=1.0, min_child_weight=1.0,
                 block_rows=br, block_features=bf, interpret=True,
-            ).block_until_ready()
+            ))
             run()
             t0 = time.perf_counter()
             run()

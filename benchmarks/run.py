@@ -29,6 +29,7 @@ from benchmarks import (
     cost_model_bench,
     eval_bench,
     fusion_bench,
+    gbdt_kernel_bench,
     lm_bench,
     paper_figs,
     prepared_data_bench,
@@ -52,6 +53,7 @@ BENCHES = {
     "eval_plane": eval_bench.full,
     "asha": asha_bench.full,
     "histogram_sweep": fusion_bench.histogram_tile_sweep,
+    "gbdt_kernel": gbdt_kernel_bench.full,
     "lm_steps": lm_bench.arch_step_times,
     "kernels": lm_bench.kernel_parity,
     "serve": serve_bench.full,
@@ -67,6 +69,7 @@ SMOKE_BENCHES = {
     "eval_plane": eval_bench.smoke,
     "asha": asha_bench.smoke,
     "histogram": fusion_bench.histogram_smoke,
+    "gbdt_kernel": gbdt_kernel_bench.smoke,
     "serve": serve_bench.smoke,
     "chaos": chaos_bench.smoke,
 }

@@ -1,4 +1,4 @@
-"""GBDT split-finding histogram build as a Pallas TPU kernel.
+"""GBDT split-finding hot path as Pallas TPU kernels.
 
 The paper's dominant workload is gradient-boosted trees (864 of its 1,211
 search tasks run XGBoost); histogram construction is the per-level hot spot
@@ -8,11 +8,28 @@ the MXU: one-hot(node)ᵀ @ (one-hot(bin) ⊙ grad) turns the scatter into two
 dense matmuls per (feature-block, row-block) tile — a systolic-array-native
 reformulation (see DESIGN.md §2, hardware-adaptation notes).
 
+Two kernels share that accumulate core:
+
+* :func:`histogram_tpu` — histograms only (the original kernel; the sweep
+  bench and ``ops.histogram`` keep using it).
+* :func:`fused_level_split_tpu` — the training hot path (DESIGN.md §3.8):
+  the same accumulate PLUS the in-kernel cumsum → gain → masked-argmax
+  split scan, so only ``(best_gain, best_feat, best_split)`` per node (and,
+  when the caller is caching parents for histogram subtraction, the level's
+  histograms) leave VMEM. It also implements the subtraction assembly:
+  fed the compacted smaller-child rows and the cached parent histograms, it
+  derives the sibling as ``parent − small`` in VMEM before scanning.
+
 Grid layout: ``(feature_blocks, row_blocks)`` with rows minor-most, so the
 per-feature-block accumulator lives in VMEM scratch across the sequential
-row sweep and is flushed once at the final row block.
+row sweep and is flushed once at the final row block. The split scan runs
+in that flush; per-node bests combine across feature blocks with a strict
+``>`` so the FIRST block attaining the max wins — exactly XLA's flattened
+first-argmax tie-breaking.
 
-Oracle: :func:`repro.kernels.ref.histogram_ref`. Dispatch: ``ops.histogram``.
+Oracles: :func:`repro.kernels.ref.histogram_ref` /
+:func:`repro.kernels.ref.level_split_ref`. Dispatch: ``ops.histogram`` /
+``ops.level_split``.
 """
 from __future__ import annotations
 
@@ -23,23 +40,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["histogram_tpu", "pick_tiles"]
+__all__ = ["histogram_tpu", "fused_level_split_tpu", "pick_tiles"]
 
 #: Swept tile defaults, keyed by power-of-two bin count: n_bins →
 #: (block_features, block_rows). Derived from the benchmark sweep over the
 #: smoke workload's (F, B) shapes (benchmarks/fusion_bench.py
-#: ``histogram_tile_sweep``): the winners keep the flattened minor dimension
-#: ``block_f · n_bins`` lane-aligned (a multiple of 128) at 512–1024 lanes —
-#: enough columns to feed the MXU per step without blowing the VMEM scratch
-#: (2 · n_nodes · block_f · n_bins · 4 B) — and amortize grid-step overhead
-#: with deep row blocks. Re-run the sweep on real TPU hardware before
-#: trusting absolute numbers; the CPU interpret-mode proxy ranks launch and
-#: grid overhead, not MXU throughput.
+#: ``histogram_tile_sweep``), re-run against ``fused_level_split_tpu`` after
+#: the §3.8 fusion — the fused kernel's flush step (cumsum + gain + argmax
+#: over the whole feature block) shifts the optimum toward deeper row blocks
+#: at wide B=64 shapes and narrower feature blocks at B ≥ 128, where the
+#: per-flush scan work grows with ``block_f · n_bins``. The winners keep the
+#: flattened minor dimension ``block_f · n_bins`` lane-aligned (a multiple
+#: of 128) without blowing the VMEM scratch (2 · n_nodes · block_f · n_bins
+#: · 4 B). Re-run the sweep on real TPU hardware before trusting absolute
+#: numbers; the CPU interpret-mode proxy ranks launch and grid overhead,
+#: not MXU throughput.
 _TILE_TABLE: dict[int, tuple[int, int]] = {
     32: (16, 512),
-    64: (16, 512),
-    128: (8, 1024),
-    256: (4, 1024),
+    64: (16, 1024),
+    128: (2, 1024),
+    256: (4, 256),
 }
 
 
@@ -175,3 +195,255 @@ def histogram_tpu(
         interpret=interpret,
     )(bins_p, node_p[:, None], gh)
     return out[:, :f]
+
+
+# --------------------------------------------------------------------------
+# Fused level kernel: histogram accumulate + split scan (DESIGN.md §3.8).
+# --------------------------------------------------------------------------
+
+def _level_body(
+    bins_ref, node_ref, gh_ref, sil_ref, parent_ref, fmask_ref,
+    lam_ref, mcw_ref, blim_ref, hist_ref, bg_ref, bf_ref, bs_ref,
+    acc_g, acc_h, tot,
+    *, n_acc: int, n_nodes: int, n_bins: int, block_f: int, n_rblocks: int,
+    subtract: bool,
+):
+    """Shared kernel body; ``hist_ref`` is None when the caller skips the
+    histogram output (the final tree level: nothing caches it)."""
+    fi = pl.program_id(0)
+    ri = pl.program_id(1)
+
+    @pl.when(ri == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_h[...] = jnp.zeros_like(acc_h)
+
+    bins = bins_ref[...]                      # (rb, fb) int32
+    node = node_ref[...]                      # (rb, 1) int32; n_acc = dropped
+    gh = gh_ref[...].astype(jnp.float32)      # (rb, 2)
+    rb = bins.shape[0]
+
+    # one-hot(node): (rb, n_acc) — VPU compare against an iota, no gather;
+    # the pad/dump value n_acc yields an all-zero row, contributing nothing
+    node_iota = jax.lax.broadcasted_iota(jnp.int32, (rb, n_acc), 1)
+    node_oh = (node_iota == node).astype(jnp.float32)
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (rb, block_f, n_bins), 2)
+    bin_oh = (bin_iota == bins[:, :, None]).astype(jnp.float32)
+    gmat = (bin_oh * gh[:, None, None, 0]).reshape(rb, block_f * n_bins)
+    hmat = (bin_oh * gh[:, None, None, 1]).reshape(rb, block_f * n_bins)
+    dn = (((0,), (0,)), ((), ()))
+    acc_g[...] += jax.lax.dot_general(node_oh, gmat, dn, preferred_element_type=jnp.float32)
+    acc_h[...] += jax.lax.dot_general(node_oh, hmat, dn, preferred_element_type=jnp.float32)
+
+    @pl.when(ri == n_rblocks - 1)
+    def _flush():
+        g_acc = acc_g[...].reshape(n_acc, block_f, n_bins)
+        h_acc = acc_h[...].reshape(n_acc, block_f, n_bins)
+        hist = jnp.stack([g_acc, h_acc], axis=-1)        # (n_acc, fb, B, 2)
+        if subtract:
+            # accumulated = the SMALLER child of each sibling pair; derive
+            # the bigger one from the cached parent, then interleave back
+            # into heap order (node 2p, 2p+1): n_acc == n_nodes // 2
+            big = parent_ref[...] - hist
+            sil = (sil_ref[...] > 0)[:, :, None, None]   # (n_acc, 1, 1, 1)
+            left = jnp.where(sil, hist, big)
+            right = jnp.where(sil, big, hist)
+            hist = jnp.stack([left, right], axis=1).reshape(
+                n_nodes, block_f, n_bins, 2)
+        if hist_ref is not None:
+            hist_ref[...] = hist
+        # ---- in-kernel split scan (mirrors ref.split_scan_ref) ----------
+        gl = jnp.cumsum(hist[..., 0], axis=-1)           # (N, fb, B)
+        hl = jnp.cumsum(hist[..., 1], axis=-1)
+
+        @pl.when(fi == 0)
+        def _totals():
+            # node totals come from feature 0's cumsum tail (the oracle's
+            # gl[:, :1, -1:]); feature block 0 owns feature 0, so stash them
+            # in scratch for every later feature block's gain formula
+            tot[...] = jnp.stack([gl[:, 0, -1], hl[:, 0, -1]], axis=-1)
+
+        lam = lam_ref[0, 0]
+        mcw = mcw_ref[0, 0]
+        gt = tot[:, 0][:, None, None]
+        ht = tot[:, 1][:, None, None]
+        gr = gt - gl
+        hr = ht - hl
+        gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+        ok = (hl >= mcw) & (hr >= mcw)
+        # fmask covers the caller's feature subset AND the features this
+        # wrapper padded on — a padded column's garbage gain must never win
+        ok &= (fmask_ref[...][0] > 0)[None, :, None]
+        last = blim_ref[0, 0] - 1
+        ok &= jax.lax.broadcasted_iota(
+            jnp.int32, (n_nodes, block_f, n_bins), 2) < last
+        gain = jnp.where(ok, gain, -jnp.inf)
+        flat = gain.reshape(n_nodes, block_f * n_bins)
+        loc_gain = jnp.max(flat, axis=-1)[:, None]       # (N, 1)
+        loc_idx = jnp.argmax(flat, axis=-1)[:, None]     # first max in block
+        loc_feat = (fi * block_f + loc_idx // n_bins).astype(jnp.int32)
+        loc_split = (loc_idx % n_bins).astype(jnp.int32)
+
+        @pl.when(fi == 0)
+        def _first():
+            bg_ref[...] = loc_gain
+            bf_ref[...] = loc_feat
+            bs_ref[...] = loc_split
+
+        @pl.when(fi > 0)
+        def _combine():
+            # strict > keeps the earlier feature block on ties — the global
+            # flattened first-argmax the XLA fallback computes
+            better = loc_gain > bg_ref[...]
+            bg_ref[...] = jnp.where(better, loc_gain, bg_ref[...])
+            bf_ref[...] = jnp.where(better, loc_feat, bf_ref[...])
+            bs_ref[...] = jnp.where(better, loc_split, bs_ref[...])
+
+
+def _level_kernel_hist(
+    bins_ref, node_ref, gh_ref, sil_ref, parent_ref, fmask_ref,
+    lam_ref, mcw_ref, blim_ref, hist_ref, bg_ref, bf_ref, bs_ref,
+    acc_g, acc_h, tot, **kw,
+):
+    _level_body(bins_ref, node_ref, gh_ref, sil_ref, parent_ref, fmask_ref,
+                lam_ref, mcw_ref, blim_ref, hist_ref, bg_ref, bf_ref, bs_ref,
+                acc_g, acc_h, tot, **kw)
+
+
+def _level_kernel_nohist(
+    bins_ref, node_ref, gh_ref, sil_ref, parent_ref, fmask_ref,
+    lam_ref, mcw_ref, blim_ref, bg_ref, bf_ref, bs_ref,
+    acc_g, acc_h, tot, **kw,
+):
+    _level_body(bins_ref, node_ref, gh_ref, sil_ref, parent_ref, fmask_ref,
+                lam_ref, mcw_ref, blim_ref, None, bg_ref, bf_ref, bs_ref,
+                acc_g, acc_h, tot, **kw)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "n_bins", "block_rows", "block_features",
+                     "interpret", "return_hist"),
+)
+def fused_level_split_tpu(
+    bins: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    node: jax.Array,
+    *,
+    n_nodes: int,
+    n_bins: int,
+    lam,
+    min_child_weight,
+    bin_limit=None,
+    feat_mask: jax.Array | None = None,
+    parent_hist: jax.Array | None = None,
+    small_is_left: jax.Array | None = None,
+    block_rows: int | None = None,
+    block_features: int | None = None,
+    interpret: bool = False,
+    return_hist: bool = True,
+):
+    """One GBDT tree level fused in VMEM; see ``ref.level_split_ref``.
+
+    Direct mode (``parent_hist=None``): ``node`` holds each row's node in
+    ``[0, n_nodes)`` and the kernel accumulates all ``n_nodes`` histograms.
+    Subtraction mode: the caller (``ops.level_split``) has already compacted
+    the rows to the SMALLER child of every sibling pair — ``node`` holds the
+    PARENT id in ``[0, n_nodes/2)`` (pad/invalid rows: ``n_nodes/2``),
+    ``parent_hist`` the cached ``(n_nodes/2, F, B, 2)`` level-above
+    histograms, and ``small_is_left[p]`` whether pair p's smaller child is
+    the left one; the kernel accumulates only the half-size small-child
+    histograms and derives siblings as ``parent − small``.
+
+    ``lam``/``min_child_weight`` may be traced 0-d arrays, ``bin_limit`` a
+    traced int — they ride in SMEM as (1, 1) scalars. Returns
+    ``(hist | None, best_gain, best_feat, best_split)``; ``hist`` is trimmed
+    of feature padding, the per-node bests are (n_nodes,) arrays.
+    """
+    r, f = bins.shape
+    subtract = parent_hist is not None
+    n_acc = n_nodes // 2 if subtract else n_nodes
+    picked_f, picked_r = pick_tiles(f, n_bins, r, n_nodes)
+    block_rows = picked_r if block_rows is None else max(1, min(block_rows, r))
+    if not interpret and block_rows < 8:
+        block_rows = 8                        # Mosaic f32 sublane minimum
+    block_features = picked_f if block_features is None else min(block_features, f)
+    pad_r = (-r) % block_rows
+    pad_f = (-f) % block_features
+    bins_p = jnp.pad(bins, ((0, pad_r), (0, pad_f)))
+    node_p = jnp.pad(node.astype(jnp.int32), (0, pad_r), constant_values=n_acc)
+    gh = jnp.pad(
+        jnp.stack([grad, hess], axis=-1).astype(jnp.float32), ((0, pad_r), (0, 0))
+    )
+    fm = jnp.ones((f,), jnp.int32) if feat_mask is None else feat_mask.astype(jnp.int32)
+    fm_p = jnp.pad(fm[None, :], ((0, 0), (0, pad_f)))    # pad features: masked
+    lam_s = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    mcw_s = jnp.asarray(min_child_weight, jnp.float32).reshape(1, 1)
+    blim_s = jnp.asarray(
+        n_bins if bin_limit is None else bin_limit, jnp.int32).reshape(1, 1)
+    if subtract:
+        sil = small_is_left.astype(jnp.int32)[:, None]   # (n_acc, 1)
+        parent_p = jnp.pad(parent_hist.astype(jnp.float32),
+                           ((0, 0), (0, pad_f), (0, 0), (0, 0)))
+        sil_spec = pl.BlockSpec((n_acc, 1), lambda fi, ri: (0, 0))
+        parent_spec = pl.BlockSpec(
+            (n_acc, block_features, n_bins, 2), lambda fi, ri: (0, fi, 0, 0))
+    else:
+        sil = jnp.zeros((1, 1), jnp.int32)
+        parent_p = jnp.zeros((1, 1, 1, 1), jnp.float32)
+        sil_spec = pl.BlockSpec((1, 1), lambda fi, ri: (0, 0))
+        parent_spec = pl.BlockSpec((1, 1, 1, 1), lambda fi, ri: (0, 0, 0, 0))
+    rp, fp = bins_p.shape
+    grid = (fp // block_features, rp // block_rows)
+    kernel = _level_kernel_hist if return_hist else _level_kernel_nohist
+    out_shape = [
+        jax.ShapeDtypeStruct((n_nodes, 1), jnp.float32),
+        jax.ShapeDtypeStruct((n_nodes, 1), jnp.int32),
+        jax.ShapeDtypeStruct((n_nodes, 1), jnp.int32),
+    ]
+    best_spec = pl.BlockSpec((n_nodes, 1), lambda fi, ri: (0, 0))
+    out_specs = [best_spec, best_spec, best_spec]
+    if return_hist:
+        out_shape.insert(0, jax.ShapeDtypeStruct((n_nodes, fp, n_bins, 2),
+                                                 jnp.float32))
+        out_specs.insert(0, pl.BlockSpec(
+            (n_nodes, block_features, n_bins, 2), lambda fi, ri: (0, fi, 0, 0)))
+    smem_scalar = pl.BlockSpec((1, 1), lambda fi, ri: (0, 0),
+                               memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        functools.partial(
+            kernel,
+            n_acc=n_acc,
+            n_nodes=n_nodes,
+            n_bins=n_bins,
+            block_f=block_features,
+            n_rblocks=grid[1],
+            subtract=subtract,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_features), lambda fi, ri: (ri, fi)),
+            pl.BlockSpec((block_rows, 1), lambda fi, ri: (ri, 0)),
+            pl.BlockSpec((block_rows, 2), lambda fi, ri: (ri, 0)),
+            sil_spec,
+            parent_spec,
+            pl.BlockSpec((1, block_features), lambda fi, ri: (0, fi)),
+            smem_scalar,
+            smem_scalar,
+            smem_scalar,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((n_acc, block_features * n_bins), jnp.float32),
+            pltpu.VMEM((n_acc, block_features * n_bins), jnp.float32),
+            pltpu.VMEM((n_nodes, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bins_p, node_p[:, None], gh, sil, parent_p, fm_p, lam_s, mcw_s, blim_s)
+    if return_hist:
+        hist, bg, bf, bs = out
+        return hist[:, :f], bg[:, 0], bf[:, 0], bs[:, 0]
+    bg, bf, bs = out
+    return None, bg[:, 0], bf[:, 0], bs[:, 0]

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 
-__all__ = ["attention", "decode_attention", "rglru", "rwkv6", "histogram"]
+__all__ = ["attention", "decode_attention", "rglru", "rwkv6", "histogram",
+           "level_split"]
 
 
 def _on_tpu() -> bool:
@@ -103,7 +104,13 @@ def _histogram_scatter(bins, grad, hess, node, n_nodes, n_bins):
 
 
 def histogram(bins, grad, hess, node, *, n_nodes, n_bins, force=None):
-    """GBDT grad/hess histograms. See ``histogram_ref``."""
+    """GBDT grad/hess histograms. See ``histogram_ref``.
+
+    Training no longer calls this directly — ``build_tree`` routes through
+    :func:`level_split`, which fuses the split scan in (and threads its own
+    ``force``); this stays the standalone histogram entry point for tests
+    and the tile sweep.
+    """
     if force == "ref":
         return _ref.histogram_ref(bins, grad, hess, node, n_nodes, n_bins)
     use_kernel = force == "kernel" or (force is None and _on_tpu())
@@ -115,3 +122,91 @@ def histogram(bins, grad, hess, node, *, n_nodes, n_bins, force=None):
             interpret=not _on_tpu(),
         )
     return _histogram_scatter(bins, grad, hess, node, n_nodes, n_bins)
+
+
+def _plan_smaller_child(node, n_nodes, n_rows):
+    """Histogram-subtraction plan for one tree level (DESIGN.md §3.8).
+
+    ``node``: (R,) CHILD-level assignment in [0, n_nodes). For every sibling
+    pair (2p, 2p+1) pick the child with fewer rows (ties → left), then build
+    a COMPACTED index set covering only smaller-child rows: per-pair minima
+    sum to ≤ floor(R/2), so ``idx`` has exactly floor(R/2) slots — the row
+    sets this level scatters/gathers are statically half-size, which is
+    where the ~2× histogram-phase win on CPU comes from (on TPU the kernel
+    additionally accumulates half the node histograms). Returns
+    ``(small_is_left, idx, valid)``: (N/2,) bool, (R//2,) int32 row indices
+    (stable order), (R//2,) bool marking really-filled slots.
+    """
+    cnt = jnp.zeros((n_nodes,), jnp.int32).at[node].add(1)
+    small_is_left = cnt[0::2] <= cnt[1::2]
+    is_small = jnp.stack([small_is_left, ~small_is_left], axis=1).reshape(-1)
+    row_small = is_small[node]
+    cap = n_rows // 2
+    pos = jnp.cumsum(row_small) - 1          # stable slot of each small row
+    slot = jnp.where(row_small, pos, cap)    # cap = out of bounds → dropped
+    idx = jnp.zeros((cap,), jnp.int32).at[slot].set(jnp.arange(n_rows))
+    valid = jnp.arange(cap) < row_small.sum()
+    return small_is_left, idx, valid
+
+
+def level_split(
+    bins, g, h, node, *, n_nodes, n_bins, lam, min_child_weight,
+    bin_limit=None, feat_mask=None, parent_hist=None, return_hist=True,
+    force=None,
+):
+    """One GBDT tree level: histogram build + best-split scan.
+    See ``level_split_ref``; returns ``(hist, best_gain, best_feat,
+    best_split)`` with ``hist=None`` when ``return_hist`` is False.
+
+    ``parent_hist`` (the previous level's (n_nodes/2, F, B, 2) histograms)
+    enables histogram subtraction: only the smaller child of each sibling
+    pair is accumulated from rows, the sibling is ``parent − small``. The
+    XLA fallback's DIRECT mode is op-for-op the pre-fusion ``build_tree``
+    sequence (``_histogram_scatter`` + ``ref.split_scan_ref``), so CPU
+    split decisions are bit-identical to the historical path; subtraction
+    reproduces those decisions (see DESIGN.md §3.8 for the exactness
+    argument). ``force`` matches ``ops`` conventions and is threaded by
+    ``build_tree`` so tests can pin a backend end to end.
+    """
+    if force == "ref":
+        hist, bg, bf, bs = _ref.level_split_ref(
+            bins, g, h, node, n_nodes, n_bins, lam=lam,
+            min_child_weight=min_child_weight, bin_limit=bin_limit,
+            feat_mask=feat_mask)
+        return (hist if return_hist else None), bg, bf, bs
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    subtract = parent_hist is not None and n_nodes > 1
+    if subtract:
+        sil, idx, valid = _plan_smaller_child(node, n_nodes, bins.shape[0])
+        n_half = n_nodes // 2
+        sbins, sg, sh = bins[idx], g[idx], h[idx]
+        snode = jnp.where(valid, node[idx] // 2, n_half)  # n_half = dump slot
+        if use_kernel:
+            from repro.kernels.histogram import fused_level_split_tpu
+
+            return fused_level_split_tpu(
+                sbins, sg, sh, snode, n_nodes=n_nodes, n_bins=n_bins,
+                lam=lam, min_child_weight=min_child_weight,
+                bin_limit=bin_limit, feat_mask=feat_mask,
+                parent_hist=parent_hist, small_is_left=sil,
+                interpret=not _on_tpu(), return_hist=return_hist)
+        small = _histogram_scatter(sbins, sg, sh, snode, n_half, n_bins)
+        big = parent_hist - small
+        silb = sil[:, None, None, None]
+        hist = jnp.stack(
+            [jnp.where(silb, small, big), jnp.where(silb, big, small)], axis=1,
+        ).reshape(n_nodes, bins.shape[1], n_bins, 2)
+    elif use_kernel:
+        from repro.kernels.histogram import fused_level_split_tpu
+
+        return fused_level_split_tpu(
+            bins, g, h, node, n_nodes=n_nodes, n_bins=n_bins,
+            lam=lam, min_child_weight=min_child_weight, bin_limit=bin_limit,
+            feat_mask=feat_mask, interpret=not _on_tpu(),
+            return_hist=return_hist)
+    else:
+        hist = _histogram_scatter(bins, g, h, node, n_nodes, n_bins)
+    bg, bf, bs = _ref.split_scan_ref(
+        hist, lam=lam, min_child_weight=min_child_weight, n_bins=n_bins,
+        bin_limit=bin_limit, feat_mask=feat_mask)
+    return (hist if return_hist else None), bg, bf, bs

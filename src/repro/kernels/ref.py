@@ -24,6 +24,8 @@ __all__ = [
     "rglru_ref",
     "rwkv6_ref",
     "histogram_ref",
+    "split_scan_ref",
+    "level_split_ref",
 ]
 
 
@@ -317,3 +319,75 @@ def histogram_ref(
     # (N, R) @ (R, F*B*2) — one MXU-shaped contraction
     weighted = bin_oh[..., None] * gh[:, None, None, :]                 # (R, F, B, 2)
     return jnp.einsum("rn,rfbt->nfbt", node_oh, weighted)
+
+
+def split_scan_ref(
+    hist: jax.Array,
+    *,
+    lam,
+    min_child_weight,
+    n_bins: int,
+    bin_limit=None,
+    feat_mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Best-split scan over one level's histograms: cumsum → gain → masked
+    argmax. ``hist``: (n_nodes, F, B, 2); returns per-node
+    ``(best_gain, best_feat, best_split)``.
+
+    This is the semantic definition of the scan half of the fused level
+    kernel AND, op for op, the sequence the pre-fusion ``build_tree`` ran
+    inline — ``ops.level_split``'s XLA fallback calls it directly, so the
+    CPU path stays bit-identical to the historical one. ``lam``/
+    ``min_child_weight`` may be traced 0-d arrays and ``bin_limit`` a traced
+    int (the fused-batch vmap contract). Node totals come from FEATURE 0's
+    cumsum tail (every feature's bins sum to the same node total).
+    """
+    n_nodes, f = hist.shape[0], hist.shape[1]
+    gl = jnp.cumsum(hist[..., 0], axis=-1)              # (N, F, B) left sums
+    hl = jnp.cumsum(hist[..., 1], axis=-1)
+    gt = gl[:, :1, -1:]                                  # (N, 1, 1) node totals
+    ht = hl[:, :1, -1:]
+    gr = gt - gl
+    hr = ht - hl
+    gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+    ok = (hl >= min_child_weight) & (hr >= min_child_weight)
+    if feat_mask is not None:
+        ok &= feat_mask[None, :, None]
+    # splitting at the last bin sends every row left — not a real split
+    last = n_bins - 1 if bin_limit is None else bin_limit - 1
+    ok &= jnp.arange(n_bins)[None, None, :] < last
+    gain = jnp.where(ok, gain, -jnp.inf)
+    flat = gain.reshape(n_nodes, f * n_bins)
+    best = jnp.argmax(flat, axis=-1)                     # first max wins ties
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=-1)[:, 0]
+    feat = (best // n_bins).astype(jnp.int32)
+    split = (best % n_bins).astype(jnp.int32)
+    return best_gain, feat, split
+
+
+def level_split_ref(
+    bins: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    node: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    *,
+    lam,
+    min_child_weight,
+    bin_limit=None,
+    feat_mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One GBDT tree level end to end: histogram build + best-split scan.
+
+    The oracle for the fused level kernel
+    (``kernels.histogram.fused_level_split_tpu``) — always the DIRECT
+    formulation (no histogram subtraction): subtraction is an implementation
+    strategy whose result must match this definition. Returns
+    ``(hist, best_gain, best_feat, best_split)``.
+    """
+    hist = histogram_ref(bins, grad, hess, node, n_nodes, n_bins)
+    best_gain, feat, split = split_scan_ref(
+        hist, lam=lam, min_child_weight=min_child_weight, n_bins=n_bins,
+        bin_limit=bin_limit, feat_mask=feat_mask)
+    return hist, best_gain, feat, split

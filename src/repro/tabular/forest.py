@@ -30,6 +30,7 @@ __all__ = ["ForestEstimator", "ForestModel"]
 def _fit_forest_core(
     bins, y, key, min_samples_leaf, depth_limit,
     *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
+    subtract: bool = True, force=None,
 ):
     """Forest fit with traced ``min_samples_leaf``/``depth_limit`` so one
     compile serves all configs sharing the padded maxima, and vmap over the
@@ -50,6 +51,7 @@ def _fit_forest_core(
             bins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
             feat_mask=feat_mask, depth_limit=depth_limit,
+            subtract=subtract, force=force,
         )
         leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
         return None, (feat, split, leaf_value)
@@ -62,6 +64,7 @@ def _fit_forest_core(
 def _resume_forest_core(
     bins, y, key, min_samples_leaf, depth_limit, start,
     *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
+    subtract: bool = True, force=None,
 ):
     """Grow trees ``start .. start + n_trees`` — the rung machinery
     (DESIGN.md §3.6). Trees are mutually independent (the scan carries
@@ -81,6 +84,7 @@ def _resume_forest_core(
             bins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
             feat_mask=feat_mask, depth_limit=depth_limit,
+            subtract=subtract, force=force,
         )
         leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
         return None, (feat, split, leaf_value)
@@ -92,17 +96,21 @@ def _resume_forest_core(
 
 
 _fit_forest = functools.partial(
-    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features",
+                              "subtract", "force")
 )(_fit_forest_core)
 _resume_forest = functools.partial(
-    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features")
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features",
+                              "subtract", "force")
 )(_resume_forest_core)
 
 
-def _build_batched_fit(n_bins: int, n_trees: int, max_depth: int, max_features: int):
+def _build_batched_fit(n_bins: int, n_trees: int, max_depth: int, max_features: int,
+                       subtract: bool = True, force=None):
     core = functools.partial(
         _fit_forest_core, n_bins=n_bins, n_trees=n_trees,
-        max_depth=max_depth, max_features=max_features)
+        max_depth=max_depth, max_features=max_features,
+        subtract=subtract, force=force)
     return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
@@ -270,6 +278,9 @@ class ForestEstimator(Estimator):
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:
+        # histogram subtraction (DESIGN.md §3.8): root level full, deeper
+        # levels build only the smaller child — same halving as gbdt's
         p = {"n_estimators": 100, "max_depth": 8, **dict(params)}
-        per_tree = n_rows * max(1, int(np.sqrt(n_features))) * int(p["max_depth"])
+        hist_levels = 1 + 0.5 * (int(p["max_depth"]) - 1)
+        per_tree = n_rows * max(1, int(np.sqrt(n_features))) * hist_levels
         return int(p["n_estimators"]) * per_tree / 2e8

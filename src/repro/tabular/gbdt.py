@@ -5,7 +5,9 @@ framework's dominant workload. We implement the ``hist`` algorithm: features
 are quantile-binned once (the ``quantized_bins`` uniform-format conversion,
 executor-side), then each boosting round grows one depth-``max_depth`` tree
 level-by-level from per-(node, feature, bin) grad/hess histograms
-(``ops.histogram`` — Pallas MXU kernel on TPU, scatter on CPU).
+(``ops.level_split`` — fused Pallas histogram+split-scan kernel on TPU,
+scatter + XLA scan on CPU — with histogram subtraction across levels,
+DESIGN.md §3.8).
 
 Trees are COMPLETE binary trees in heap layout: a node that stops splitting
 gets a sentinel split (bin B−1 → every row routes left), so row→leaf routing
@@ -54,6 +56,8 @@ def build_tree(
     feat_mask: jax.Array | None = None,   # (F,) bool — forest feature subsets
     depth_limit=None,            # traced int: levels >= this force sentinels
     bin_limit=None,              # traced int: valid splits are < bin_limit - 1
+    subtract: bool = True,       # histogram subtraction (DESIGN.md §3.8)
+    force=None,                  # ops dispatch override, threaded to the kernel
 ):
     """Grow one level-wise tree; returns (feat, split_bin, leaf_g, leaf_h).
 
@@ -67,34 +71,28 @@ def build_tree(
     path (``train_batched``) vmaps heterogeneous configs through ONE compile:
     a config with a shallower tree forces sentinel splits past its depth, and
     a config with coarser quantisation masks bins past its own bin count.
+
+    Each level is one ``ops.level_split`` (fused Pallas kernel on TPU, the
+    historical scatter + scan ops on CPU). With ``subtract`` (the default)
+    the level's histograms are cached and the NEXT level builds only the
+    smaller child of each sibling pair, deriving the sibling as
+    ``parent − small`` — about half the histogram work per level below the
+    root. ``subtract=False`` is the pre-subtraction path, kept as the
+    bit-exactness reference (tests) and the bench comparison point.
     """
     r, f = bins.shape
     node = jnp.zeros((r,), jnp.int32)        # level-local node of each row
     feats, splits = [], []
+    parent = None                            # previous level's histograms
     for level in range(max_depth):
         n_nodes = 1 << level
-        hist = ops.histogram(bins, g, h, node, n_nodes=n_nodes, n_bins=n_bins)
-        gl = jnp.cumsum(hist[..., 0], axis=-1)          # (N, F, B) left grad sums
-        hl = jnp.cumsum(hist[..., 1], axis=-1)
-        gt = gl[:, :1, -1:]                              # (N, 1, 1) node totals
-        ht = hl[:, :1, -1:]
-        gr = gt - gl
-        hr = ht - hl
-        gain = (
-            gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
-        )                                                # (N, F, B)
-        ok = (hl >= min_child_weight) & (hr >= min_child_weight)
-        if feat_mask is not None:
-            ok &= feat_mask[None, :, None]
-        # splitting at the last bin sends every row left — not a real split
-        last = n_bins - 1 if bin_limit is None else bin_limit - 1
-        ok &= jnp.arange(n_bins)[None, None, :] < last
-        gain = jnp.where(ok, gain, -jnp.inf)
-        flat = gain.reshape(n_nodes, f * n_bins)
-        best = jnp.argmax(flat, axis=-1)                 # (N,)
-        best_gain = jnp.take_along_axis(flat, best[:, None], axis=-1)[:, 0]
-        feat = (best // n_bins).astype(jnp.int32)
-        split = (best % n_bins).astype(jnp.int32)
+        keep_hist = subtract and level + 1 < max_depth
+        parent, best_gain, feat, split = ops.level_split(
+            bins, g, h, node, n_nodes=n_nodes, n_bins=n_bins,
+            lam=lam, min_child_weight=min_child_weight,
+            bin_limit=bin_limit, feat_mask=feat_mask,
+            parent_hist=parent if subtract else None,
+            return_hist=keep_hist, force=force)
         is_leaf = best_gain <= gamma
         if depth_limit is not None:
             is_leaf = is_leaf | (level >= depth_limit)
@@ -208,6 +206,7 @@ def batched_tree_margins(models, x, *, cache=None) -> np.ndarray:
 def _fit_gbdt_core(
     bins, y, base, factor, bin_limit, n_rounds, depth_limit,
     eta, lam, gamma, min_child_weight, *, n_bins: int, rounds: int, max_depth: int,
+    subtract: bool = True, force=None,
 ):
     """One GBDT fit over PADDED maxima (rounds/max_depth/n_bins static).
 
@@ -230,6 +229,7 @@ def _fit_gbdt_core(
             cbins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=lam, gamma=gamma, min_child_weight=min_child_weight,
             depth_limit=depth_limit, bin_limit=bin_limit,
+            subtract=subtract, force=force,
         )
         # where (not multiply): an empty padded leaf is 0/(0+λ), which for
         # λ=0 is NaN and would poison the margin through a plain mask
@@ -244,7 +244,7 @@ def _fit_gbdt_core(
 
 
 _fit_gbdt = functools.partial(
-    jax.jit, static_argnames=("n_bins", "rounds", "max_depth")
+    jax.jit, static_argnames=("n_bins", "rounds", "max_depth", "subtract", "force")
 )(_fit_gbdt_core)
 
 
@@ -252,6 +252,7 @@ def _resume_gbdt_core(
     bins, y, margin0, factor, bin_limit, n_rounds, depth_limit,
     eta, lam, gamma, min_child_weight, start,
     *, n_bins: int, rounds: int, max_depth: int,
+    subtract: bool = True, force=None,
 ):
     """Boost ``rounds`` MORE trees on top of a carried margin — the rung
     machinery (DESIGN.md §3.6). Round indices continue from ``start`` and the
@@ -270,6 +271,7 @@ def _resume_gbdt_core(
             cbins, g, h, n_bins=n_bins, max_depth=max_depth,
             lam=lam, gamma=gamma, min_child_weight=min_child_weight,
             depth_limit=depth_limit, bin_limit=bin_limit,
+            subtract=subtract, force=force,
         )
         leaf_value = jnp.where(
             r_idx < n_rounds, -eta * leaf_g / (leaf_h + lam), 0.0)
@@ -281,15 +283,17 @@ def _resume_gbdt_core(
 
 
 _resume_gbdt = functools.partial(
-    jax.jit, static_argnames=("n_bins", "rounds", "max_depth")
+    jax.jit, static_argnames=("n_bins", "rounds", "max_depth", "subtract", "force")
 )(_resume_gbdt_core)
 
 
-def _build_batched_fit(n_bins: int, rounds: int, max_depth: int):
+def _build_batched_fit(n_bins: int, rounds: int, max_depth: int,
+                       subtract: bool = True, force=None):
     """Compile-cache builder: vmap the core over the per-config args (data,
     labels and base margin are shared across the batch)."""
     core = functools.partial(
-        _fit_gbdt_core, n_bins=n_bins, rounds=rounds, max_depth=max_depth)
+        _fit_gbdt_core, n_bins=n_bins, rounds=rounds, max_depth=max_depth,
+        subtract=subtract, force=force)
     return jax.jit(jax.vmap(core, in_axes=(None, None, None) + (0,) * 8))
 
 
@@ -512,9 +516,13 @@ class GBDTEstimator(Estimator):
 
     @staticmethod
     def estimate_cost(params: Mapping[str, Any], n_rows: int, n_features: int) -> float:
-        """Analytic-profiler hook: histogram work dominates — R·F adds per
-        level, ``max_depth`` levels, ``round`` rounds (plus split scans)."""
+        """Analytic-profiler hook: histogram work dominates — R·F adds at
+        the root, then histogram subtraction (DESIGN.md §3.8) builds only
+        the smaller child per level, so every level below the root costs
+        ~half: effective histogram levels = 1 + (D−1)/2 (plus split scans)."""
         p = {"round": 30, "max_depth": 6, "max_bin": 64, **dict(params)}
-        per_tree = n_rows * n_features * int(p["max_depth"])
-        split_scan = (1 << int(p["max_depth"])) * n_features * int(p["max_bin"])
+        depth = int(p["max_depth"])
+        hist_levels = 1 + 0.5 * (depth - 1)
+        per_tree = n_rows * n_features * hist_levels
+        split_scan = (1 << depth) * n_features * int(p["max_bin"])
         return int(p["round"]) * (per_tree + split_scan) / 2e8

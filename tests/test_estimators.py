@@ -1,4 +1,6 @@
 """Tabular estimator quality + property tests (the paper's 4 algorithms)."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -95,3 +97,120 @@ def test_mlp_cost_model_monotonic():
     small = est.estimate_cost({"network": "32", "steps": 100}, 1000, 28)
     big = est.estimate_cost({"network": "256_256", "steps": 100}, 1000, 28)
     assert big > small
+
+
+# ---------------------------------------------------------------------------
+# histogram-subtraction / fused-kernel bit-identity pins (DESIGN.md §3.8)
+#
+# ``subtract=False`` replays the pre-subtraction training path op for op, so
+# these pins say: the models this PR trains are byte-identical to the models
+# the repo trained before it — on the solo fit, the resumable-rung fit, and
+# the vmap-fused batch fit, for both tree families.
+# ---------------------------------------------------------------------------
+
+def _gbdt_fit_inputs(higgs_small, max_bin=64):
+    from repro.tabular.gbdt import GBDTEstimator
+
+    train, _ = higgs_small
+    est = get_estimator("gbdt")
+    q = convert(train, "quantized_bins")
+    factor, n_cbins = GBDTEstimator._coarsen(int(q["n_bins"]), max_bin)
+    base = est._base_margin(q["y"])
+    return est, q, factor, n_cbins, base
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_gbdt_fit_subtraction_bit_identity(higgs_small):
+    from repro.tabular.gbdt import _fit_gbdt
+
+    est, q, factor, n_cbins, base = _gbdt_fit_inputs(higgs_small)
+    rounds, depth = 8, 4
+    args = (q["bins"], q["y"], jnp.float32(base),
+            jnp.int32(factor), jnp.int32(n_cbins),
+            jnp.int32(rounds), jnp.int32(depth),
+            jnp.float32(0.3), jnp.float32(1.0), jnp.float32(0.0),
+            jnp.float32(1.0))
+    kw = dict(n_bins=n_cbins, rounds=rounds, max_depth=depth)
+    sub = _fit_gbdt(*args, subtract=True, **kw)
+    direct = _fit_gbdt(*args, subtract=False, **kw)
+    _assert_trees_equal(sub, direct)
+    # the public estimator entry point routes through the same default path
+    train, _ = higgs_small
+    model, _ = est.run(train, {"round": rounds, "max_depth": depth,
+                               "max_bin": 64})
+    np.testing.assert_array_equal(model.feat, np.asarray(direct[0]))
+
+
+def test_gbdt_fused_kernel_model_bit_identity(higgs_small):
+    """ISSUE 9 acceptance pin: a model trained through the fused Pallas
+    kernel (interpret mode on CPU) carries bit-identical feat/split/leaves
+    to the XLA path — the split DECISIONS agree, and leaf sums are computed
+    by the same scatter given identical routing."""
+    from repro.tabular.gbdt import _fit_gbdt
+
+    _, q, factor, n_cbins, base = _gbdt_fit_inputs(higgs_small)
+    bins, y = q["bins"][:400], q["y"][:400]
+    rounds, depth = 3, 3
+    args = (bins, y, jnp.float32(base),
+            jnp.int32(factor), jnp.int32(n_cbins),
+            jnp.int32(rounds), jnp.int32(depth),
+            jnp.float32(0.3), jnp.float32(1.0), jnp.float32(0.0),
+            jnp.float32(1.0))
+    kw = dict(n_bins=n_cbins, rounds=rounds, max_depth=depth)
+    kernel = _fit_gbdt(*args, subtract=True, force="kernel", **kw)
+    xla = _fit_gbdt(*args, subtract=False, **kw)
+    _assert_trees_equal(kernel, xla)
+
+
+def test_gbdt_resume_subtraction_bit_identity(higgs_small):
+    from repro.tabular.gbdt import _resume_gbdt
+
+    _, q, factor, n_cbins, base = _gbdt_fit_inputs(higgs_small)
+    rounds, depth = 6, 4
+    margin0 = jnp.full((q["bins"].shape[0],), base, jnp.float32)
+    args = (q["bins"], q["y"], margin0,
+            jnp.int32(factor), jnp.int32(n_cbins),
+            jnp.int32(rounds), jnp.int32(depth),
+            jnp.float32(0.3), jnp.float32(1.0), jnp.float32(0.0),
+            jnp.float32(1.0), jnp.int32(0))
+    kw = dict(n_bins=n_cbins, rounds=rounds, max_depth=depth)
+    trees_s, margin_s = _resume_gbdt(*args, subtract=True, **kw)
+    trees_d, margin_d = _resume_gbdt(*args, subtract=False, **kw)
+    _assert_trees_equal(trees_s, trees_d)
+    np.testing.assert_array_equal(np.asarray(margin_s), np.asarray(margin_d))
+
+
+def test_gbdt_batched_fit_subtraction_bit_identity(higgs_small):
+    """The vmap-fused plane (train_batched's compile-cache unit)."""
+    from repro.tabular.gbdt import _build_batched_fit
+
+    _, q, factor, n_cbins, base = _gbdt_fit_inputs(higgs_small)
+    rounds, depth = 4, 4
+    col = lambda v, dt: jnp.asarray(np.asarray(v, dt))  # noqa: E731
+    args = (q["bins"], q["y"], jnp.float32(base),
+            col([factor, factor], np.int32), col([n_cbins, 32], np.int32),
+            col([rounds, 2], np.int32), col([depth, 2], np.int32),
+            col([0.3, 0.1], np.float32), col([1.0, 2.0], np.float32),
+            col([0.0, 0.5], np.float32), col([1.0, 3.0], np.float32))
+    sub = _build_batched_fit(n_cbins, rounds, depth, subtract=True)(*args)
+    direct = _build_batched_fit(n_cbins, rounds, depth, subtract=False)(*args)
+    _assert_trees_equal(sub, direct)
+
+
+def test_forest_fit_subtraction_bit_identity(higgs_small):
+    from repro.tabular.forest import _fit_forest
+
+    train, _ = higgs_small
+    q = convert(train, "quantized_bins")
+    bins = q["bins"] // 4                       # 256 → 64 levels
+    key = jax.random.PRNGKey(11)
+    kw = dict(n_bins=64, n_trees=5, max_depth=4, max_features=5)
+    sub = _fit_forest(bins, q["y"], key, jnp.float32(1.0), jnp.int32(4),
+                      subtract=True, **kw)
+    direct = _fit_forest(bins, q["y"], key, jnp.float32(1.0), jnp.int32(4),
+                         subtract=False, **kw)
+    _assert_trees_equal(sub, direct)

@@ -198,6 +198,25 @@ def test_histogram_tile_table_respects_vmem_budget():
         pick_tiles(120, 64, 4800, n_nodes=8)[0]
 
 
+def test_histogram_kernel_odd_feature_and_bin_shapes(rng):
+    """Padded-tile audit (feature/bin axes, the PR 5 row-clamp pattern):
+    a feature count that doesn't divide block_features pads inside the
+    kernel and MUST be trimmed from the result; a bin count with no exact
+    tile-table key goes through the nearest-key lookup. Either leak would
+    change the output shape or pollute real cells."""
+    for r, f, nb, nn in [(50, 19, 24, 3), (128, 13, 48, 5), (37, 9, 8, 2)]:
+        bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+        g = _rand(rng, (r,), jnp.float32)
+        h = jnp.abs(_rand(rng, (r,), jnp.float32)) + 0.1
+        node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+        kern = ops.histogram(bins, g, h, node, n_nodes=nn, n_bins=nb,
+                             force="kernel")
+        assert kern.shape == (nn, f, nb, 2)
+        np.testing.assert_allclose(
+            np.asarray(kern),
+            np.asarray(ref.histogram_ref(bins, g, h, node, nn, nb)), atol=1e-4)
+
+
 def test_pick_tiles_never_exceeds_rows(rng):
     """Regression: ``min(block_r, max(8, n_rows))`` returned block_rows=8
     for a 4-row histogram, silently padding tiny arrays — block_rows must
@@ -208,7 +227,7 @@ def test_pick_tiles_never_exceeds_rows(rng):
         _, br = pick_tiles(16, 64, n_rows)
         assert br == n_rows
     _, br = pick_tiles(16, 64, 4800)
-    assert br == 512                       # table default untouched
+    assert br == 1024                      # table default untouched
     # and a 4-row histogram actually computes correctly through the kernel
     r, f, nb, nn = 4, 3, 8, 2
     bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
@@ -222,3 +241,214 @@ def test_pick_tiles_never_exceeds_rows(rng):
     np.testing.assert_allclose(
         np.asarray(kern), np.asarray(ref.histogram_ref(bins, g, h, node, nn, nb)),
         atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused level split (histogram + split scan + subtraction, DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+
+def _level_fixture(rng, r, f, nb, nn):
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = _rand(rng, (r,), jnp.float32)
+    h = jnp.abs(_rand(rng, (r,), jnp.float32)) + 0.1
+    node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+    return bins, g, h, node
+
+
+def _parent_of(bins, g, h, node, nn, nb):
+    """Level-above histograms over the same rows (node // 2)."""
+    return ops._histogram_scatter(bins, g, h, node // 2, nn // 2, nb)
+
+
+# the ISSUE parity grid: depths {1, 3, 6} (n_nodes = 2^(depth-1) at the
+# deepest level) × bins {16, 64, 256}
+@pytest.mark.parametrize("r,f,nb,nn", [
+    (200, 5, 16, 1), (500, 7, 64, 4), (400, 12, 256, 4), (300, 9, 16, 32),
+    (600, 3, 64, 32), (250, 6, 256, 32),
+])
+def test_level_split_kernel_vs_ref(rng, r, f, nb, nn):
+    bins, g, h, node = _level_fixture(rng, r, f, nb, nn)
+    kw = dict(n_nodes=nn, n_bins=nb, lam=1.0, min_child_weight=1.0)
+    hk, bgk, bfk, bsk = ops.level_split(bins, g, h, node, force="kernel", **kw)
+    hr, bgr, bfr, bsr = ops.level_split(bins, g, h, node, force="ref", **kw)
+    hx, bgx, bfx, bsx = ops.level_split(bins, g, h, node, **kw)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hx), np.asarray(hr), atol=1e-4)
+    for bf, bs in ((bfk, bsk), (bfx, bsx)):
+        assert bool((bf == bfr).all() and (bs == bsr).all())
+    finite = np.isfinite(np.asarray(bgr))
+    np.testing.assert_allclose(np.asarray(bgk)[finite], np.asarray(bgr)[finite],
+                               rtol=1e-4, atol=1e-4)
+    # subtraction modes (XLA + kernel) must reproduce the direct decisions
+    if nn > 1:
+        parent = _parent_of(bins, g, h, node, nn, nb)
+        for force in (None, "kernel"):
+            hs, _, bfs, bss = ops.level_split(
+                bins, g, h, node, parent_hist=parent, force=force, **kw)
+            np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-4)
+            assert bool((bfs == bfr).all() and (bss == bsr).all())
+
+
+def test_level_split_traced_bin_limit(rng):
+    """bin_limit arrives as a traced int under jit (the fused-batch
+    contract): splits at bins >= bin_limit - 1 must never win, and kernel
+    and ref must agree under the same traced value."""
+    bins, g, h, node = _level_fixture(rng, 400, 6, 64, 8)
+
+    def make(force):
+        @jax.jit
+        def run(blim):
+            return ops.level_split(
+                bins, g, h, node, n_nodes=8, n_bins=64, lam=jnp.float32(0.5),
+                min_child_weight=jnp.float32(1.0), bin_limit=blim,
+                force=force)[1:]
+        return run
+
+    for force in ("kernel", "ref", None):
+        bg, bf, bs = make(force)(jnp.int32(16))
+        assert bool((np.asarray(bs) < 15).all())
+    bg_k, bf_k, bs_k = make("kernel")(jnp.int32(16))
+    bg_r, bf_r, bs_r = make("ref")(jnp.int32(16))
+    assert bool((bf_k == bf_r).all() and (bs_k == bs_r).all())
+
+
+def test_level_split_feat_mask(rng):
+    """Masked-off features (the forest √F subset) never produce a winning
+    split on any backend; parity holds under the mask."""
+    bins, g, h, node = _level_fixture(rng, 500, 10, 32, 8)
+    mask = jnp.asarray(np.arange(10) % 3 == 0)     # features 0,3,6,9 allowed
+    kw = dict(n_nodes=8, n_bins=32, lam=1.0, min_child_weight=1.0,
+              feat_mask=mask)
+    _, bg_r, bf_r, bs_r = ops.level_split(bins, g, h, node, force="ref", **kw)
+    for force in ("kernel", None):
+        _, bg, bf, bs = ops.level_split(bins, g, h, node, force=force, **kw)
+        assert bool((bf == bf_r).all() and (bs == bs_r).all())
+        real = np.isfinite(np.asarray(bg))
+        assert bool(np.asarray(mask)[np.asarray(bf)[real]].all())
+
+
+def test_level_split_subtraction_bit_equality_integer_stats(rng):
+    """With integer-valued g/h every histogram sum is exact in f32, so
+    ``parent − small`` is genuinely bit-equal to the direct build — this
+    pins the subtraction indexing/assembly (smaller-child choice, row
+    compaction, sibling interleave) with zero float slack, on both the XLA
+    fallback and the fused kernel."""
+    r, f, nb, nn = 600, 5, 32, 16
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = jnp.asarray(rng.integers(-8, 9, size=r), jnp.float32)
+    h = jnp.asarray(rng.integers(1, 5, size=r), jnp.float32)
+    node = jnp.asarray(rng.integers(0, nn, size=(r,)), jnp.int32)
+    kw = dict(n_nodes=nn, n_bins=nb, lam=1.0, min_child_weight=1.0)
+    parent = _parent_of(bins, g, h, node, nn, nb)
+    hd, _, _, _ = ops.level_split(bins, g, h, node, **kw)
+    for force in (None, "kernel"):
+        hs, _, _, _ = ops.level_split(bins, g, h, node, parent_hist=parent,
+                                      force=force, **kw)
+        assert bool((np.asarray(hs) == np.asarray(hd)).all())
+
+
+def test_level_split_empty_sibling_exact(rng):
+    """Sentinel-split parents route every row LEFT, so the right child is
+    empty and subtraction returns ``parent − 0`` — bit-exact even with
+    real-valued g/h. This is what keeps depth_limit-padded levels identical
+    between the subtraction and direct paths."""
+    r, f, nb, nn = 300, 4, 16, 8
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    g = _rand(rng, (r,), jnp.float32)
+    h = jnp.abs(_rand(rng, (r,), jnp.float32)) + 0.1
+    node = jnp.asarray(2 * rng.integers(0, nn // 2, size=r), jnp.int32)  # even
+    kw = dict(n_nodes=nn, n_bins=nb, lam=1.0, min_child_weight=1.0)
+    parent = _parent_of(bins, g, h, node, nn, nb)
+    hd, _, _, _ = ops.level_split(bins, g, h, node, **kw)
+    for force in (None, "kernel"):
+        hs, _, _, _ = ops.level_split(bins, g, h, node, parent_hist=parent,
+                                      force=force, **kw)
+        assert bool((np.asarray(hs) == np.asarray(hd)).all())
+
+
+def test_level_split_return_hist_false_same_decisions(rng):
+    bins, g, h, node = _level_fixture(rng, 200, 5, 16, 4)
+    kw = dict(n_nodes=4, n_bins=16, lam=1.0, min_child_weight=1.0)
+    for force in ("kernel", None, "ref"):
+        full = ops.level_split(bins, g, h, node, force=force, **kw)
+        slim = ops.level_split(bins, g, h, node, force=force,
+                               return_hist=False, **kw)
+        assert slim[0] is None
+        for a, b in zip(full[1:], slim[1:]):
+            assert bool((np.asarray(a) == np.asarray(b)).all())
+
+
+def test_level_split_kernel_under_vmap(rng):
+    """The fused-batch path vmaps build_tree over traced scalars; the
+    kernel must map correctly over a batch of (g, h, node, lam)."""
+    r, f, nb, nn, b = 160, 4, 16, 4, 3
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    gs = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
+    hs = jnp.asarray(rng.random((b, r)) + 0.1, jnp.float32)
+    nodes = jnp.asarray(rng.integers(0, nn, size=(b, r)), jnp.int32)
+    lams = jnp.asarray([0.5, 1.0, 2.0], jnp.float32)
+
+    def one(g, h, node, lam, force):
+        return ops.level_split(bins, g, h, node, n_nodes=nn, n_bins=nb,
+                               lam=lam, min_child_weight=1.0, force=force)
+
+    out_k = jax.vmap(lambda g, h, n, l: one(g, h, n, l, "kernel"))(
+        gs, hs, nodes, lams)
+    out_r = jax.vmap(lambda g, h, n, l: one(g, h, n, l, "ref"))(
+        gs, hs, nodes, lams)
+    np.testing.assert_allclose(np.asarray(out_k[0]), np.asarray(out_r[0]),
+                               atol=1e-4)
+    assert bool((out_k[2] == out_r[2]).all() and (out_k[3] == out_r[3]).all())
+
+
+@pytest.mark.parametrize("depth,nb", [(1, 16), (3, 64), (6, 256), (6, 16)])
+def test_build_tree_subtraction_parity(rng, depth, nb):
+    """The acceptance grid: build_tree with histogram subtraction (the
+    training default) is bit-identical — feat, split, leaf sums — to the
+    pre-subtraction direct path, across depths × bin counts."""
+    from repro.tabular.gbdt import build_tree
+
+    r, f = 600, 8
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 2, size=r), jnp.float32)
+    p = jax.nn.sigmoid(jnp.asarray(rng.normal(size=r), jnp.float32))
+    g, h = p - y, jnp.maximum(p * (1 - p), 1e-16)
+
+    import functools as ft
+    run = lambda sub: jax.jit(ft.partial(
+        build_tree, n_bins=nb, max_depth=depth, lam=1.0, gamma=0.0,
+        min_child_weight=1.0, subtract=sub))(bins, g, h)
+    for a, b in zip(run(True), run(False)):
+        assert bool((np.asarray(a) == np.asarray(b)).all())
+
+
+def test_build_tree_subtraction_parity_traced_limits_and_mask(rng):
+    """Same bit-identity with the fused-batch knobs engaged: traced
+    depth_limit/bin_limit plus a forest-style feature mask."""
+    from repro.tabular.gbdt import build_tree
+
+    r, f, nb, depth = 500, 10, 64, 5
+    bins = jnp.asarray(rng.integers(0, nb, size=(r, f)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 2, size=r), jnp.float32)
+    p = jax.nn.sigmoid(jnp.asarray(rng.normal(size=r), jnp.float32))
+    g, h = p - y, jnp.maximum(p * (1 - p), 1e-16)
+    mask = jnp.asarray(np.arange(f) % 2 == 0)
+
+    def make(sub):
+        @jax.jit
+        def run(dlim, blim):
+            return build_tree(
+                bins, g, h, n_bins=nb, max_depth=depth, lam=jnp.float32(1.0),
+                gamma=jnp.float32(0.0), min_child_weight=jnp.float32(1.0),
+                feat_mask=mask, depth_limit=dlim, bin_limit=blim,
+                subtract=sub)
+        return run
+
+    run_sub, run_dir = make(True), make(False)
+    for dlim, blim in ((jnp.int32(3), jnp.int32(32)),
+                       (jnp.int32(5), jnp.int32(64))):
+        for a, b in zip(run_sub(dlim, blim), run_dir(dlim, blim)):
+            assert bool((np.asarray(a) == np.asarray(b)).all())
+        # structural masking honoured: no split bin past the traced limit
+        split = np.asarray(run_sub(dlim, blim)[1])
+        assert bool(((split < int(blim) - 1) | (split == nb - 1)).all())
