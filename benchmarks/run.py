@@ -34,6 +34,7 @@ from benchmarks import (
     paper_figs,
     prepared_data_bench,
     serve_bench,
+    sharded_bench,
 )
 
 #: bump when row names/semantics change incompatibly, so BENCH_<sha>.json
@@ -58,6 +59,7 @@ BENCHES = {
     "kernels": lm_bench.kernel_parity,
     "serve": serve_bench.full,
     "chaos": chaos_bench.full,
+    "sharded": sharded_bench.full,
 }
 
 #: the --smoke table: deterministic (except the *.wallclock.* rows, which
@@ -72,6 +74,7 @@ SMOKE_BENCHES = {
     "gbdt_kernel": gbdt_kernel_bench.smoke,
     "serve": serve_bench.smoke,
     "chaos": chaos_bench.smoke,
+    "sharded": sharded_bench.smoke,
 }
 
 

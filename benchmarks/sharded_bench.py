@@ -1,0 +1,196 @@
+"""Sharded data-plane benchmarks (DESIGN.md §3.9).
+
+Two layers, mirroring the prepared-data bench:
+
+* **Deterministic rows** (baseline-gated on the ``*makespan*`` names): an
+  analytic simulation of a 32-config GBDT grid on an 8-slice mesh pool at
+  shard widths 1/2/4/8. Shard groups trade executor count for per-shard
+  row count — ``m = 8 / S`` group-executors, per-task cost
+  ``train(ceil(R/S)) + psum(S)`` where the psum term is the one cross-shard
+  histogram reduce per level (``log2 S`` hops over the (nodes, F, B) grad/
+  hess grid). The plan runs the REAL ``schedule``/``simulate_makespan``
+  driver code; only the clock is modelled. Per-shard resident bytes are
+  analytic too (bins + labels shrink ~1/S, edges replicate), so every
+  gated row is bit-deterministic.
+
+* **Wall-clock rows** (``*.wallclock.*`` — excluded from the baseline):
+  a real GBDT config trained replicated and at 2/4/8 shards through the
+  PreparedDataCache. Acceptance (raises on violation, failing the bench
+  job): per-device resident bytes for every shard width <= full-copy/S +
+  pad slack, split decisions (feat/threshold per node) IDENTICAL to the
+  single-device build, and the cache's ``sharded_resident_bytes`` gauge
+  equals the sum of its per-shard entries.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+import repro.tabular  # noqa: F401  (registers the estimators)
+from repro.core import (
+    DenseMatrix,
+    TrainTask,
+    get_estimator,
+    schedule,
+    simulate_makespan,
+)
+from repro.core.data_format import (
+    PreparedDataCache,
+    ShardedPlacement,
+    payload_nbytes,
+    prepare_cached,
+    shard_payload,
+)
+
+Row = tuple[str, float, str]
+
+_SLICES = 8
+_SIM_ROWS, _SIM_FEATURES = 40_000, 28
+_SHARDS = (1, 2, 4, 8)
+
+
+def _train_cost(rows: int, depth: int, rounds: int, bins: int) -> float:
+    """Analytic histogram-GBDT clock (units ≈ seconds at cluster scale):
+    per level every resident row scatters into the (node, F, B) grid, then
+    the split scan sweeps it."""
+    hist = rows * _SIM_FEATURES * depth
+    scan = (1 << depth) * _SIM_FEATURES * bins
+    return rounds * (hist + scan) / 2e8
+
+
+def _psum_cost(n_shards: int, depth: int, rounds: int, bins: int) -> float:
+    """One cross-shard grad/hess histogram reduce per level: ``log2 S``
+    hops over the (2^level nodes, F, B, 2) floats (§3.9 — the single psum
+    before the split scan; the smaller-child plan runs per shard)."""
+    if n_shards <= 1:
+        return 0.0
+    grid = sum((1 << lvl) for lvl in range(depth)) * _SIM_FEATURES * bins * 2
+    return rounds * depth * math.log2(n_shards) * grid / 5e8
+
+
+def _sim_population() -> list[tuple[TrainTask, int, int, int]]:
+    out = []
+    tid = 0
+    for rounds in (6, 9, 12, 15):
+        for depth in (3, 4):
+            for bins in (32, 64):
+                for eta in (0.1, 0.3):
+                    params = {"eta": eta, "round": rounds,
+                              "max_depth": depth, "max_bin": bins}
+                    out.append((TrainTask(task_id=tid, estimator="gbdt",
+                                          params=params), rounds, depth, bins))
+                    tid += 1
+    return out
+
+
+def _sim_resident_bytes(n_shards: int) -> int:
+    """Per-device bytes of one prepared variant: uint8 bins + f32 labels
+    row-shard (ceil per shard); f32 quantile edges replicate."""
+    rs = -(-_SIM_ROWS // n_shards)
+    return rs * _SIM_FEATURES + rs * 4 + _SIM_FEATURES * 64 * 4
+
+
+def _sim_rows(tag: str) -> list[Row]:
+    population = _sim_population()
+    rows: list[Row] = []
+    makespans = {}
+    for s in _SHARDS:
+        m = _SLICES // s
+        per_shard = -(-_SIM_ROWS // s)
+        costed = [t.with_cost(_train_cost(per_shard, depth, rounds, bins)
+                              + _psum_cost(s, depth, rounds, bins))
+                  for t, rounds, depth, bins in population]
+        true = {t.task_id: t.cost for t in costed}
+        ms = simulate_makespan(schedule(costed, m, policy="lpt"), true)
+        makespans[s] = ms
+        rows.append((f"{tag}.s{s}_makespan", ms,
+                     f"32 GBDT configs, {m} shard-group executor(s) × {s} "
+                     f"shard(s), rows/shard={per_shard}, LPT"))
+        rows.append((f"{tag}.s{s}_resident_bytes",
+                     float(_sim_resident_bytes(s)),
+                     "analytic per-device bytes of one prepared variant "
+                     f"at S={s} (bins+labels /S, edges replicated)"))
+    rows.append((f"{tag}.s8_resident_shrink_x",
+                 _sim_resident_bytes(1) / _sim_resident_bytes(8),
+                 "full-copy / 8-shard per-device residency (≈8× minus the "
+                 "replicated edges)"))
+    rows.append((f"{tag}.s8_makespan_cost_x", makespans[8] / makespans[1],
+                 "what trading all 8 slices for one 8-shard group costs in "
+                 "makespan — the residency/throughput dial"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Wall-clock: real sharded training through the cache + residency gates.
+# --------------------------------------------------------------------------
+
+def _wallclock_data(n: int = 2000, f: int = 12) -> DenseMatrix:
+    rng = np.random.default_rng(17)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (x[:, 0] * x[:, 1] - 0.5 * x[:, 2] + 0.3 * rng.normal(size=n) > 0)
+    return DenseMatrix(x, y.astype(np.float32))
+
+
+def _wallclock_rows(tag: str) -> list[Row]:
+    data = _wallclock_data()
+    est = get_estimator("gbdt")
+    params = {"round": 3, "max_depth": 4, "max_bin": 64, "eta": 0.3}
+    cache = PreparedDataCache()
+    fmt_params = est.format_params(params)
+    full_prep, _, _ = prepare_cached(data, "quantized_bins", fmt_params,
+                                     cache=cache)
+    full = payload_nbytes(full_prep)
+    n_rows = data.x.shape[0]
+
+    t0 = time.perf_counter()
+    base = est.train(full_prep, params)
+    t_replicated = time.perf_counter() - t0
+
+    t_shard = {}
+    sharded_total = 0
+    for s in (2, 4, 8):
+        prep, _, _ = prepare_cached(data, "quantized_bins", fmt_params,
+                                    cache=cache, placement=ShardedPlacement(s))
+        per_device = payload_nbytes(prep)
+        sharded_total += per_device
+        pad_rows = s * (-(-n_rows // s)) - n_rows
+        slack = (full // n_rows) * (pad_rows + 1) + s * (-(-n_rows // s)) + 4096
+        if per_device > full // s + slack:
+            raise AssertionError(
+                f"S={s}: per-device resident {per_device}B exceeds "
+                f"full/{s} + slack = {full // s + slack}B")
+        t0 = time.perf_counter()
+        model = est.train(prep, params)
+        t_shard[s] = time.perf_counter() - t0
+        if not (np.array_equal(model.feat, base.feat)
+                and np.array_equal(model.thresh, base.thresh)):
+            raise AssertionError(
+                f"S={s}: sharded split decisions differ from single-device")
+    if cache.sharded_resident_bytes() != sharded_total:
+        raise AssertionError(
+            f"sharded_resident_bytes gauge {cache.sharded_resident_bytes()} "
+            f"!= sum of per-shard entries {sharded_total}")
+
+    per8 = payload_nbytes(shard_payload(full_prep, 8))
+    return [
+        (f"{tag}.wallclock.train_replicated_s", t_replicated,
+         "one GBDT config on the full prepared copy"),
+        (f"{tag}.wallclock.train_s8_s", t_shard[8],
+         "same config on 8 virtual shards (vmap lowering, one psum/level)"),
+        (f"{tag}.wallclock.s8_resident_shrink_x", full / per8,
+         "acceptance: per-device bytes <= full/S + pad slack for S in "
+         "{2,4,8}; split decisions identical to single-device"),
+        (f"{tag}.wallclock.parity_splits_ok", 1.0,
+         "acceptance: sharded feat/threshold per node == single-device"),
+    ]
+
+
+def smoke() -> list[Row]:
+    """CI-gated sharded rows: deterministic sim + wall-clock gates."""
+    return _sim_rows("sharded.smoke") + _wallclock_rows("sharded.smoke")
+
+
+def full() -> list[Row]:
+    return smoke()

@@ -54,8 +54,12 @@ with tempfile.TemporaryDirectory() as artifacts:
         alice = service.submit_search(
             SearchSpec(spaces=alice_spaces, n_executors=4),
             train_df, validate_df, tenant="alice", weight=2.0)
+        # bob runs SHARDED (DESIGN.md §3.9): his prepared variants resolve
+        # under a ShardedPlacement key, so his per-device residency is ~1/2
+        # a full copy while alice/carol keep training on replicated entries
+        # in the SAME budget-governed cache
         bob = service.submit_search(
-            SearchSpec(spaces=bob_spaces, n_executors=4),
+            SearchSpec(spaces=bob_spaces, n_executors=4, n_shards=2),
             train_df, validate_df, tenant="bob", weight=1.0)
         carol = service.submit_search(
             SearchSpec(spaces=carol_spaces, n_executors=4, tuner="asha",
@@ -95,6 +99,17 @@ with tempfile.TemporaryDirectory() as artifacts:
         per_tenant = service.prepared_cache.tenant_counters()
         assert sum(v.get("hits", 0) for v in per_tenant.values()) == hits
         assert sum(v.get("misses", 0) for v in per_tenant.values()) == misses
+        # the §3.9 coexistence check: bob's row-sharded entries live in the
+        # same governed cache as the replicated ones — the sharded residency
+        # gauge is nonzero (his per-shard blocks) yet strictly smaller than
+        # the cache total (alice/carol's full copies are in there too), and
+        # bob's ledger traffic is attributed like anyone else's
+        sharded_bytes = service.prepared_cache.sharded_resident_bytes()
+        assert 0 < sharded_bytes < service.prepared_cache.bytes_cached
+        assert per_tenant.get("bob", {}).get("misses", 0) > 0
+        print(f"sharded coexistence: bob holds {sharded_bytes}B of per-shard "
+              f"blocks inside the {service.prepared_cache.bytes_cached}B "
+              "shared cache")
         # bob's plan was priced from shared fleet experience, not profiling
         assert stats.fleet_observations > 0
     finally:

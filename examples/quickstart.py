@@ -105,3 +105,24 @@ best = max((r for r in rungs if r.ok and r.score is not None),
 print(f"asha: {len(rungs)} rung tasks, {spent} boosting rounds trained "
       f"(grid at full budget would train {27 * 90}), "
       f"best auc={best.score:.4f} at {best.task.key()}")
+
+# ----- sharded search (DESIGN.md §3.9) -----------------------------------
+# n_shards=4 row-shards every prepared variant into 4 blocks: GBDT builds
+# per-shard histograms combined with ONE psum before the split scan (split
+# decisions identical to single-device), logreg/mlp do data-parallel grad
+# psums, and the eval plane reduces per-shard metric partials — so each
+# (virtual) device holds ~1/4 of a full prepared copy. The launcher flag
+# for the same thing is `--shards 4`.
+sharded_spec = SearchSpec(
+    spaces=[sklearn_lr_grid],
+    n_executors=2,
+    n_shards=4,
+    profiler=SamplingProfiler(0.01),
+)
+sharded_session = Session(sharded_spec)
+sharded = [r for r in sharded_session.results(train_df, validate_df) if r.ok]
+sst = sharded_session.stats
+best_sh = max(sharded, key=lambda r: r.score)
+print(f"sharded: {len(sharded)} configs at n_shards=4, "
+      f"shard residency {sst.shard_residency_bytes}B per device "
+      f"(vs a full replicated copy), best auc={best_sh.score:.4f}")

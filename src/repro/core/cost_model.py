@@ -70,6 +70,17 @@ def param_bucket(params: Mapping[str, Any]) -> str:
     return ",".join(parts)
 
 
+def _shard_rows(n_rows: int, n_shards: int) -> int:
+    """The §3.9 size axis: sharded laws regress on ROWS PER SHARD.
+
+    A task trained over ``n_shards`` row shards does per-device work
+    proportional to its own block (plus a size-independent psum), so the
+    power law that transfers across data sizes is ``seconds ≈ a ·
+    (rows/n_shards)^b`` — feeding full rows in would make a 4-shard run
+    look like a law violation instead of a smaller effective size."""
+    return -(-int(n_rows) // int(n_shards)) if n_shards > 1 else int(n_rows)
+
+
 def _law_params(task) -> Mapping[str, Any]:
     """Params the TRAIN size/bucket laws key on.
 
@@ -200,22 +211,29 @@ class CostModel:
         self._n_observed = 0
 
     @staticmethod
-    def _family_key(family: str, batched: bool) -> str:
+    def _family_key(family: str, batched: bool, n_shards: int = 1) -> str:
         """Batched (fused) execution gets its OWN family: amortized per-task
         seconds inside a vmap batch follow a different law than solo runs
         (compile amortized away, device kept busy), so the two populations
-        must not pollute each other's regression."""
-        return f"{family}#batched" if batched else family
+        must not pollute each other's regression. Sharded execution (§3.9)
+        likewise gets a ``#s{n}`` suffix per shard count — its per-step
+        psum overhead shifts the law's intercept — and those populations
+        regress on rows-per-shard (:func:`_shard_rows`)."""
+        key = f"{family}#batched" if batched else family
+        return f"{key}#s{int(n_shards)}" if n_shards > 1 else key
 
     # -- write side --------------------------------------------------------
     def observe(self, task: TrainTask, seconds: float, n_rows: int,
-                *, batched: bool = False,
+                *, batched: bool = False, n_shards: int = 1,
                 ratio_seconds: float | None = None) -> None:
         """Record one completed task. No-ops on junk (failed tasks report 0s).
 
         ``batched=True`` records under the family's fused-execution law;
         ``seconds`` is then the AMORTIZED share (batch total / batch size),
         which is exactly what the scheduler wants back from ``estimate``.
+
+        ``n_shards > 1`` records under the family's sharded law (§3.9),
+        regressing on rows-per-shard instead of full rows.
 
         ``ratio_seconds`` is what the obs/est ratio compares against
         ``task.cost`` (default: ``seconds``). The observer passes
@@ -226,8 +244,8 @@ class CostModel:
         """
         if seconds <= 0 or n_rows <= 0:
             return
-        key = self._family_key(task.estimator, batched)
-        x, y = math.log(n_rows), math.log(seconds)
+        key = self._family_key(task.estimator, batched, n_shards)
+        x, y = math.log(_shard_rows(n_rows, n_shards)), math.log(seconds)
         with self._lock:
             fam = self._buckets.setdefault(key, {})
             fam.setdefault(param_bucket(_law_params(task)), _LogStats()).add(x, y)
@@ -239,6 +257,7 @@ class CostModel:
             self._n_observed += 1
         if self.prior is not None:      # write-through, outside our lock
             self.prior.observe(task, seconds, n_rows, batched=batched,
+                               n_shards=n_shards,
                                ratio_seconds=ratio_seconds)
 
     def observe_convert(self, fmt_key: str, seconds: float, n_rows: int) -> None:
@@ -268,38 +287,45 @@ class CostModel:
         return None
 
     def observe_eval(self, task: "TrainTask | str", seconds: float,
-                     n_rows: int) -> None:
+                     n_rows: int, *, n_shards: int = 1) -> None:
         """Record one executor-side scoring (§3.4; ``n_rows`` = EVAL split
         rows — a different axis than the training laws'). Pass the
         TrainTask for bucket resolution; a bare family string feeds only
-        the pooled law."""
+        the pooled law. Sharded scoring (§3.9: partial-sum reduction over
+        per-shard blocks) lands in its own ``#s{n}`` population, sized on
+        eval rows-per-shard."""
         if seconds <= 0 or n_rows <= 0:
             return
         if isinstance(task, str):
             family, bucket = task, None
         else:
             family, bucket = task.estimator, param_bucket(task.params)
-        x, y = math.log(n_rows), math.log(seconds)
+        family = self._family_key(family, False, n_shards)
+        x, y = math.log(_shard_rows(n_rows, n_shards)), math.log(seconds)
         with self._lock:
             if bucket is not None:
                 self._eval_buckets.setdefault(family, {}).setdefault(
                     bucket, _LogStats()).add(x, y)
             self._evals.setdefault(family, _LogStats()).add(x, y)
         if self.prior is not None:
-            self.prior.observe_eval(task, seconds, n_rows)
+            self.prior.observe_eval(task, seconds, n_rows, n_shards=n_shards)
 
-    def predict_eval(self, task: "TrainTask | str", n_rows: int) -> float | None:
+    def predict_eval(self, task: "TrainTask | str", n_rows: int,
+                     *, n_shards: int = 1) -> float | None:
         """Per-task eval-seconds estimate at an eval-split size, or None
         before the family has ever been observed scoring. Resolution
         mirrors the training law: exact (family, bucket) stats when a
-        TrainTask is given, else the pooled family law."""
+        TrainTask is given, else the pooled family law; a cold SHARDED
+        eval law falls back to the unsharded one (sharding assumed to buy
+        nothing until it has demonstrated otherwise)."""
         if n_rows <= 0:
             return None
         if isinstance(task, str):
             family, bucket = task, None
         else:
             family, bucket = task.estimator, param_bucket(task.params)
-        x = math.log(n_rows)
+        family = self._family_key(family, False, n_shards)
+        x = math.log(_shard_rows(n_rows, n_shards))
         with self._lock:
             if bucket is not None:
                 stats = self._eval_buckets.get(family, {}).get(bucket)
@@ -309,10 +335,15 @@ class CostModel:
             if stats is not None and stats.n:
                 return math.exp(stats.predict(x, self.default_exponent))
         if self.prior is not None:
-            return self.prior.predict_eval(task, n_rows)
+            got = self.prior.predict_eval(task, n_rows, n_shards=n_shards)
+            if got is not None:
+                return got
+        if n_shards > 1:
+            return self.predict_eval(task, n_rows)
         return None
 
-    def observe_result(self, result, n_rows: int, eval_rows: int = 0) -> None:
+    def observe_result(self, result, n_rows: int, eval_rows: int = 0,
+                       *, n_shards: int = 1) -> None:
         """``on_result``-shaped adapter: feed a TaskResult straight in. Fused
         results carry ``batch_size > 1`` and amortized seconds, and land in
         the batched law automatically. A result that BUILT a prepared-data
@@ -331,16 +362,18 @@ class CostModel:
             if (getattr(result, "timed_out", False)
                     and result.train_seconds > 0):
                 self.observe(result.task, result.train_seconds, n_rows,
-                             batched=getattr(result, "batch_size", 1) > 1)
+                             batched=getattr(result, "batch_size", 1) > 1,
+                             n_shards=n_shards)
             return
         batch_size = getattr(result, "batch_size", 1)
         conv = getattr(result, "convert_seconds", 0.0)
         eval_s = getattr(result, "eval_seconds", 0.0)
         self.observe(result.task, result.train_seconds, n_rows,
-                     batched=batch_size > 1,
+                     batched=batch_size > 1, n_shards=n_shards,
                      ratio_seconds=result.train_seconds + conv + eval_s)
         if eval_s > 0 and eval_rows > 0:
-            self.observe_eval(result.task, eval_s, eval_rows)
+            self.observe_eval(result.task, eval_s, eval_rows,
+                              n_shards=n_shards)
         if conv > 0:
             from repro.core.interface import format_law_key, get_estimator
 
@@ -369,19 +402,20 @@ class CostModel:
         return num / den if den else self.default_exponent
 
     def predict(self, task: TrainTask, n_rows: int,
-                *, batched: bool = False) -> float | None:
+                *, batched: bool = False, n_shards: int = 1) -> float | None:
         """Size-law prediction in seconds, or None with no relevant data.
 
         Resolution order: exact (family, bucket) stats, then pooled family
         stats, then the shared ``prior``'s own resolution (outside our
         lock). Monotone non-decreasing in ``n_rows`` by construction (slopes
         are clamped to [0, 3]). ``batched=True`` reads the fused-execution
-        law (amortized per-task seconds).
+        law (amortized per-task seconds); ``n_shards > 1`` reads the
+        family's sharded law at rows-per-shard (§3.9).
         """
         if n_rows <= 0:
             return None
-        key = self._family_key(task.estimator, batched)
-        x = math.log(n_rows)
+        key = self._family_key(task.estimator, batched, n_shards)
+        x = math.log(_shard_rows(n_rows, n_shards))
         with self._lock:
             fam = self._buckets.get(key, {})
             stats = fam.get(param_bucket(_law_params(task)))
@@ -391,11 +425,12 @@ class CostModel:
             if pooled is not None and pooled.n:
                 return math.exp(pooled.predict(x, self._family_exponent(key)))
         if self.prior is not None:
-            return self.prior.predict(task, n_rows, batched=batched)
+            return self.prior.predict(task, n_rows, batched=batched,
+                                      n_shards=n_shards)
         return None
 
     def estimate(self, task: TrainTask, n_rows: int,
-                 *, batched: bool = False) -> float | None:
+                 *, batched: bool = False, n_shards: int = 1) -> float | None:
         """Best cost estimate for scheduling: bucket law, else the task's own
         prior estimate corrected by the family's observed/estimated ratio,
         else the pooled family law. Still monotone in ``n_rows`` (the ratio
@@ -405,28 +440,34 @@ class CostModel:
         batch of the family has been observed, the SEQUENTIAL estimate is
         the conservative fallback (fusion assumed to buy nothing until it
         has demonstrated otherwise — the ratio branch then learns the
-        amortized/sequential speedup from the very first fused batch).
+        amortized/sequential speedup from the very first fused batch). A
+        cold SHARDED law (§3.9) falls back the same way: the unsharded
+        estimate answers until the first sharded observation lands.
         """
-        key = self._family_key(task.estimator, batched)
+        key = self._family_key(task.estimator, batched, n_shards)
         with self._lock:
             fam = self._buckets.get(key, {})
             stats = fam.get(param_bucket(_law_params(task)))
             if stats is not None and stats.n and n_rows > 0:
                 return math.exp(stats.predict(
-                    math.log(n_rows), self._family_exponent(key)))
+                    math.log(_shard_rows(n_rows, n_shards)),
+                    self._family_exponent(key)))
             ratio = self._ratios.get(key)
             if ratio is not None and ratio.n and task.cost is not None and task.cost > 0:
                 return task.cost * ratio.factor()
-        got = self.predict(task, n_rows, batched=batched)
+        got = self.predict(task, n_rows, batched=batched, n_shards=n_shards)
+        if got is None and n_shards > 1:
+            return self.estimate(task, n_rows, batched=batched)
         if got is None and batched:
             return self.estimate(task, n_rows, batched=False)
         return got
 
-    def predict_many(self, tasks: Sequence[TrainTask], n_rows: int) -> dict[int, float]:
+    def predict_many(self, tasks: Sequence[TrainTask], n_rows: int,
+                     *, n_shards: int = 1) -> dict[int, float]:
         """task_id -> estimate for every task the model can serve."""
         out: dict[int, float] = {}
         for t in tasks:
-            p = self.estimate(t, n_rows)
+            p = self.estimate(t, n_rows, n_shards=n_shards)
             if p is not None and p > 0:
                 out[t.task_id] = p
         return out

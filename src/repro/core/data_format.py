@@ -46,6 +46,10 @@ __all__ = [
     "prepared_data_cache",
     "prepare_cached",
     "payload_nbytes",
+    "ShardedPlacement",
+    "shard_payload",
+    "shard_pspecs",
+    "is_sharded_payload",
 ]
 
 
@@ -193,13 +197,142 @@ def format_key(fmt: str, params: Mapping[str, Any] | None = None) -> str:
 
 
 # --------------------------------------------------------------------------
+# Row-sharded placements (DESIGN.md §3.9).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlacement:
+    """Cache-key token for a row-sharded prepared-data placement.
+
+    A prepared entry under this placement holds the converter's payload
+    re-partitioned into ``n_shards`` contiguous row blocks (see
+    :func:`shard_payload`); each device in the shard group is resident for
+    exactly ONE block, so the entry's byte accounting is per-shard, not
+    full-copy. Identity (hash/eq) is ``(n_shards, axis, tag)``:
+
+    * ``axis`` names the SPMD axis the training/eval psums run over
+      (``compat.sharded_call``);
+    * ``tag`` separates shard GROUPS that would otherwise collide — a mesh
+      pool hosting two 4-shard groups keys each group's residency apart;
+    * ``mesh`` (compare=False) optionally carries the live device mesh for
+      the shard_map lowering; it never participates in cache identity, so a
+      single-device session and a real mesh share the key semantics.
+    """
+
+    n_shards: int
+    axis: str = "shards"
+    tag: Hashable = None
+    mesh: Any = dataclasses.field(default=None, compare=False, hash=False,
+                                  repr=False)
+
+    def __post_init__(self):
+        if self.n_shards < 2:
+            raise ValueError(
+                f"ShardedPlacement needs n_shards >= 2, got {self.n_shards}")
+
+
+def is_sharded_payload(prepared) -> bool:
+    """True for payloads produced by :func:`shard_payload`."""
+    return isinstance(prepared, Mapping) and "_n_shards" in prepared
+
+
+def shard_payload(prepared, n_shards: int, *, n_rows: int | None = None):
+    """Re-partition a converted payload into stacked per-shard row blocks.
+
+    The FULL conversion runs first (so global statistics — quantile edges,
+    label means — are identical to the unsharded entry), then every array
+    leaf whose leading dimension equals the row count is split into
+    ``n_shards`` contiguous blocks of ``ceil(rows / n_shards)`` rows
+    (zero-padded tail) and stacked to ``(n_shards, rows_per_shard, ...)``.
+    Other leaves (bin edges, scalars) are replicated untouched. Adds:
+
+    * ``"_shard_valid"``: (n_shards, rows_per_shard) bool — False on pad
+      rows, the mask every sharded kernel applies before reducing;
+    * ``"_n_shards"`` / ``"_n_rows"``: ints, the dispatch markers the
+      estimators and :func:`payload_nbytes` key off.
+
+    Shard ``s`` owns global rows ``[s * rows_per_shard, (s+1) * rows_per_shard)``
+    — concatenating the blocks in shard order reproduces the original row
+    order exactly (the eval plane's gather fallback relies on this).
+    """
+    if not isinstance(prepared, Mapping):
+        raise TypeError("shard_payload expects a converted payload mapping, "
+                        f"got {type(prepared).__name__}")
+    if is_sharded_payload(prepared):
+        raise ValueError("payload is already sharded")
+    if n_shards < 2:
+        return dict(prepared)
+    if n_rows is None:
+        for probe in ("y", "x", "bins"):
+            leaf = prepared.get(probe)
+            if leaf is not None and getattr(leaf, "ndim", 0) >= 1:
+                n_rows = int(leaf.shape[0])
+                break
+        else:
+            raise ValueError("cannot infer the payload's row count; pass n_rows=")
+    rows_per_shard = -(-n_rows // n_shards)
+    pad = n_shards * rows_per_shard - n_rows
+    out: dict[str, Any] = {}
+    for key, leaf in prepared.items():
+        if (getattr(leaf, "ndim", 0) >= 1
+                and int(leaf.shape[0]) == n_rows):
+            arr = np.asarray(leaf)
+            if pad:
+                widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+                arr = np.pad(arr, widths)
+            out[key] = jnp.asarray(
+                arr.reshape((n_shards, rows_per_shard) + arr.shape[1:]))
+        else:
+            out[key] = leaf
+    valid = np.zeros(n_shards * rows_per_shard, dtype=bool)
+    valid[:n_rows] = True
+    out["_shard_valid"] = jnp.asarray(valid.reshape(n_shards, rows_per_shard))
+    out["_n_shards"] = int(n_shards)
+    out["_n_rows"] = int(n_rows)
+    return out
+
+
+def shard_pspecs(prepared, axis: str = "shards"):
+    """PartitionSpec tree for a sharded payload: leaves stacked on the shard
+    axis get ``P(axis)``, replicated leaves (and the non-array markers) get
+    ``P()`` so the spec tree stays leaf-aligned with the payload. Paired
+    with ``{axis: n_shards}`` axis sizes this is the prepared-data pspec
+    tree ``distributed.sharding.bytes_per_device`` reports per-shard
+    residency from."""
+    from jax.sharding import PartitionSpec as P
+
+    if not is_sharded_payload(prepared):
+        raise ValueError("shard_pspecs expects a shard_payload() payload")
+    s = int(prepared["_n_shards"])
+    specs: dict[str, Any] = {}
+    for key, leaf in prepared.items():
+        sharded = getattr(leaf, "ndim", 0) >= 1 and int(leaf.shape[0]) == s
+        specs[key] = P(axis) if sharded else P()
+    return specs
+
+
+# --------------------------------------------------------------------------
 # Prepared-data cache (DESIGN.md §3.3).
 # --------------------------------------------------------------------------
 
 def payload_nbytes(obj) -> int:
     """Best-effort byte size of a converted payload: sum of ``.nbytes`` over
-    array leaves in (possibly nested) dict/tuple/list containers."""
+    array leaves in (possibly nested) dict/tuple/list containers.
+
+    Sharded payloads (:func:`shard_payload`) report PER-SHARD residency:
+    leaves stacked on the shard axis count one block (``nbytes / n_shards``),
+    replicated leaves count in full — the cache models what one device of
+    the shard group holds, not the host-side stack."""
     if isinstance(obj, Mapping):
+        s = obj.get("_n_shards")
+        if isinstance(s, int) and s > 1:
+            total = 0
+            for leaf in obj.values():
+                b = payload_nbytes(leaf)
+                if getattr(leaf, "ndim", 0) >= 1 and int(leaf.shape[0]) == s:
+                    b = -(-b // s)
+                total += b
+            return total
         return sum(payload_nbytes(v) for v in obj.values())
     if isinstance(obj, (tuple, list)):
         return sum(payload_nbytes(v) for v in obj)
@@ -372,6 +505,18 @@ class PreparedDataCache:
         with self._lock:
             return self._bytes
 
+    def sharded_resident_bytes(self) -> int:
+        """Per-shard resident bytes across every ready entry keyed by a
+        :class:`ShardedPlacement` (entry ``nbytes`` is already per-shard —
+        see :func:`payload_nbytes`). ``SearchStats.shard_residency_bytes``
+        reads this through ``distributed.sharding.bytes_per_device``-backed
+        reporting in the Session (DESIGN.md §3.9)."""
+        with self._lock:
+            return sum(
+                e.nbytes for k, e in self._entries.items()
+                if e.ready.is_set() and isinstance(k, tuple)
+                and any(isinstance(part, ShardedPlacement) for part in k))
+
     @property
     def hit_rate(self) -> float:
         hits, misses = self.counters()
@@ -406,7 +551,9 @@ def prepare_key(data: DenseMatrix, fmt: str,
     device residency: None = the process default device (thread pools share
     it); mesh pools pass a per-slice token so each slice holds its own
     resident copy (on a real pod the builder device_puts onto the slice —
-    on this CPU container slices are degenerate but the keying is the same)."""
+    on this CPU container slices are degenerate but the keying is the same);
+    a :class:`ShardedPlacement` keys a row-sharded partition whose entry
+    holds per-shard blocks (DESIGN.md §3.9)."""
     return (data.fingerprint(), format_key(fmt, params), placement)
 
 
@@ -415,10 +562,22 @@ def prepare_cached(data: DenseMatrix, fmt: str,
                    cache: PreparedDataCache | None = None,
                    placement: Hashable = None) -> tuple[object, float, bool]:
     """Convert through the prepared-data cache; returns
-    ``(prepared, convert_seconds, built)`` — see :meth:`PreparedDataCache.get`."""
+    ``(prepared, convert_seconds, built)`` — see :meth:`PreparedDataCache.get`.
+
+    Under a :class:`ShardedPlacement` the builder converts the FULL dataset
+    first (global statistics identical to the replicated entry) and then
+    row-shards the payload (:func:`shard_payload`) — still exactly-once per
+    key through the in-flight de-dup, with per-shard byte accounting."""
     cache = cache if cache is not None else prepared_data_cache()
     key = prepare_key(data, fmt, params, placement)
-    return cache.get(key, lambda: convert(data, fmt, **dict(params or {})))
+
+    def build():
+        prepared = convert(data, fmt, **dict(params or {}))
+        if isinstance(placement, ShardedPlacement):
+            prepared = shard_payload(prepared, placement.n_shards)
+        return prepared
+
+    return cache.get(key, build)
 
 
 @register_converter("dense_rows")

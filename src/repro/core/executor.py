@@ -38,7 +38,12 @@ import threading
 import time
 from typing import Callable, Iterator, Sequence
 
-from repro.core.data_format import DenseMatrix, PreparedDataCache, prepared_data_cache
+from repro.core.data_format import (
+    DenseMatrix,
+    PreparedDataCache,
+    ShardedPlacement,
+    prepared_data_cache,
+)
 from repro.core.evaluation import EvalPlan, evaluate_models
 from repro.core.fault import (
     AllExecutorsLost,
@@ -59,7 +64,8 @@ from repro.core.interface import (
 )
 from repro.core.scheduler import Assignment
 
-__all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "make_slices"]
+__all__ = ["LocalExecutorPool", "MeshSliceExecutorPool", "ShardGroup",
+           "make_slices"]
 
 _DYNAMIC_POLICIES = ("dynamic", "lpt_dynamic")
 
@@ -192,8 +198,19 @@ class LocalExecutorPool:
         deadline_factor: float | None = None,
         task_timeout_seconds: float | None = None,
         sleep: Callable[[float], None] = time.sleep,
+        n_shards: int = 1,
     ):
         self._n_executors = n_executors
+        #: sharded data plane (DESIGN.md §3.9): with ``n_shards > 1`` every
+        #: conversion resolves under ONE ShardedPlacement token — workers
+        #: train on row-sharded prepared entries (per-shard residency in
+        #: the cache accounting) and the eval plane reduces shard partials.
+        #: On a single process device the shards are virtual (vmap-lowered);
+        #: the token is what a mesh-backed pool would bind to a shard group.
+        from repro.core.data_format import ShardedPlacement
+
+        self._placement_token = (
+            ShardedPlacement(int(n_shards)) if int(n_shards) > 1 else None)
         self.wal = wal or SearchWAL(None)
         self.failure_hook = failure_hook  # tests inject ExecutorFailure here
         self.speculation_factor = speculation_factor
@@ -241,8 +258,9 @@ class LocalExecutorPool:
     def prepare_placements(self) -> list:
         """Placement tokens this pool converts under (conversion-aware
         costing probes these to tell cold formats from resident ones):
-        worker threads share the process default device."""
-        return [None]
+        worker threads share the process default device — ONE token, the
+        sharded one when the pool runs the sharded data plane (§3.9)."""
+        return [self._placement_token]
 
     # ------------------------------------------------------------------
     def submit(self, assignment: Assignment, data: DenseMatrix,
@@ -324,6 +342,7 @@ class LocalExecutorPool:
                 else:
                     batch_results = _run_fused_unit(sub, data, eid,
                                                     cache=self.prepared_cache,
+                                                    placement=self._placement_token,
                                                     validate=validate)
             except ExecutorFailure:
                 with results_lock:
@@ -374,9 +393,11 @@ class LocalExecutorPool:
                 if self.failure_hook is not None:
                     self.failure_hook(eid, task)  # may raise ExecutorFailure
                 est, model, secs, conv, rstate = _train_solo(
-                    task, data, cache=self.prepared_cache)
+                    task, data, cache=self.prepared_cache,
+                    placement=self._placement_token)
                 score, eval_s = _score_solo(est, model, validate,
-                                            self.prepared_cache)
+                                            self.prepared_cache,
+                                            placement=self._placement_token)
                 res = TaskResult(task=task, model=model, train_seconds=secs,
                                  executor_id=eid, convert_seconds=conv,
                                  score=score, eval_seconds=eval_s,
@@ -696,6 +717,7 @@ class LocalExecutorPool:
                             for i in range(len(sub.tasks))}
                     for res in _run_fused_unit(sub, data, -1,
                                                cache=self.prepared_cache,
+                                               placement=self._placement_token,
                                                validate=validate):
                         if (not res.ok
                                 and self._retry.should_retry(res.task.task_id)):
@@ -718,9 +740,11 @@ class LocalExecutorPool:
                         continue
                     try:
                         est, model, secs, conv, rstate = _train_solo(
-                            task, data, cache=self.prepared_cache)
+                            task, data, cache=self.prepared_cache,
+                            placement=self._placement_token)
                         score, eval_s = _score_solo(est, model, validate,
-                                                    self.prepared_cache)
+                                                    self.prepared_cache,
+                                                    placement=self._placement_token)
                         res = TaskResult(task=task, model=model, train_seconds=secs,
                                          executor_id=-1, convert_seconds=conv,
                                          score=score, eval_seconds=eval_s,
@@ -801,6 +825,28 @@ def make_slices(mesh, n_slices: int, axis: str = "data"):
     return slices
 
 
+class ShardGroup:
+    """One §3.9 scheduling unit spanning ``n_shards`` mesh slices.
+
+    When a :class:`MeshSliceExecutorPool` runs with ``n_shards > 1`` its
+    slices are bundled into consecutive groups and the GROUP — not the
+    slice — is what the scheduler places tasks on: one queue, one executor
+    id, one failure domain, one :class:`ShardedPlacement` cache token per
+    group. ``slices`` holds the member slice handles (on a real pod, the
+    submeshes the shard_map spans); ``index`` is the group's position in
+    the pool, which keys its placement tag.
+    """
+
+    __slots__ = ("slices", "index")
+
+    def __init__(self, slices, index: int):
+        self.slices = tuple(slices)
+        self.index = int(index)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"ShardGroup(index={self.index}, n_slices={len(self.slices)})"
+
+
 class MeshSliceExecutorPool:
     """Executors = submesh slices of one device mesh.
 
@@ -827,6 +873,14 @@ class MeshSliceExecutorPool:
     Pass ``slices=[...]`` to supply pre-built (or stand-in) slice handles
     directly instead of partitioning a mesh — tests and custom partitioners
     use this to exercise the pool without real multi-device state.
+
+    With ``n_shards > 1`` (§3.9) the pool bundles consecutive slices into
+    :class:`ShardGroup` units of that size and SCHEDULES ON GROUPS: a
+    sharded placement is one unit spanning its shard group — one queue,
+    one executor id, one failure domain — and ``_placement`` hands every
+    task a per-group :class:`ShardedPlacement` token, so prepared data for
+    the group is built once as per-shard row blocks and ``n_executors``
+    reports the group count, not the raw slice count.
     """
 
     def __init__(
@@ -842,6 +896,7 @@ class MeshSliceExecutorPool:
         driver_slice: object | None = None,
         on_result: Callable[[TaskResult], None] | None = None,
         prepared_cache: PreparedDataCache | None = None,
+        n_shards: int = 1,
         max_task_retries: int = 0,
         retry_backoff: float = 0.05,
         poison_threshold: int | None = 3,
@@ -853,6 +908,18 @@ class MeshSliceExecutorPool:
             if mesh is None or n_slices is None:
                 raise ValueError("provide either a mesh + n_slices or explicit slices=")
             self.slices = make_slices(mesh, n_slices, axis=slice_axis)
+        self.n_shards = int(n_shards)
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if self.n_shards > 1:
+            if len(self.slices) % self.n_shards:
+                raise ValueError(
+                    f"{len(self.slices)} slices cannot form shard groups of "
+                    f"{self.n_shards}")
+            self.slices = [
+                ShardGroup(self.slices[g * self.n_shards:
+                                       (g + 1) * self.n_shards], g)
+                for g in range(len(self.slices) // self.n_shards)]
         #: None = the estimator-backed default (prepared-data plane, §3.3)
         self.task_runner = task_runner
         #: defaults to a PER-POOL cache, unlike the thread pool's process-wide
@@ -917,11 +984,22 @@ class MeshSliceExecutorPool:
         shared ``prepared_cache`` across pools — a later pool can never
         collide with a dead pool's entries (an ``id()``-based token could
         be recycled). The driver fallback reuses its handle's entry when it
-        is one of the slices — by default it IS slice 0."""
+        is one of the slices — by default it IS slice 0.
+
+        With ``n_shards > 1`` the scheduling units are :class:`ShardGroup`
+        handles, and the token is a :class:`ShardedPlacement` tagged by
+        (pool, group) — the §3.9 key under which the group's prepared data
+        is built ONCE as per-shard row blocks and every family's sharded
+        training/eval path dispatches."""
+        idx = -1   # external driver_slice handle
         for i, s in enumerate(self.slices):
             if s is sl:
-                return ("slice", self._pool_id, i)
-        return ("slice", self._pool_id, -1)   # external driver_slice handle
+                idx = i
+                break
+        if self.n_shards > 1:
+            return ShardedPlacement(
+                self.n_shards, tag=("slice-group", self._pool_id, idx))
+        return ("slice", self._pool_id, idx)
 
     def prepare_placements(self) -> list:
         """Placement tokens this pool converts under: one per slice for the

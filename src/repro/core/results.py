@@ -65,6 +65,53 @@ METRICS: dict[str, Callable[[np.ndarray, np.ndarray], float]] = {
 }
 
 
+# --------------------------------------------------------------------------
+# Sharded eval plane (DESIGN.md §3.9): per-shard metric PARTIALS.
+#
+# Row-decomposable metrics (per-row means) reduce as (partial sum, valid
+# count) pairs per shard — the executor never materialises a gathered
+# prediction vector. AUC needs GLOBAL Mann-Whitney ranks, so it falls back
+# to concatenating the shard blocks (block order reproduces row order).
+# --------------------------------------------------------------------------
+
+
+def _accuracy_partial(y, s, valid) -> float:
+    hit = ((np.asarray(s) >= 0.5) == (np.asarray(y) >= 0.5)) & valid
+    return float(hit.sum())
+
+
+def _logloss_partial(y, s, valid) -> float:
+    p = np.clip(np.asarray(s, dtype=np.float64), 1e-7, 1 - 1e-7)
+    yy = np.asarray(y, dtype=np.float64)
+    terms = -(yy * np.log(p) + (1 - yy) * np.log(1 - p))
+    return float(np.where(valid, terms, 0.0).sum())
+
+
+#: metric → (per-shard partial-sum fn, sign applied to the combined mean)
+METRIC_PARTIALS: dict[str, tuple[Callable, float]] = {
+    "accuracy": (_accuracy_partial, 1.0),
+    "neg_logloss": (_logloss_partial, -1.0),
+}
+
+
+def sharded_metric(metric: str, y_blocks: np.ndarray, score_blocks: np.ndarray,
+                   valid: np.ndarray, n_rows: int) -> float:
+    """Score block-sharded predictions: ``y_blocks``/``score_blocks``/
+    ``valid`` are (S, Rs) with zero-padded tails. Decomposable metrics
+    combine per-shard (sum, count) partials; others gather in shard order
+    (which IS row order) and run the global definition."""
+    entry = METRIC_PARTIALS.get(metric)
+    if entry is None:
+        flat_y = np.asarray(y_blocks).reshape(-1)[:n_rows]
+        flat_s = np.asarray(score_blocks).reshape(-1)[:n_rows]
+        return float(METRICS[metric](flat_y, flat_s))
+    partial_fn, sign = entry
+    sums = sum(partial_fn(y_blocks[s], score_blocks[s], valid[s])
+               for s in range(valid.shape[0]))
+    counts = float(np.asarray(valid).sum())
+    return sign * sums / counts
+
+
 @dataclasses.dataclass
 class ModelScore:
     task: TrainTask

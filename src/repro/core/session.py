@@ -125,6 +125,12 @@ class SearchStats:
         self.eval_seconds_total = 0.0
         self.predict_compile_cache_hits = 0    # this session's share of the
         self.predict_compile_cache_misses = 0  # predict CompileCache traffic
+        # -- sharded data plane (DESIGN.md §3.9) -------------------------
+        #: per-shard resident bytes across the backend cache's
+        #: ShardedPlacement entries at the end of the run — what ONE device
+        #: of a shard group holds (bytes_per_device semantics), not the
+        #: host-side stack. 0 for unsharded searches.
+        self.shard_residency_bytes = 0
 
     @property
     def profiling_ratio(self) -> float:  # paper Fig. 3
@@ -184,6 +190,8 @@ class Session:
                 deadline_factor=self.spec.deadline_factor,
                 task_timeout_seconds=self.spec.task_timeout_seconds,
             )
+            if self.spec.n_shards > 1:       # §3.9: sharded placement token
+                opts["n_shards"] = self.spec.n_shards
             opts.update(self.spec.pool_options)
             self._backend = LocalExecutorPool(
                 self.spec.n_executors, wal=self.wal, **opts
@@ -246,9 +254,10 @@ class Session:
             prev = backend.on_result
             if getattr(prev, "_session_observer", False):
                 prev = prev._chained_prev      # drop the stale session's hook
+            n_shards = self.spec.n_shards
 
             def _observe(res: TaskResult, _prev=prev) -> None:
-                cm.observe_result(res, n_rows, eval_rows)
+                cm.observe_result(res, n_rows, eval_rows, n_shards=n_shards)
                 if _prev is not None:
                     _prev(res)
 
@@ -264,7 +273,8 @@ class Session:
         warm-up the paper's Fig. 3 profiling overhead goes to ~zero."""
         known: dict[int, float] = {}
         if cm is not None:
-            known = cm.predict_many(batch, train.n_rows)
+            known = cm.predict_many(batch, train.n_rows,
+                                    n_shards=self.spec.n_shards)
             self.stats.n_model_estimates += len(known)
         unknown = [t for t in batch if t.task_id not in known]
         if unknown:
@@ -280,7 +290,7 @@ class Session:
         if cm is not None:
             out = []
             for t in pending:
-                p = cm.estimate(t, train.n_rows)
+                p = cm.estimate(t, train.n_rows, n_shards=self.spec.n_shards)
                 out.append(t.with_cost(p) if p is not None and p > 0 else t)
             return out
         # no model (foreign setup): per-family observed/estimated correction
@@ -358,6 +368,7 @@ class Session:
         if cm is None or eval_plan is None:
             return list(units)
         n_eval = eval_plan.data.n_rows
+        n_shards = self.spec.n_shards
         member_vals: dict[int, dict[int, float | None]] = {}
 
         def extra(u):
@@ -365,11 +376,12 @@ class Session:
                 # per-member estimates (bucket-resolved), computed ONCE and
                 # reused by apply — a split piece keeps exactly its own
                 # members' eval share
-                vals = {m.task_id: cm.predict_eval(m, n_eval)
+                vals = {m.task_id: cm.predict_eval(m, n_eval,
+                                                   n_shards=n_shards)
                         for m in u.tasks}
                 member_vals[u.task_id] = vals
                 return sum(v for v in vals.values() if v) or None
-            return cm.predict_eval(u, n_eval)
+            return cm.predict_eval(u, n_eval, n_shards=n_shards)
 
         def apply(u, e):
             if isinstance(u, FusedBatch):
@@ -398,7 +410,8 @@ class Session:
 
         def recost(m):
             if cm is not None:
-                est = cm.estimate(m, n_rows, batched=True)
+                est = cm.estimate(m, n_rows, batched=True,
+                                  n_shards=self.spec.n_shards)
                 if est is not None and est > 0:
                     return m.with_cost(est)
             return by_id.get(m.task_id, m)
@@ -578,7 +591,8 @@ class Session:
                     if cm is not None and not pool_observes:
                         cm.observe_result(
                             res, train.n_rows,
-                            validate.n_rows if validate is not None else 0)
+                            validate.n_rows if validate is not None else 0,
+                            n_shards=spec.n_shards)
                     if tuner.is_dynamic:
                         # feed the tuner the moment the result lands — this
                         # is what lets ASHA promote (and kill) mid-round
@@ -708,6 +722,11 @@ class Session:
             pc_hits, pc_misses = _counts(pc)
             self.stats.prepared_cache_hits = pc_hits - pc_hits0
             self.stats.prepared_cache_misses = pc_misses - pc_misses0
+            # §3.9: what ONE device of a shard group is resident for across
+            # the cache's ShardedPlacement entries (per-shard accounting —
+            # the bytes_per_device view, not the host-side stack)
+            if hasattr(pc, "sharded_resident_bytes"):
+                self.stats.shard_residency_bytes = pc.sharded_resident_bytes()
             self.finished = True
 
     def _budget_hit(self, t_start: float) -> str | None:

@@ -124,6 +124,14 @@ class SearchSpec:
     task_timeout_seconds: float | None = None
     #: fault-injection / speculation knobs forwarded to the executor pool
     pool_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # -- sharded data plane (DESIGN.md §3.9) -----------------------------
+    #: row-shard count for prepared data: > 1 makes every executor train
+    #: and score against a ShardedPlacement (per-shard row blocks,
+    #: cross-shard psums) instead of a replicated copy. 1 = replicated
+    #: (the pre-§3.9 behavior). The CostModel then learns the family's
+    #: sharded laws and ``SearchStats.shard_residency_bytes`` reports the
+    #: per-shard footprint.
+    n_shards: int = 1
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -197,6 +205,10 @@ class SearchSpec:
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive, got {v}")
+        # -- sharded data plane (§3.9) -----------------------------------
+        object.__setattr__(self, "n_shards", int(self.n_shards))
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
 
     # -- construction helpers ------------------------------------------
     @classmethod

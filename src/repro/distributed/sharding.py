@@ -247,14 +247,34 @@ def infer_axis_map(mesh: Mesh) -> AxisMap:
     return {"dp": "data", "tp": "model"}
 
 
-def bytes_per_device(shapes: Any, pspecs: Any, mesh: Mesh, axis_map: AxisMap | None = None) -> int:
-    """Estimated per-device bytes for a sharded tree (documentation helper)."""
-    if axis_map is None:
-        axis_map = infer_axis_map(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+def bytes_per_device(shapes: Any, pspecs: Any, mesh: Mesh | dict[str, int],
+                     axis_map: AxisMap | None = None) -> int:
+    """Estimated per-device bytes for a sharded tree.
+
+    Accepts BOTH model-param trees (ShapeDtypeStruct leaves, logical
+    ``dp``/``tp`` axes resolved through ``axis_map``) and prepared-data
+    payload trees (``core.data_format.shard_pspecs``): array leaves without
+    a ``dtype``-declared shape fall back to their ``.nbytes``, non-array
+    leaves (format scalars like ``n_bins``) count ~0, and ``mesh`` may be a
+    plain ``{axis: size}`` mapping so a virtual single-device sharding (the
+    vmap lowering) reports the same per-shard residency a real mesh would.
+    """
+    if isinstance(mesh, dict):
+        sizes = dict(mesh)
+        if axis_map is None:
+            axis_map = {}
+    else:
+        if axis_map is None:
+            axis_map = infer_axis_map(mesh)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def leaf_bytes(leaf, spec: P) -> int:
-        total = int(np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is not None and dtype is not None:
+            total = int(np.prod(shape)) * jax.dtypes.canonicalize_dtype(dtype).itemsize
+        else:
+            total = int(getattr(leaf, "nbytes", 0) or 0)
         denom = 1
         for a in spec:
             if a is None:
@@ -263,11 +283,13 @@ def bytes_per_device(shapes: Any, pspecs: Any, mesh: Mesh, axis_map: AxisMap | N
             axes = (axes,) if isinstance(axes, str) else axes
             for ax in axes:
                 denom *= sizes.get(ax, 1)
-        return total // max(1, denom)
+        return -(-total // max(1, denom))
 
-    mapped = pspecs
-    return sum(
-        leaf_bytes(l, s)
-        for l, s in zip(jax.tree.leaves(shapes), jax.tree.leaves(
-            mapped, is_leaf=lambda x: isinstance(x, P)))
-    )
+    shape_leaves = jax.tree.leaves(shapes)
+    spec_leaves = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    if len(shape_leaves) != len(spec_leaves):
+        raise ValueError(
+            f"pspec tree has {len(spec_leaves)} leaves for "
+            f"{len(shape_leaves)} value leaves — trees must align leaf-wise "
+            "(use P() for replicated / non-array leaves)")
+    return sum(leaf_bytes(l, s) for l, s in zip(shape_leaves, spec_leaves))

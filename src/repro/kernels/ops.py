@@ -149,10 +149,62 @@ def _plan_smaller_child(node, n_nodes, n_rows):
     return small_is_left, idx, valid
 
 
+def _sharded_level_split(
+    bins, g, h, node, *, n_nodes, n_bins, lam, min_child_weight, axis_name,
+    row_valid, bin_limit=None, feat_mask=None, parent_hist=None,
+    return_hist=True,
+):
+    """Cross-shard level build (DESIGN.md §3.9): per-shard partial
+    histograms combined with a SINGLE ``psum`` before the split scan.
+
+    Runs in the per-shard view of ``compat.sharded_call`` — ``bins``/``g``/
+    ``h``/``node`` are this shard's row block, ``row_valid`` masks the
+    zero-padded tail. Subtraction composes across shards, but the
+    smaller-child PLAN must be global: per-shard row counts can disagree on
+    which sibling is smaller, so the counts are psum'd first and every
+    shard scatters its small-child rows through a dump slot (no compaction
+    — a globally-small child's rows may concentrate on one shard, so a
+    per-shard ``R/2`` cap would silently drop rows). After the psum the
+    histogram — and therefore every split decision — is shard-invariant.
+    """
+    if row_valid is None:
+        gv, hv = g, h
+        ones = jnp.ones(node.shape, jnp.int32)
+    else:
+        gv = jnp.where(row_valid, g, 0.0)
+        hv = jnp.where(row_valid, h, 0.0)
+        ones = row_valid.astype(jnp.int32)
+    subtract = parent_hist is not None and n_nodes > 1
+    if subtract:
+        cnt = jax.lax.psum(
+            jnp.zeros((n_nodes,), jnp.int32).at[node].add(ones), axis_name)
+        small_is_left = cnt[0::2] <= cnt[1::2]
+        n_half = n_nodes // 2
+        is_small = jnp.stack(
+            [small_is_left, ~small_is_left], axis=1).reshape(-1)[node]
+        if row_valid is not None:
+            is_small = is_small & row_valid
+        snode = jnp.where(is_small, node // 2, n_half)  # n_half = dump slot
+        small = jax.lax.psum(
+            _histogram_scatter(bins, gv, hv, snode, n_half, n_bins), axis_name)
+        big = parent_hist - small
+        silb = small_is_left[:, None, None, None]
+        hist = jnp.stack(
+            [jnp.where(silb, small, big), jnp.where(silb, big, small)], axis=1,
+        ).reshape(n_nodes, bins.shape[1], n_bins, 2)
+    else:
+        hist = jax.lax.psum(
+            _histogram_scatter(bins, gv, hv, node, n_nodes, n_bins), axis_name)
+    bg, bf, bs = _ref.split_scan_ref(
+        hist, lam=lam, min_child_weight=min_child_weight, n_bins=n_bins,
+        bin_limit=bin_limit, feat_mask=feat_mask)
+    return (hist if return_hist else None), bg, bf, bs
+
+
 def level_split(
     bins, g, h, node, *, n_nodes, n_bins, lam, min_child_weight,
     bin_limit=None, feat_mask=None, parent_hist=None, return_hist=True,
-    force=None,
+    force=None, axis_name=None, row_valid=None,
 ):
     """One GBDT tree level: histogram build + best-split scan.
     See ``level_split_ref``; returns ``(hist, best_gain, best_feat,
@@ -167,7 +219,19 @@ def level_split(
     reproduces those decisions (see DESIGN.md §3.8 for the exactness
     argument). ``force`` matches ``ops`` conventions and is threaded by
     ``build_tree`` so tests can pin a backend end to end.
+
+    With ``axis_name`` the call runs in a per-shard SPMD view (row-sharded
+    data plane, DESIGN.md §3.9): inputs are one shard's row block,
+    ``row_valid`` masks pad rows, per-shard partial histograms are combined
+    with one ``psum`` and the scan runs on the global histogram — the
+    returned decisions (and ``hist``) are shard-invariant.
     """
+    if axis_name is not None:
+        return _sharded_level_split(
+            bins, g, h, node, n_nodes=n_nodes, n_bins=n_bins, lam=lam,
+            min_child_weight=min_child_weight, axis_name=axis_name,
+            row_valid=row_valid, bin_limit=bin_limit, feat_mask=feat_mask,
+            parent_hist=parent_hist, return_hist=return_hist)
     if force == "ref":
         hist, bg, bf, bs = _ref.level_split_ref(
             bins, g, h, node, n_nodes, n_bins, lam=lam,

@@ -111,6 +111,7 @@ def run_tabular(args) -> int:
         max_fuse=args.max_fuse,
         max_task_retries=args.max_task_retries,
         deadline_factor=args.deadline_factor,
+        n_shards=args.shards,
     )
     print(f"search space: {spec.n_grid_tasks} configurations over "
           f"{[s.estimator for s in spec.spaces]}")
@@ -170,9 +171,14 @@ def run_tabular(args) -> int:
     evald = (f" eval={st.eval_seconds_total:.2f}s"
              f" predict_cache={st.predict_compile_cache_hits}h/"
              f"{st.predict_compile_cache_misses}m")
+    sharded = ""
+    if spec.n_shards > 1:
+        sharded = (f" shards={spec.n_shards}"
+                   f" shard_residency={st.shard_residency_bytes}B")
     print(f"policy={args.policy} total={time.perf_counter() - t0:.1f}s "
           f"profiling_ratio={st.profiling_ratio:.1%} "
-          f"failures={st.n_failures}{stopped}{feedback}{fused}{prepared}{evald}")
+          f"failures={st.n_failures}{stopped}{feedback}{fused}{prepared}"
+          f"{evald}{sharded}")
     print(f"best: {best.task.key()}  valid {args.metric}={best.score:.4f} "
           f"test {args.metric}={test_score:.4f} "
           f"(train {best.train_seconds:.2f}s + conv {best.convert_seconds:.2f}s "
@@ -269,6 +275,12 @@ def main() -> int:
                         "that train as one device program (DESIGN.md §3.2)")
     p.add_argument("--max-fuse", type=int, default=16, metavar="N",
                    help="largest fused batch (configs per program, default 16)")
+    p.add_argument("--shards", type=int, default=1, metavar="N",
+                   help="row-shard the prepared data N ways (DESIGN.md "
+                        "§3.9): per-shard GBDT histograms combined with "
+                        "one psum, data-parallel grads for logreg/mlp, "
+                        "partial-sum eval — per-device residency drops to "
+                        "~1/N of a full copy (default 1 = replicated)")
     p.add_argument("--max-task-retries", type=int, default=0, metavar="N",
                    help="re-run a task whose train raises up to N times "
                         "(capped exponential backoff) before it surfaces "

@@ -50,7 +50,12 @@ import time
 from typing import Iterator, Mapping
 
 from repro.core.cost_model import CostModel
-from repro.core.data_format import DenseMatrix, PreparedDataCache, prepared_data_cache
+from repro.core.data_format import (
+    DenseMatrix,
+    PreparedDataCache,
+    ShardedPlacement,
+    prepared_data_cache,
+)
 from repro.core.evaluation import EvalPlan, predict_compile_cache
 # private executor helpers on purpose: the service's workers must execute
 # units with EXACTLY the pools' semantics (amortized fused accounting,
@@ -132,9 +137,18 @@ class _TenantBackend:
         self.prepared_cache = service.prepared_cache
         self.on_result = None
         self._stragglers: list[TaskResult] = []
+        #: §3.9: a sharded session's units resolve prepared data under a
+        #: ShardedPlacement token (tag=None, so same-shard-count sessions
+        #: SHARE the per-shard entry) while replicated sessions keep the
+        #: default-device entry — the two coexist in the one governed cache,
+        #: each under its own key with its own byte accounting
+        self.placement = (ShardedPlacement(ctx.n_shards)
+                          if ctx.n_shards > 1 else None)
 
     def prepare_placements(self) -> list:
-        return [None]      # shared workers share the default device placement
+        # shared workers share one placement per session: the default
+        # device, or the session's sharded token (§3.9)
+        return [self.placement]
 
     def submit(self, assignment, data, validate: EvalPlan | None = None,
                ) -> Iterator[TaskResult]:
@@ -192,6 +206,7 @@ class _SessionCtx:
                                  retry_backoff=spec.retry_backoff,
                                  poison_threshold=spec.poison_threshold,
                                  sleep=service._sleep)
+        self.n_shards = spec.n_shards
         self.backend = _TenantBackend(service, self)
         self.session = Session(spec, backend=self.backend)
         self.state = "queued"          # queued -> active -> done | cancelled
@@ -738,6 +753,7 @@ class SearchService:
             else:
                 results = _run_fused_unit(sub, ticket.data, wid,
                                           cache=self.prepared_cache,
+                                          placement=ticket.ctx.backend.placement,
                                           validate=ticket.validate)
         else:
             if wal.is_done(task.task_id):
@@ -755,9 +771,11 @@ class SearchService:
                 # _train_solo dispatches RungTasks through the resumable
                 # path (§3.6), so adaptive tenants get warm rungs too
                 est, model, secs, conv, rstate = _train_solo(
-                    task, ticket.data, cache=self.prepared_cache)
+                    task, ticket.data, cache=self.prepared_cache,
+                    placement=ticket.ctx.backend.placement)
                 score, eval_s = _score_solo(est, model, ticket.validate,
-                                            self.prepared_cache)
+                                            self.prepared_cache,
+                                            placement=ticket.ctx.backend.placement)
                 results = [TaskResult(task=task, model=model,
                                       train_seconds=secs, executor_id=wid,
                                       convert_seconds=conv, score=score,

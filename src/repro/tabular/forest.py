@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.data_format import is_sharded_payload
 from repro.core.interface import (
     Estimator,
     ResumeState,
@@ -105,6 +106,112 @@ _resume_forest = functools.partial(
 )(_resume_forest_core)
 
 
+# --------------------------------------------------------------------------
+# Sharded data plane (DESIGN.md §3.9): row-sharded forest fits.
+#
+# Bit-exactness note: every shard draws the bootstrap weights over the FULL
+# unsharded (n_rows,) shape from the same per-tree key — the jax PRNG gives
+# no prefix-stability guarantee across shapes, so drawing (rows_per_shard,)
+# locally would sample DIFFERENT weights than the single-device run. Each
+# shard then slices its own block by ``axis_index``. With integer-valued
+# g = −y·w and h = w the per-level histogram psums are exact integer sums in
+# f32, so sharded split decisions AND leaf values are bit-identical to the
+# single-device forest (unlike gbdt, where leaf sums can differ in ulps).
+# --------------------------------------------------------------------------
+
+_SHARD_AXIS = "shards"
+
+
+def _sharded_forest_trees(
+    b, yy, vv, keys, min_samples_leaf, depth_limit,
+    *, n_bins: int, max_depth: int, max_features: int, n_rows: int,
+    n_shards: int, subtract: bool, force,
+):
+    """Per-shard tree scan shared by the sharded fit and resume cores; runs
+    under ``sharded_call`` (vmap-with-axis-name or shard_map)."""
+    r_local, f = b.shape
+
+    def one_tree(_, tree_key):
+        kb, kf = jax.random.split(tree_key)
+        w_full = jax.random.poisson(kb, 1.0, (n_rows,)).astype(jnp.float32)
+        w_pad = jnp.pad(w_full, (0, n_shards * r_local - n_rows))
+        s = jax.lax.axis_index(_SHARD_AXIS)
+        w = jax.lax.dynamic_slice(w_pad, (s * r_local,), (r_local,))
+        perm = jax.random.permutation(kf, f)
+        feat_mask = jnp.zeros((f,), bool).at[perm[:max_features]].set(True)
+        g = -yy * w
+        h = w
+        feat, split, leaf_g, leaf_h = build_tree(
+            b, g, h, n_bins=n_bins, max_depth=max_depth,
+            lam=1e-6, gamma=0.0, min_child_weight=min_samples_leaf,
+            feat_mask=feat_mask, depth_limit=depth_limit,
+            subtract=subtract, force=force,
+            axis_name=_SHARD_AXIS, row_valid=vv,
+        )
+        leaf_value = -leaf_g / jnp.maximum(leaf_h, 1e-6)   # = weighted mean(y)
+        return None, (feat, split, leaf_value)
+
+    _, trees = jax.lax.scan(one_tree, None, keys)
+    return trees
+
+
+def _fit_forest_sharded_core(
+    bins, y, valid, key, min_samples_leaf, depth_limit,
+    *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
+    n_rows: int, n_shards: int, subtract: bool = True, force=None,
+):
+    from repro import compat
+
+    def per_shard(b, yy, vv):
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_trees))
+        return _sharded_forest_trees(
+            b, yy, vv, keys, min_samples_leaf, depth_limit,
+            n_bins=n_bins, max_depth=max_depth, max_features=max_features,
+            n_rows=n_rows, n_shards=n_shards, subtract=subtract, force=force)
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(bins, y, valid)
+
+
+def _resume_forest_sharded_core(
+    bins, y, valid, key, min_samples_leaf, depth_limit, start,
+    *, n_bins: int, n_trees: int, max_depth: int, max_features: int,
+    n_rows: int, n_shards: int, subtract: bool = True, force=None,
+):
+    from repro import compat
+
+    def per_shard(b, yy, vv):
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, start + i))(
+            jnp.arange(n_trees))
+        return _sharded_forest_trees(
+            b, yy, vv, keys, min_samples_leaf, depth_limit,
+            n_bins=n_bins, max_depth=max_depth, max_features=max_features,
+            n_rows=n_rows, n_shards=n_shards, subtract=subtract, force=force)
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(bins, y, valid)
+
+
+_fit_forest_sharded = functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features",
+                              "n_rows", "n_shards", "subtract", "force")
+)(_fit_forest_sharded_core)
+_resume_forest_sharded = functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_trees", "max_depth", "max_features",
+                              "n_rows", "n_shards", "subtract", "force")
+)(_resume_forest_sharded_core)
+
+
+def _build_batched_sharded_fit(n_bins: int, n_trees: int, max_depth: int,
+                               max_features: int, n_rows: int, n_shards: int,
+                               subtract: bool = True, force=None):
+    core = functools.partial(
+        _fit_forest_sharded_core, n_bins=n_bins, n_trees=n_trees,
+        max_depth=max_depth, max_features=max_features,
+        n_rows=n_rows, n_shards=n_shards, subtract=subtract, force=force)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, None, 0, 0, 0)))
+
+
 def _build_batched_fit(n_bins: int, n_trees: int, max_depth: int, max_features: int,
                        subtract: bool = True, force=None):
     core = functools.partial(
@@ -179,14 +286,24 @@ class ForestEstimator(Estimator):
         p = {**self.default_params(), **params}
         bins, edges = data["bins"], data["edges"]
         n_bins = int(data["n_bins"])
-        f = bins.shape[1]
+        f = bins.shape[-1]
         max_depth = int(p["max_depth"])
-        feat, split, leaves = _fit_forest(
-            bins, data["y"], jax.random.key(int(p["seed"])),
-            jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
-            n_bins=n_bins, n_trees=int(p["n_estimators"]), max_depth=max_depth,
-            max_features=max(1, int(np.sqrt(f))),
-        )
+        if is_sharded_payload(data):
+            feat, split, leaves = _fit_forest_sharded(
+                bins, data["y"], data["_shard_valid"],
+                jax.random.key(int(p["seed"])),
+                jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
+                n_bins=n_bins, n_trees=int(p["n_estimators"]),
+                max_depth=max_depth, max_features=max(1, int(np.sqrt(f))),
+                n_rows=int(data["_n_rows"]), n_shards=int(data["_n_shards"]),
+            )
+        else:
+            feat, split, leaves = _fit_forest(
+                bins, data["y"], jax.random.key(int(p["seed"])),
+                jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
+                n_bins=n_bins, n_trees=int(p["n_estimators"]), max_depth=max_depth,
+                max_features=max(1, int(np.sqrt(f))),
+            )
         feat_np, split_np = np.asarray(feat), np.asarray(split)
         thresh = self._thresholds(feat_np, split_np, np.asarray(edges))
         return ForestModel(feat_np, thresh, leaves, max_depth)
@@ -196,7 +313,7 @@ class ForestEstimator(Estimator):
                         budget: int, state: ResumeState | None = None):
         p = {**self.default_params(), **params}
         bins, edges = data["bins"], data["edges"]
-        f = bins.shape[1]
+        f = bins.shape[-1]
         max_depth = int(p["max_depth"])
         target = int(budget)
         if state is None:
@@ -210,13 +327,24 @@ class ForestEstimator(Estimator):
             pl = state.payload
             prev_feat, prev_thresh, prev_leaves = pl["feat"], pl["thresh"], pl["leaves"]
         if target > start:
-            feat, split, leaves = _resume_forest(
-                bins, data["y"], jax.random.key(int(p["seed"])),
-                jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
-                jnp.int32(start),
-                n_bins=int(data["n_bins"]), n_trees=target - start,
-                max_depth=max_depth, max_features=max(1, int(np.sqrt(f))),
-            )
+            if is_sharded_payload(data):
+                feat, split, leaves = _resume_forest_sharded(
+                    bins, data["y"], data["_shard_valid"],
+                    jax.random.key(int(p["seed"])),
+                    jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
+                    jnp.int32(start),
+                    n_bins=int(data["n_bins"]), n_trees=target - start,
+                    max_depth=max_depth, max_features=max(1, int(np.sqrt(f))),
+                    n_rows=int(data["_n_rows"]), n_shards=int(data["_n_shards"]),
+                )
+            else:
+                feat, split, leaves = _resume_forest(
+                    bins, data["y"], jax.random.key(int(p["seed"])),
+                    jnp.float32(p["min_samples_leaf"]), jnp.int32(max_depth),
+                    jnp.int32(start),
+                    n_bins=int(data["n_bins"]), n_trees=target - start,
+                    max_depth=max_depth, max_features=max(1, int(np.sqrt(f))),
+                )
             feat_np, split_np = np.asarray(feat), np.asarray(split)
             thresh = self._thresholds(feat_np, split_np, np.asarray(edges))
             prev_feat = np.concatenate([prev_feat, feat_np])
@@ -246,20 +374,31 @@ class ForestEstimator(Estimator):
         ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
         bins, edges = data["bins"], data["edges"]
         n_bins = int(data["n_bins"])
-        f = bins.shape[1]
+        f = bins.shape[-1]
         max_features = max(1, int(np.sqrt(f)))
         pad_trees = fusion.pad_pow2(max(int(p["n_estimators"]) for p in ps))
         pad_depth = max(int(p["max_depth"]) for p in ps)
         cc = cache if cache is not None else fusion.compile_cache()
-        fit = cc.get(
-            ("forest", n_bins, pad_trees, pad_depth, max_features,
-             len(ps), tuple(bins.shape)),
-            lambda: _build_batched_fit(n_bins, pad_trees, pad_depth, max_features),
-        )
+        if is_sharded_payload(data):
+            n_rows, n_shards = int(data["_n_rows"]), int(data["_n_shards"])
+            fit = cc.get(
+                ("forest", n_bins, pad_trees, pad_depth, max_features,
+                 len(ps), tuple(bins.shape), n_shards),
+                lambda: _build_batched_sharded_fit(
+                    n_bins, pad_trees, pad_depth, max_features, n_rows, n_shards),
+            )
+            shared = (bins, data["y"], data["_shard_valid"])
+        else:
+            fit = cc.get(
+                ("forest", n_bins, pad_trees, pad_depth, max_features,
+                 len(ps), tuple(bins.shape)),
+                lambda: _build_batched_fit(n_bins, pad_trees, pad_depth, max_features),
+            )
+            shared = (bins, data["y"])
         keys = jax.vmap(jax.random.key)(
             jnp.asarray([int(p["seed"]) for p in ps], jnp.uint32))
         feat, split, leaves = fit(
-            bins, data["y"], keys,
+            *shared, keys,
             jnp.asarray([float(p["min_samples_leaf"]) for p in ps], jnp.float32),
             jnp.asarray([int(p["max_depth"]) for p in ps], jnp.int32),
         )

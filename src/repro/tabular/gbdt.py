@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.data_format import is_sharded_payload
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import (
     Estimator,
@@ -58,6 +59,8 @@ def build_tree(
     bin_limit=None,              # traced int: valid splits are < bin_limit - 1
     subtract: bool = True,       # histogram subtraction (DESIGN.md §3.8)
     force=None,                  # ops dispatch override, threaded to the kernel
+    axis_name=None,              # SPMD shard axis (row-sharded data, §3.9)
+    row_valid=None,              # (R,) bool — False on sharded pad rows
 ):
     """Grow one level-wise tree; returns (feat, split_bin, leaf_g, leaf_h).
 
@@ -92,7 +95,8 @@ def build_tree(
             lam=lam, min_child_weight=min_child_weight,
             bin_limit=bin_limit, feat_mask=feat_mask,
             parent_hist=parent if subtract else None,
-            return_hist=keep_hist, force=force)
+            return_hist=keep_hist, force=force,
+            axis_name=axis_name, row_valid=row_valid)
         is_leaf = best_gain <= gamma
         if depth_limit is not None:
             is_leaf = is_leaf | (level >= depth_limit)
@@ -103,8 +107,15 @@ def build_tree(
         row_bin = jnp.take_along_axis(bins, feat[node][:, None], axis=1)[:, 0]
         node = 2 * node + (row_bin > split[node]).astype(jnp.int32)
     n_leaves = 1 << max_depth
+    if row_valid is not None:
+        g = jnp.where(row_valid, g, 0.0)
+        h = jnp.where(row_valid, h, 0.0)
     leaf_g = jnp.zeros((n_leaves,), jnp.float32).at[node].add(g)
     leaf_h = jnp.zeros((n_leaves,), jnp.float32).at[node].add(h)
+    if axis_name is not None:
+        # per-shard leaf sums → global: leaf values become shard-invariant
+        leaf_g = jax.lax.psum(leaf_g, axis_name)
+        leaf_h = jax.lax.psum(leaf_h, axis_name)
     return jnp.concatenate(feats), jnp.concatenate(splits), leaf_g, leaf_h
 
 
@@ -206,7 +217,7 @@ def batched_tree_margins(models, x, *, cache=None) -> np.ndarray:
 def _fit_gbdt_core(
     bins, y, base, factor, bin_limit, n_rounds, depth_limit,
     eta, lam, gamma, min_child_weight, *, n_bins: int, rounds: int, max_depth: int,
-    subtract: bool = True, force=None,
+    subtract: bool = True, force=None, axis_name=None, row_valid=None,
 ):
     """One GBDT fit over PADDED maxima (rounds/max_depth/n_bins static).
 
@@ -230,6 +241,7 @@ def _fit_gbdt_core(
             lam=lam, gamma=gamma, min_child_weight=min_child_weight,
             depth_limit=depth_limit, bin_limit=bin_limit,
             subtract=subtract, force=force,
+            axis_name=axis_name, row_valid=row_valid,
         )
         # where (not multiply): an empty padded leaf is 0/(0+λ), which for
         # λ=0 is NaN and would poison the margin through a plain mask
@@ -252,7 +264,7 @@ def _resume_gbdt_core(
     bins, y, margin0, factor, bin_limit, n_rounds, depth_limit,
     eta, lam, gamma, min_child_weight, start,
     *, n_bins: int, rounds: int, max_depth: int,
-    subtract: bool = True, force=None,
+    subtract: bool = True, force=None, axis_name=None, row_valid=None,
 ):
     """Boost ``rounds`` MORE trees on top of a carried margin — the rung
     machinery (DESIGN.md §3.6). Round indices continue from ``start`` and the
@@ -272,6 +284,7 @@ def _resume_gbdt_core(
             lam=lam, gamma=gamma, min_child_weight=min_child_weight,
             depth_limit=depth_limit, bin_limit=bin_limit,
             subtract=subtract, force=force,
+            axis_name=axis_name, row_valid=row_valid,
         )
         leaf_value = jnp.where(
             r_idx < n_rounds, -eta * leaf_g / (leaf_h + lam), 0.0)
@@ -285,6 +298,88 @@ def _resume_gbdt_core(
 _resume_gbdt = functools.partial(
     jax.jit, static_argnames=("n_bins", "rounds", "max_depth", "subtract", "force")
 )(_resume_gbdt_core)
+
+
+# --------------------------------------------------------------------------
+# Sharded data plane (DESIGN.md §3.9): row-sharded fits.
+#
+# Inputs arrive block-stacked — bins (S, Rs, F), y (S, Rs), valid (S, Rs) —
+# from ``core.data_format.shard_payload``. Each shard runs the SAME per-round
+# program as the unsharded core over its own rows; the only cross-shard
+# communication is inside ``ops.level_split`` (one histogram psum per level,
+# plus one count psum for the global smaller-child plan) and the leaf-sum
+# psums in ``build_tree``. Tree outputs are shard-invariant; the resume
+# margin stays per-shard (S, Rs) — it IS row-local state.
+# --------------------------------------------------------------------------
+
+_SHARD_AXIS = "shards"
+
+
+def _fit_gbdt_sharded_core(
+    bins, y, valid, base, factor, bin_limit, n_rounds, depth_limit,
+    eta, lam, gamma, min_child_weight,
+    *, n_bins: int, rounds: int, max_depth: int, n_shards: int,
+    subtract: bool = True, force=None,
+):
+    from repro import compat
+
+    def per_shard(b, yy, vv):
+        return _fit_gbdt_core(
+            b, yy, base, factor, bin_limit, n_rounds, depth_limit,
+            eta, lam, gamma, min_child_weight,
+            n_bins=n_bins, rounds=rounds, max_depth=max_depth,
+            subtract=subtract, force=force,
+            axis_name=_SHARD_AXIS, row_valid=vv)
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(bins, y, valid)
+
+
+_fit_gbdt_sharded = functools.partial(
+    jax.jit, static_argnames=(
+        "n_bins", "rounds", "max_depth", "n_shards", "subtract", "force")
+)(_fit_gbdt_sharded_core)
+
+
+def _resume_gbdt_sharded_core(
+    bins, y, valid, margin0, factor, bin_limit, n_rounds, depth_limit,
+    eta, lam, gamma, min_child_weight, start,
+    *, n_bins: int, rounds: int, max_depth: int, n_shards: int,
+    subtract: bool = True, force=None,
+):
+    """Sharded resume: the margin carry is PER-SHARD (S, Rs) — unlike the
+    tree outputs it is row-local, so it rides the virtual vmap lowering
+    directly (tree outputs take shard 0's copy, margins stay stacked)."""
+
+    def per_shard(b, yy, vv, m0):
+        return _resume_gbdt_core(
+            b, yy, m0, factor, bin_limit, n_rounds, depth_limit,
+            eta, lam, gamma, min_child_weight, start,
+            n_bins=n_bins, rounds=rounds, max_depth=max_depth,
+            subtract=subtract, force=force,
+            axis_name=_SHARD_AXIS, row_valid=vv)
+
+    trees, margin = jax.vmap(per_shard, axis_name=_SHARD_AXIS)(
+        bins, y, valid, margin0)
+    return jax.tree.map(lambda t: t[0], trees), margin
+
+
+_resume_gbdt_sharded = functools.partial(
+    jax.jit, static_argnames=(
+        "n_bins", "rounds", "max_depth", "n_shards", "subtract", "force")
+)(_resume_gbdt_sharded_core)
+
+
+def _build_batched_sharded_fit(n_bins: int, rounds: int, max_depth: int,
+                               n_shards: int, subtract: bool = True,
+                               force=None):
+    """Fused batches over sharded data: vmap-over-configs of the sharded
+    core — the shard axis nests INSIDE the config axis, so one compile still
+    serves the whole bucket."""
+    core = functools.partial(
+        _fit_gbdt_sharded_core, n_bins=n_bins, rounds=rounds,
+        max_depth=max_depth, n_shards=n_shards, subtract=subtract, force=force)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, None, None) + (0,) * 8))
 
 
 def _build_batched_fit(n_bins: int, rounds: int, max_depth: int,
@@ -380,6 +475,14 @@ class GBDTEstimator(Estimator):
         return float(np.log(prior / (1 - prior)))
 
     @staticmethod
+    def _sharded_base_margin(data) -> float:
+        # flatten the (S, Rs) blocks and drop the zero tail pad: same values
+        # in the same row order as the unsharded label vector, so the prior
+        # (and hence the base margin) is bit-identical
+        y = np.asarray(data["y"]).reshape(-1)[: int(data["_n_rows"])]
+        return GBDTEstimator._base_margin(y)
+
+    @staticmethod
     def _thresholds(feat_np, split_np, edges_np, factor: int, n_cbins: int):
         # Map split bins to float thresholds: coarse split s → fine edge index
         # (s+1)·factor − 1; sentinel (s ≥ n_cbins−1) or out-of-range → +inf.
@@ -396,15 +499,27 @@ class GBDTEstimator(Estimator):
         bins, edges, y = data["bins"], data["edges"], data["y"]
         factor, n_cbins = self._coarsen(int(data["n_bins"]), int(p["max_bin"]))
         max_depth, rounds = int(p["max_depth"]), int(p["round"])
-        base = self._base_margin(y)
-        feat, split, leaves = _fit_gbdt(
-            bins, y, jnp.float32(base),
-            jnp.int32(factor), jnp.int32(n_cbins),
-            jnp.int32(rounds), jnp.int32(max_depth),
-            jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
-            jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
-            n_bins=n_cbins, rounds=rounds, max_depth=max_depth,
-        )
+        if is_sharded_payload(data):
+            base = self._sharded_base_margin(data)
+            feat, split, leaves = _fit_gbdt_sharded(
+                bins, y, data["_shard_valid"], jnp.float32(base),
+                jnp.int32(factor), jnp.int32(n_cbins),
+                jnp.int32(rounds), jnp.int32(max_depth),
+                jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
+                jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
+                n_bins=n_cbins, rounds=rounds, max_depth=max_depth,
+                n_shards=int(data["_n_shards"]),
+            )
+        else:
+            base = self._base_margin(y)
+            feat, split, leaves = _fit_gbdt(
+                bins, y, jnp.float32(base),
+                jnp.int32(factor), jnp.int32(n_cbins),
+                jnp.int32(rounds), jnp.int32(max_depth),
+                jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
+                jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
+                n_bins=n_cbins, rounds=rounds, max_depth=max_depth,
+            )
         feat_np, split_np = np.asarray(feat), np.asarray(split)
         thresh = self._thresholds(feat_np, split_np, np.asarray(edges), factor, n_cbins)
         return GBDTModel(feat_np, thresh, leaves, base, max_depth)
@@ -416,11 +531,14 @@ class GBDTEstimator(Estimator):
         bins, edges, y = data["bins"], data["edges"], data["y"]
         factor, n_cbins = self._coarsen(int(data["n_bins"]), int(p["max_bin"]))
         max_depth = int(p["max_depth"])
-        base = self._base_margin(y)
+        sharded = is_sharded_payload(data)
+        base = self._sharded_base_margin(data) if sharded else self._base_margin(y)
         target = int(budget)
         if state is None:
             start = 0
-            margin0 = jnp.full((bins.shape[0],), base, jnp.float32)
+            # sharded margins carry per-shard blocks: same (S, Rs) layout
+            # as the labels, so rung-resume keeps rows on their home shard
+            margin0 = jnp.full(np.shape(y), base, jnp.float32)
             n_nodes, n_leaves = (1 << max_depth) - 1, 1 << max_depth
             prev_feat = np.zeros((0, n_nodes), np.int32)
             prev_thresh = np.zeros((0, n_nodes), np.float32)
@@ -431,15 +549,24 @@ class GBDTEstimator(Estimator):
             margin0 = jnp.asarray(pl["margin"], jnp.float32)
             prev_feat, prev_thresh, prev_leaves = pl["feat"], pl["thresh"], pl["leaves"]
         if target > start:
-            (feat, split, leaves), margin = _resume_gbdt(
-                bins, y, margin0,
+            common = (
                 jnp.int32(factor), jnp.int32(n_cbins),
                 jnp.int32(target), jnp.int32(max_depth),
                 jnp.float32(p["eta"]), jnp.float32(p["lambda"]),
                 jnp.float32(p["gamma"]), jnp.float32(p["min_child_weight"]),
                 jnp.int32(start),
-                n_bins=n_cbins, rounds=target - start, max_depth=max_depth,
             )
+            if sharded:
+                (feat, split, leaves), margin = _resume_gbdt_sharded(
+                    bins, y, data["_shard_valid"], margin0, *common,
+                    n_bins=n_cbins, rounds=target - start, max_depth=max_depth,
+                    n_shards=int(data["_n_shards"]),
+                )
+            else:
+                (feat, split, leaves), margin = _resume_gbdt(
+                    bins, y, margin0, *common,
+                    n_bins=n_cbins, rounds=target - start, max_depth=max_depth,
+                )
             feat_np, split_np = np.asarray(feat), np.asarray(split)
             thresh = self._thresholds(feat_np, split_np, np.asarray(edges),
                                       factor, n_cbins)
@@ -483,15 +610,27 @@ class GBDTEstimator(Estimator):
         pad_bins = max(nc for _, nc in coarse)
         pad_rounds = fusion.pad_pow2(max(int(p["round"]) for p in ps))
         pad_depth = max(int(p["max_depth"]) for p in ps)
-        base = self._base_margin(y)
         cc = cache if cache is not None else fusion.compile_cache()
-        fit = cc.get(
-            ("gbdt", pad_bins, pad_rounds, pad_depth, len(ps), tuple(bins.shape)),
-            lambda: _build_batched_fit(pad_bins, pad_rounds, pad_depth),
-        )
+        if is_sharded_payload(data):
+            n_shards = int(data["_n_shards"])
+            base = self._sharded_base_margin(data)
+            fit = cc.get(
+                ("gbdt", pad_bins, pad_rounds, pad_depth, len(ps),
+                 tuple(bins.shape), n_shards),
+                lambda: _build_batched_sharded_fit(
+                    pad_bins, pad_rounds, pad_depth, n_shards),
+            )
+            shared = (bins, y, data["_shard_valid"], jnp.float32(base))
+        else:
+            base = self._base_margin(y)
+            fit = cc.get(
+                ("gbdt", pad_bins, pad_rounds, pad_depth, len(ps), tuple(bins.shape)),
+                lambda: _build_batched_fit(pad_bins, pad_rounds, pad_depth),
+            )
+            shared = (bins, y, jnp.float32(base))
         col = lambda vals, dt: jnp.asarray(np.asarray(vals, dtype=dt))  # noqa: E731
         feat, split, leaves = fit(
-            bins, y, jnp.float32(base),
+            *shared,
             col([f for f, _ in coarse], np.int32),
             col([nc for _, nc in coarse], np.int32),
             col([int(p["round"]) for p in ps], np.int32),

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.data_format import is_sharded_payload
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import (
     Estimator,
@@ -24,20 +25,39 @@ from repro.core.interface import (
 __all__ = ["LogRegEstimator", "LogRegModel"]
 
 
-def _adam_step(x, y, c, lr, n_steps):
+def _adam_step(x, y, c, lr, n_steps, *, axis_name=None, row_valid=None,
+               n_global=None):
     """The one Adam step both the fresh and the resume scans run. ``i`` is
     the GLOBAL step index (bias correction uses ``t = i + 1``), so a scan
-    started at step k continues the exact sequence a scan from 0 produces."""
-    n = x.shape[0]
+    started at step k continues the exact sequence a scan from 0 produces.
+
+    With ``axis_name`` (sharded data plane, DESIGN.md §3.9) ``x``/``y`` are
+    one shard's rows: the per-shard loss is scaled so the ``psum_tree``
+    MEAN-reduce of per-shard gradients equals the global gradient — the NLL
+    term is ``n_shards · Σ_valid(per_row) / n_global`` (pad rows masked out)
+    and the L2 term, identical on every shard, is divided back by the mean,
+    so regularisation is counted exactly once."""
+    n = x.shape[0] if n_global is None else n_global
 
     def loss_fn(params):
         w, b = params
         logits = x @ w + b
-        nll = jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
         reg = 0.5 / (c * n) * jnp.sum(w * w)
+        if axis_name is None:
+            return jnp.mean(per) + reg
+        n_shards = jax.lax.psum(1, axis_name)
+        nll = n_shards * jnp.sum(jnp.where(row_valid, per, 0.0)) / n
         return nll + reg
 
-    grad_fn = jax.grad(loss_fn)
+    if axis_name is None:
+        grad_fn = jax.grad(loss_fn)
+    else:
+        from repro.distributed.collectives import psum_tree
+
+        def grad_fn(params):
+            return psum_tree(jax.grad(loss_fn)(params), axis_name)
+
     beta1, beta2, eps = 0.9, 0.999, 1e-8
 
     def step(carry, i):
@@ -93,9 +113,64 @@ _fit = functools.partial(jax.jit, static_argnames=("steps",))(_fit_logreg_core)
 _resume_fit = functools.partial(jax.jit, static_argnames=("steps",))(_resume_logreg_core)
 
 
+# --------------------------------------------------------------------------
+# Sharded data plane (DESIGN.md §3.9): data-parallel full-batch Adam. The
+# gradient psum makes every shard's carry identical, so the whole optimizer
+# runs replicated and the outputs are shard-invariant by construction.
+# --------------------------------------------------------------------------
+
+_SHARD_AXIS = "shards"
+
+
+def _fit_logreg_sharded_core(x, y, valid, c, lr, n_steps,
+                             *, steps: int, n_rows: int, n_shards: int):
+    from repro import compat
+
+    def per_shard(xs, ys, vs):
+        d = xs.shape[1]
+        w0 = jnp.zeros((d,), jnp.float32)
+        b0 = jnp.zeros((), jnp.float32)
+        step = _adam_step(xs, ys, c, lr, n_steps, axis_name=_SHARD_AXIS,
+                          row_valid=vs, n_global=n_rows)
+        init = ((w0, b0), (jnp.zeros_like(w0), b0), (jnp.zeros_like(w0), b0))
+        (params, _, _), _ = jax.lax.scan(
+            step, init, jnp.arange(steps, dtype=jnp.float32))
+        return params
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(x, y, valid)
+
+
+def _resume_logreg_sharded_core(x, y, valid, c, lr, n_steps, start, carry,
+                                *, steps: int, n_rows: int, n_shards: int):
+    from repro import compat
+
+    def per_shard(xs, ys, vs):
+        step = _adam_step(xs, ys, c, lr, n_steps, axis_name=_SHARD_AXIS,
+                          row_valid=vs, n_global=n_rows)
+        out, _ = jax.lax.scan(step, carry,
+                              start + jnp.arange(steps, dtype=jnp.float32))
+        return out
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(x, y, valid)
+
+
+_fit_sharded = functools.partial(
+    jax.jit, static_argnames=("steps", "n_rows", "n_shards"))(_fit_logreg_sharded_core)
+_resume_fit_sharded = functools.partial(
+    jax.jit, static_argnames=("steps", "n_rows", "n_shards"))(_resume_logreg_sharded_core)
+
+
 def _build_batched_fit(steps: int):
     core = functools.partial(_fit_logreg_core, steps=steps)
     return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
+
+
+def _build_batched_sharded_fit(steps: int, n_rows: int, n_shards: int):
+    core = functools.partial(_fit_logreg_sharded_core, steps=steps,
+                             n_rows=n_rows, n_shards=n_shards)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, None, 0, 0, 0)))
 
 
 def _build_predict_batched():
@@ -150,8 +225,15 @@ class LogRegEstimator(Estimator):
     def train(self, data, params: Mapping[str, Any]) -> LogRegModel:
         p = {**self.default_params(), **params}
         steps = int(p["steps"])
-        w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]), jnp.float32(p["lr"]),
-                    jnp.float32(steps), steps=steps)
+        if is_sharded_payload(data):
+            w, b = _fit_sharded(
+                data["x"], data["y"], data["_shard_valid"],
+                jnp.float32(p["c"]), jnp.float32(p["lr"]), jnp.float32(steps),
+                steps=steps, n_rows=int(data["_n_rows"]),
+                n_shards=int(data["_n_shards"]))
+        else:
+            w, b = _fit(data["x"], data["y"], jnp.float32(p["c"]),
+                        jnp.float32(p["lr"]), jnp.float32(steps), steps=steps)
         return LogRegModel(np.asarray(w), float(b))
 
     # ---- adaptive search (DESIGN.md §3.6) -------------------------------
@@ -162,7 +244,7 @@ class LogRegEstimator(Estimator):
         target = int(budget)
         if state is None:
             start = 0
-            d = x.shape[1]
+            d = x.shape[-1]
             w0 = np.zeros((d,), np.float32)
             b0 = np.float32(0.0)
             carry = ((w0, b0), (np.zeros_like(w0), b0), (np.zeros_like(w0), b0))
@@ -173,9 +255,16 @@ class LogRegEstimator(Estimator):
                      (pl["vw"], pl["vb"]))
         carry = jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), carry)
         if target > start:
-            carry = _resume_fit(x, data["y"], jnp.float32(p["c"]),
-                                jnp.float32(p["lr"]), jnp.float32(target),
-                                jnp.float32(start), carry, steps=target - start)
+            if is_sharded_payload(data):
+                carry = _resume_fit_sharded(
+                    x, data["y"], data["_shard_valid"], jnp.float32(p["c"]),
+                    jnp.float32(p["lr"]), jnp.float32(target),
+                    jnp.float32(start), carry, steps=target - start,
+                    n_rows=int(data["_n_rows"]), n_shards=int(data["_n_shards"]))
+            else:
+                carry = _resume_fit(x, data["y"], jnp.float32(p["c"]),
+                                    jnp.float32(p["lr"]), jnp.float32(target),
+                                    jnp.float32(start), carry, steps=target - start)
         (w, b), (mw, mb), (vw, vb) = jax.tree_util.tree_map(np.asarray, carry)
         model = LogRegModel(w, float(b))
         new_state = ResumeState(self.name, max(target, start),
@@ -202,12 +291,21 @@ class LogRegEstimator(Estimator):
         x = data["x"]
         pad_steps = fusion.pad_pow2(max(int(p["steps"]) for p in ps))
         cc = cache if cache is not None else fusion.compile_cache()
-        fit = cc.get(
-            ("logreg", pad_steps, len(ps), tuple(x.shape)),
-            lambda: _build_batched_fit(pad_steps),
-        )
+        if is_sharded_payload(data):
+            n_rows, n_shards = int(data["_n_rows"]), int(data["_n_shards"])
+            fit = cc.get(
+                ("logreg", pad_steps, len(ps), tuple(x.shape), n_shards),
+                lambda: _build_batched_sharded_fit(pad_steps, n_rows, n_shards),
+            )
+            shared = (x, data["y"], data["_shard_valid"])
+        else:
+            fit = cc.get(
+                ("logreg", pad_steps, len(ps), tuple(x.shape)),
+                lambda: _build_batched_fit(pad_steps),
+            )
+            shared = (x, data["y"])
         w, b = fit(
-            x, data["y"],
+            *shared,
             jnp.asarray([float(p["c"]) for p in ps], jnp.float32),
             jnp.asarray([float(p["lr"]) for p in ps], jnp.float32),
             jnp.asarray([float(int(p["steps"])) for p in ps], jnp.float32),

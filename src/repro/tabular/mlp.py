@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.data_format import is_sharded_payload
 from repro.core.evaluation import predict_compile_cache, stable_sigmoid
 from repro.core.interface import (
     Estimator,
@@ -42,12 +43,20 @@ def _forward(params, x):
     return h[:, 0]
 
 
-def _mlp_step(x, y, lr, n_steps, batch_size: int):
+def _mlp_step(x, y, lr, n_steps, batch_size: int, *, axis_name=None,
+              n_global=None):
     """The one minibatch-Adam step both the fresh and the resume scans run.
     ``i`` is the GLOBAL step index (bias correction ``t = i + 1``) and the
     PRNG key rides the carry, so a scan started at step k with the carried
-    key draws the exact minibatch sequence a scan from 0 would."""
-    n = x.shape[0]
+    key draws the exact minibatch sequence a scan from 0 would.
+
+    With ``axis_name`` (sharded data plane, DESIGN.md §3.9) ``x``/``y`` are
+    one shard's row block and every shard draws the SAME global minibatch
+    indices (the key is replicated): each shard contributes the examples it
+    OWNS (``idx`` inside its block) via a masked partial sum scaled so the
+    ``psum_tree`` mean-reduce equals the global batch-mean gradient. Indices
+    are < n_global, so pad rows are never drawn."""
+    n = x.shape[0] if n_global is None else n_global
 
     def loss_fn(params, xb, yb):
         logits = _forward(params, xb)
@@ -55,13 +64,29 @@ def _mlp_step(x, y, lr, n_steps, batch_size: int):
             jnp.maximum(logits, 0) - logits * yb + jnp.log1p(jnp.exp(-jnp.abs(logits)))
         )
 
+    def loss_fn_sharded(params, xb, yb, own):
+        logits = _forward(params, xb)
+        per = jnp.maximum(logits, 0) - logits * yb + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        n_shards = jax.lax.psum(1, axis_name)
+        return n_shards * jnp.sum(jnp.where(own, per, 0.0)) / batch_size
+
     beta1, beta2, eps = 0.9, 0.999, 1e-8
 
     def step(carry, i):
         params, (m, v), key = carry
         new_key, k = jax.random.split(key)
         idx = jax.random.randint(k, (batch_size,), 0, n)
-        grads = jax.grad(loss_fn)(params, x[idx], y[idx])
+        if axis_name is None:
+            grads = jax.grad(loss_fn)(params, x[idx], y[idx])
+        else:
+            from repro.distributed.collectives import psum_tree
+
+            r_local = x.shape[0]
+            lo = jax.lax.axis_index(axis_name) * r_local
+            own = (idx >= lo) & (idx < lo + r_local)
+            local = jnp.clip(idx - lo, 0, r_local - 1)
+            grads = jax.grad(loss_fn_sharded)(params, x[local], y[local], own)
+            grads = psum_tree(grads, axis_name)
         t = i + 1.0
         new_params, new_m, new_v = [], [], []
         for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, m, v):
@@ -119,9 +144,70 @@ _resume_fit = functools.partial(
 )(_resume_mlp_core)
 
 
+# --------------------------------------------------------------------------
+# Sharded data plane (DESIGN.md §3.9). The replicated PRNG key + gradient
+# psum keep every shard's carry identical, so init/optimizer/key handling
+# run replicated and the trained params are shard-invariant.
+# --------------------------------------------------------------------------
+
+_SHARD_AXIS = "shards"
+
+
+def _fit_mlp_sharded_core(x, y, key, lr, n_steps, *, dims: tuple[int, ...],
+                          steps: int, batch_size: int, n_rows: int,
+                          n_shards: int):
+    from repro import compat
+
+    def per_shard(xs, ys):
+        params = _init_params(key, dims)
+        opt_state = (
+            [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params],
+            [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params],
+        )
+        step = _mlp_step(xs, ys, lr, n_steps, batch_size,
+                         axis_name=_SHARD_AXIS, n_global=n_rows)
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, opt_state, key), jnp.arange(steps, dtype=jnp.float32))
+        return params
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(x, y)
+
+
+def _resume_mlp_sharded_core(x, y, lr, n_steps, start, carry, *, steps: int,
+                             batch_size: int, n_rows: int, n_shards: int):
+    from repro import compat
+
+    def per_shard(xs, ys):
+        step = _mlp_step(xs, ys, lr, n_steps, batch_size,
+                         axis_name=_SHARD_AXIS, n_global=n_rows)
+        out, _ = jax.lax.scan(step, carry,
+                              start + jnp.arange(steps, dtype=jnp.float32))
+        return out
+
+    return compat.sharded_call(per_shard, n_shards=n_shards,
+                               axis=_SHARD_AXIS)(x, y)
+
+
+_fit_sharded = functools.partial(
+    jax.jit, static_argnames=("dims", "steps", "batch_size", "n_rows", "n_shards")
+)(_fit_mlp_sharded_core)
+_resume_fit_sharded = functools.partial(
+    jax.jit, static_argnames=("steps", "batch_size", "n_rows", "n_shards")
+)(_resume_mlp_sharded_core)
+
+
 def _build_batched_fit(dims: tuple[int, ...], steps: int, batch_size: int):
     core = functools.partial(
         _fit_mlp_core, dims=dims, steps=steps, batch_size=batch_size)
+    return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
+
+
+def _build_batched_sharded_fit(dims: tuple[int, ...], steps: int,
+                               batch_size: int, n_rows: int, n_shards: int):
+    core = functools.partial(
+        _fit_mlp_sharded_core, dims=dims, steps=steps, batch_size=batch_size,
+        n_rows=n_rows, n_shards=n_shards)
     return jax.jit(jax.vmap(core, in_axes=(None, None, 0, 0, 0)))
 
 
@@ -200,13 +286,24 @@ class MLPEstimator(Estimator):
     def train(self, data, params: Mapping[str, Any]) -> MLPModel:
         p = {**self.default_params(), **params}
         x, y = data["x"], data["y"]
-        dims = self._dims(p, int(x.shape[1]))
-        bs = int(min(p["batch_size"], x.shape[0]))
+        dims = self._dims(p, int(x.shape[-1]))
         steps = int(p["steps"])
-        params_out = _fit(
-            x, y, jax.random.key(int(p["seed"])), jnp.float32(p["learning_rate"]),
-            jnp.float32(steps), dims=dims, steps=steps, batch_size=bs,
-        )
+        if is_sharded_payload(data):
+            n_rows, n_shards = int(data["_n_rows"]), int(data["_n_shards"])
+            # batch size caps at the GLOBAL row count, as unsharded
+            bs = int(min(p["batch_size"], n_rows))
+            params_out = _fit_sharded(
+                x, y, jax.random.key(int(p["seed"])),
+                jnp.float32(p["learning_rate"]), jnp.float32(steps),
+                dims=dims, steps=steps, batch_size=bs,
+                n_rows=n_rows, n_shards=n_shards,
+            )
+        else:
+            bs = int(min(p["batch_size"], x.shape[0]))
+            params_out = _fit(
+                x, y, jax.random.key(int(p["seed"])), jnp.float32(p["learning_rate"]),
+                jnp.float32(steps), dims=dims, steps=steps, batch_size=bs,
+            )
         return MLPModel(params_out)
 
     # ---- adaptive search (DESIGN.md §3.6) -------------------------------
@@ -214,11 +311,13 @@ class MLPEstimator(Estimator):
                         budget: int, state: ResumeState | None = None):
         p = {**self.default_params(), **params}
         x, y = data["x"], data["y"]
-        bs = int(min(p["batch_size"], x.shape[0]))
+        sharded = is_sharded_payload(data)
+        n_global = int(data["_n_rows"]) if sharded else int(x.shape[0])
+        bs = int(min(p["batch_size"], n_global))
         target = int(budget)
         if state is None:
             start = 0
-            dims = self._dims(p, int(x.shape[1]))
+            dims = self._dims(p, int(x.shape[-1]))
             key = jax.random.key(int(p["seed"]))
             net = _init_params(key, dims)
             m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in net]
@@ -236,9 +335,16 @@ class MLPEstimator(Estimator):
             key = jax.random.wrap_key_data(jnp.asarray(pl["key"]))
             carry = (net, (m, v), key)
         if target > start:
-            carry = _resume_fit(x, y, jnp.float32(p["learning_rate"]),
-                                jnp.float32(target), jnp.float32(start), carry,
-                                steps=target - start, batch_size=bs)
+            if sharded:
+                carry = _resume_fit_sharded(
+                    x, y, jnp.float32(p["learning_rate"]),
+                    jnp.float32(target), jnp.float32(start), carry,
+                    steps=target - start, batch_size=bs,
+                    n_rows=n_global, n_shards=int(data["_n_shards"]))
+            else:
+                carry = _resume_fit(x, y, jnp.float32(p["learning_rate"]),
+                                    jnp.float32(target), jnp.float32(start), carry,
+                                    steps=target - start, batch_size=bs)
         net, (m, v), key = carry
         model = MLPModel(net)
         payload: dict[str, Any] = {"n_layers": len(net),
@@ -269,17 +375,27 @@ class MLPEstimator(Estimator):
         ps = [{**self.default_params(), **c} for c in configs]
         ps, n_real = fusion.pad_configs(ps)   # pow-2 batch axis, see fusion
         x, y = data["x"], data["y"]
-        dims = self._dims(ps[0], int(x.shape[1]))
-        bs = int(min(ps[0]["batch_size"], x.shape[0]))
-        if any(self._dims(p, int(x.shape[1])) != dims
-               or int(min(p["batch_size"], x.shape[0])) != bs for p in ps):
+        sharded = is_sharded_payload(data)
+        n_global = int(data["_n_rows"]) if sharded else int(x.shape[0])
+        dims = self._dims(ps[0], int(x.shape[-1]))
+        bs = int(min(ps[0]["batch_size"], n_global))
+        if any(self._dims(p, int(x.shape[-1])) != dims
+               or int(min(p["batch_size"], n_global)) != bs for p in ps):
             raise ValueError("mlp fused batch mixes architectures/batch sizes")
         pad_steps = fusion.pad_pow2(max(int(p["steps"]) for p in ps))
         cc = cache if cache is not None else fusion.compile_cache()
-        fit = cc.get(
-            ("mlp", dims, pad_steps, bs, len(ps), tuple(x.shape)),
-            lambda: _build_batched_fit(dims, pad_steps, bs),
-        )
+        if sharded:
+            n_shards = int(data["_n_shards"])
+            fit = cc.get(
+                ("mlp", dims, pad_steps, bs, len(ps), tuple(x.shape), n_shards),
+                lambda: _build_batched_sharded_fit(
+                    dims, pad_steps, bs, n_global, n_shards),
+            )
+        else:
+            fit = cc.get(
+                ("mlp", dims, pad_steps, bs, len(ps), tuple(x.shape)),
+                lambda: _build_batched_fit(dims, pad_steps, bs),
+            )
         keys = jax.vmap(jax.random.key)(
             jnp.asarray([int(p["seed"]) for p in ps], jnp.uint32))
         params_out = fit(
